@@ -1,0 +1,66 @@
+"""Figure 1 reproduction: effectiveness/efficiency frontier vs nprobe.
+
+Sweeps np over powers of two for IVF, TopLoc_IVF and TopLoc_IVF+ on both
+conversation sets — NDCG@10 vs per-turn time and vs distance
+computations (the paper varies np exactly this way).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import toploc as TL
+from benchmarks import common as C
+
+NPROBES = (4, 8, 16, 32, 64)
+H_FACTOR = 16         # h = 16·np (np/h ≈ 6%, paper-regime grid point)
+ALPHA = 0.25
+K = 10
+
+
+def sweep(kind: str, csv: bool = True) -> List[Dict]:
+    wl = C.workload(kind)
+    index = C.ivf_index(kind)
+    convs = jnp.asarray(wl.conversations)
+    n_conv, turns, _ = convs.shape
+    rows = []
+    for npb in NPROBES:
+        h = min(H_FACTOR * npb, index.p)
+        for method, mode, alpha in (
+                ("IVF", "plain", -1.0),
+                ("TopLoc_IVF", "toploc", -1.0),
+                ("TopLoc_IVF+", "toploc", ALPHA)):
+            def all_convs(cs, mode=mode, alpha=alpha, npb=npb, h=h):
+                return jax.vmap(lambda conv: TL.ivf_conversation(
+                    index, conv, h=h, nprobe=npb, k=K, alpha=alpha,
+                    mode=mode))(cs)
+
+            fn = jax.jit(all_convs)
+            _, ids, stats = fn(convs)
+            jax.block_until_ready(ids)
+            wall = C.time_fn(fn, convs, repeat=2)
+            metrics = C.eval_conversations(np.asarray(ids), wl)
+            work = float((np.asarray(stats.centroid_dists)
+                          + np.asarray(stats.list_dists)).mean())
+            row = dict(dataset=kind, method=method, nprobe=npb, h=h,
+                       ndcg10=metrics["ndcg@10"], mrr10=metrics["mrr@10"],
+                       ms_per_turn=1e3 * wall / (n_conv * turns),
+                       work=work)
+            rows.append(row)
+            if csv:
+                print(f"fig1,{kind},{method},{npb},{row['ndcg10']:.3f},"
+                      f"{row['ms_per_turn']:.3f},{work:.0f}")
+    return rows
+
+
+def main():
+    print("fig,dataset,method,nprobe,ndcg@10,ms_per_turn,work_dists")
+    for kind in ("cast19", "cast20"):
+        sweep(kind)
+
+
+if __name__ == "__main__":
+    main()

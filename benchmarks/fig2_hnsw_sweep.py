@@ -1,0 +1,60 @@
+"""Figure 2 reproduction: effectiveness/efficiency frontier vs ef_search
+for HNSW vs TopLoc_HNSW on both conversation sets."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import toploc as TL
+from benchmarks import common as C
+
+EFS = (4, 8, 16, 32, 64)
+UP = 2
+K = 10
+
+
+def sweep(kind: str, csv: bool = True) -> List[Dict]:
+    wl = C.workload(kind)
+    index = C.hnsw_index(kind)
+    convs = jnp.asarray(wl.conversations)
+    n_conv, turns, _ = convs.shape
+    rows = []
+    for ef in EFS:
+        k = min(K, ef)
+        for method, mode in (("HNSW", "plain"), ("TopLoc_HNSW", "toploc"),
+                             ("TopLoc_HNSW_adaptive", "adaptive")):
+            def all_convs(cs, mode=mode, ef=ef, k=k):
+                return jax.vmap(lambda conv: TL.hnsw_conversation(
+                    index, conv, ef=ef, k=k, up=UP, mode=mode))(cs)
+
+            fn = jax.jit(all_convs)
+            _, ids, stats = fn(convs)
+            jax.block_until_ready(ids)
+            wall = C.time_fn(fn, convs, repeat=2)
+            pad = np.full((n_conv, turns, K - k), -1, np.int64)
+            run_ids = np.concatenate([np.asarray(ids), pad], -1) \
+                if k < K else np.asarray(ids)
+            metrics = C.eval_conversations(run_ids, wl)
+            work = float(np.asarray(stats.graph_dists).mean())
+            row = dict(dataset=kind, method=method, ef=ef,
+                       ndcg10=metrics["ndcg@10"], mrr10=metrics["mrr@10"],
+                       ms_per_turn=1e3 * wall / (n_conv * turns),
+                       work=work)
+            rows.append(row)
+            if csv:
+                print(f"fig2,{kind},{method},{ef},{row['ndcg10']:.3f},"
+                      f"{row['ms_per_turn']:.3f},{work:.0f}")
+    return rows
+
+
+def main():
+    print("fig,dataset,method,ef_search,ndcg@10,ms_per_turn,work_dists")
+    for kind in ("cast19", "cast20"):
+        sweep(kind)
+
+
+if __name__ == "__main__":
+    main()

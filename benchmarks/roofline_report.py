@@ -1,0 +1,70 @@
+"""Render the §Roofline table from the dry-run log (artifacts/dryrun.jsonl).
+
+Per (arch × shape × mesh): the three roofline terms in seconds, dominant
+bottleneck, per-device memory fit, MODEL_FLOPS ratio, and a one-line
+what-would-move-it note derived from the dominant term.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+MOVE_NOTES = {
+    "compute": ("compute-bound: only faster matmul units / lower "
+                "precision move this; already the roofline goal"),
+    "memory": ("memory-bound: raise arithmetic intensity — fuse "
+               "elementwise chains (TPU compile does), larger tiles, "
+               "fewer remat recomputes, bf16 activations"),
+    "collective": ("collective-bound: reshard to cut the largest "
+                   "collective, overlap with compute, or compress "
+                   "payloads (int8 grads)"),
+}
+
+
+def load(path: str) -> List[Dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    # keep last record per (arch, shape, mesh)
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r.get("mesh", "-"))] = r
+    return list(dedup.values())
+
+
+def render(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | compute s | memory s | coll s | "
+           "dominant | peak GB/dev | MODEL/HLO | note |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("mesh", "-"))):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                       f"SKIP | - | - | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | "
+                       f"- | - | ERROR | - | - | {r['error'][:60]} |")
+            continue
+        c, roof = r["cost"], r["roofline"]
+        peak = c["peak_memory"] / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {roof['compute_s']:.3e} | {roof['memory_s']:.3e} "
+            f"| {roof['collective_s']:.3e} | {roof['dominant']} "
+            f"| {peak:.2f} | {roof['model_flops_ratio']:.3f} "
+            f"| {MOVE_NOTES[roof['dominant']][:48]} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--log", default="artifacts/dryrun.jsonl")
+    args = ap.parse_args()
+    print(render(load(args.log)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Benchmark entry point: one harness per paper table/figure + kernel
+micro-benchmarks. Prints ``name,us_per_call,derived`` CSV per the
+repository contract, then the detailed per-table CSVs.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only table1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def bench_kernels() -> None:
+    """Kernel micro-benchmarks (jnp ref path timing on CPU; the Pallas
+    kernels themselves are TPU-target and validated via interpret)."""
+    from repro.kernels import ops, ref
+    from benchmarks.common import time_fn
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(4096, 64)).astype(np.float32))
+    f = jax.jit(lambda q, c: ref.centroid_topk(q, c, 64))
+    t = time_fn(f, q, c)
+    print(f"kernel.centroid_topk_ref,{1e6*t:.1f},p=4096 d=64 b=16")
+
+    lv = jnp.asarray(rng.normal(size=(128, 256, 64)).astype(np.float32))
+    li = jnp.asarray(rng.integers(0, 10**6, (128, 256)).astype(np.int32))
+    sel = jnp.asarray(np.stack([rng.permutation(128)[:16]
+                                for _ in range(16)]).astype(np.int32))
+    f = jax.jit(lambda q, s: ref.ivf_scan_batch(q, lv, li, s, 10))
+    t = time_fn(f, q, sel)
+    print(f"kernel.ivf_scan_ref,{1e6*t:.1f},np=16 Lmax=256 b=16")
+
+    qa = jnp.asarray(rng.normal(size=(2, 8, 1024, 64)).astype(np.float32))
+    ka = jnp.asarray(rng.normal(size=(2, 2, 1024, 64)).astype(np.float32))
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True,
+                                                    mode="ref"))
+    t = time_fn(f, qa, ka, ka)
+    print(f"kernel.attention_ref,{1e6*t:.1f},b2 h8 s1024 d64")
+
+    table = jnp.asarray(rng.normal(size=(100000, 32)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, 100000, (4096, 20)).astype(np.int32))
+    f = jax.jit(lambda t_, i_: ops.embedding_bag(t_, i_, mode="ref"))
+    t = time_fn(f, table, ids)
+    print(f"kernel.embedding_bag_ref,{1e6*t:.1f},V=1e5 b=4096 L=20")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    choices=["all", "table1", "fig1", "fig2", "kernels"])
+    args, _ = ap.parse_known_args()
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    if args.only in ("all", "kernels"):
+        bench_kernels()
+
+    if args.only in ("all", "table1"):
+        from benchmarks import table1
+        rows = table1.run(csv=False)
+        for r in rows:
+            sp = r["speedup_time"] or 1.0
+            spw = r["speedup_work"] or 1.0
+            print(f"table1.{r['dataset']}.{r['method']},"
+                  f"{1e3*r['ms_per_turn']:.1f},"
+                  f"mrr={r['mrr@10']:.3f};ndcg10={r['ndcg@10']:.3f};"
+                  f"speedup_t={sp};speedup_w={spw}")
+
+    if args.only in ("all", "fig1"):
+        from benchmarks import fig1_ivf_sweep
+        for kind in ("cast19", "cast20"):
+            for r in fig1_ivf_sweep.sweep(kind, csv=False):
+                print(f"fig1.{kind}.{r['method']}.np{r['nprobe']},"
+                      f"{1e3*r['ms_per_turn']:.1f},"
+                      f"ndcg10={r['ndcg10']:.3f};work={r['work']:.0f}")
+
+    if args.only in ("all", "fig2"):
+        from benchmarks import fig2_hnsw_sweep
+        for kind in ("cast19", "cast20"):
+            for r in fig2_hnsw_sweep.sweep(kind, csv=False):
+                print(f"fig2.{kind}.{r['method']}.ef{r['ef']},"
+                      f"{1e3*r['ms_per_turn']:.1f},"
+                      f"ndcg10={r['ndcg10']:.3f};work={r['work']:.0f}")
+
+    print(f"# benchmarks completed in {time.time()-t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

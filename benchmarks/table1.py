@@ -1,0 +1,149 @@
+"""Table 1 reproduction: effectiveness + efficiency of every method on
+both conversation sets.
+
+Methods (paper rows): Exact, IVF, TopLoc_IVF, TopLoc_IVF+, HNSW,
+TopLoc_HNSW.  Columns: MRR@10, NDCG@3, NDCG@10, mean per-turn time
+(jitted device path, batch-of-conversations), speedup vs the plain
+counterpart, and the hardware-independent work counters (distance
+computations — what the paper's speedups reduce to).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw as HN
+from repro.core import ivf as IV
+from repro.core import toploc as TL
+from benchmarks import common as C
+
+NPROBE = 16
+H = 256          # np/h ≈ 6%: the regime where the |I0| proxy
+                 # discriminates (paper: np << h << p)
+ALPHA = 0.25
+EF = 32
+UP = 2
+K = 10
+
+
+def _run_ivf(index, wl, mode: str, alpha: float) -> Dict:
+    convs = jnp.asarray(wl.conversations)           # (C, T, d)
+    n_conv, turns, d = convs.shape
+
+    def all_convs(cs):
+        return jax.vmap(
+            lambda conv: TL.ivf_conversation(index, conv, h=H,
+                                             nprobe=NPROBE, k=K,
+                                             alpha=alpha, mode=mode))(cs)
+
+    fn = jax.jit(all_convs)
+    v, ids, stats = fn(convs)
+    jax.block_until_ready(ids)
+    wall = C.time_fn(fn, convs)
+    metrics = C.eval_conversations(np.asarray(ids), wl)
+    return dict(
+        metrics=metrics,
+        ms_per_turn=1e3 * wall / (n_conv * turns),
+        centroid_work=float(np.asarray(stats.centroid_dists).mean()),
+        list_work=float(np.asarray(stats.list_dists).mean()),
+        graph_work=0.0,
+        refresh_rate=float(np.asarray(stats.refreshed)[:, 1:].mean()),
+    )
+
+
+def _run_hnsw(index, wl, mode: str) -> Dict:
+    convs = jnp.asarray(wl.conversations)
+    n_conv, turns, d = convs.shape
+
+    def all_convs(cs):
+        return jax.vmap(
+            lambda conv: TL.hnsw_conversation(index, conv, ef=EF, k=K,
+                                              up=UP, mode=mode))(cs)
+
+    fn = jax.jit(all_convs)
+    v, ids, stats = fn(convs)
+    jax.block_until_ready(ids)
+    wall = C.time_fn(fn, convs)
+    metrics = C.eval_conversations(np.asarray(ids), wl)
+    return dict(
+        metrics=metrics,
+        ms_per_turn=1e3 * wall / (n_conv * turns),
+        centroid_work=0.0, list_work=0.0,
+        graph_work=float(np.asarray(stats.graph_dists).mean()),
+        refresh_rate=0.0,
+    )
+
+
+def _run_exact(wl) -> Dict:
+    docs = jnp.asarray(wl.doc_vecs)
+    convs = jnp.asarray(wl.conversations)
+    n_conv, turns, d = convs.shape
+    flat = convs.reshape(-1, d)
+    fn = jax.jit(lambda q: IV.exact_search(docs, q, K))
+    v, ids = fn(flat)
+    jax.block_until_ready(ids)
+    wall = C.time_fn(fn, flat)
+    metrics = C.eval_conversations(
+        np.asarray(ids).reshape(n_conv, turns, K), wl)
+    return dict(metrics=metrics, ms_per_turn=1e3 * wall / flat.shape[0],
+                centroid_work=0.0, list_work=float(docs.shape[0]),
+                graph_work=0.0, refresh_rate=0.0)
+
+
+def run(csv: bool = True) -> List[Dict]:
+    rows = []
+    for kind in ("cast19", "cast20"):
+        wl = C.workload(kind)
+        ivf_idx = C.ivf_index(kind)
+        hnsw_idx = C.hnsw_index(kind)
+        results = {
+            "Exact": _run_exact(wl),
+            "IVF": _run_ivf(ivf_idx, wl, "plain", -1.0),
+            "TopLoc_IVF": _run_ivf(ivf_idx, wl, "toploc", -1.0),
+            "TopLoc_IVF+": _run_ivf(ivf_idx, wl, "toploc", ALPHA),
+            "HNSW": _run_hnsw(hnsw_idx, wl, "plain"),
+            "TopLoc_HNSW": _run_hnsw(hnsw_idx, wl, "toploc"),
+        }
+        base_ms = {"TopLoc_IVF": results["IVF"]["ms_per_turn"],
+                   "TopLoc_IVF+": results["IVF"]["ms_per_turn"],
+                   "TopLoc_HNSW": results["HNSW"]["ms_per_turn"]}
+        base_work = {
+            "TopLoc_IVF": results["IVF"]["centroid_work"]
+            + results["IVF"]["list_work"],
+            "TopLoc_IVF+": results["IVF"]["centroid_work"]
+            + results["IVF"]["list_work"],
+            "TopLoc_HNSW": results["HNSW"]["graph_work"]}
+        for name, res in results.items():
+            work = (res["centroid_work"] + res["list_work"]
+                    + res["graph_work"])
+            row = dict(dataset=kind, method=name, **res["metrics"],
+                       ms_per_turn=round(res["ms_per_turn"], 3),
+                       work=round(work, 1),
+                       speedup_time=(round(base_ms[name]
+                                           / res["ms_per_turn"], 2)
+                                     if name in base_ms else None),
+                       speedup_work=(round(base_work[name] / work, 2)
+                                     if name in base_work else None),
+                       refresh_rate=round(res["refresh_rate"], 3))
+            rows.append(row)
+            if csv:
+                sp_t = row["speedup_time"] or "-"
+                sp_w = row["speedup_work"] or "-"
+                print(f"table1,{kind},{name},{row['mrr@10']:.3f},"
+                      f"{row['ndcg@3']:.3f},{row['ndcg@10']:.3f},"
+                      f"{row['ms_per_turn']},{row['work']},{sp_t},{sp_w}")
+    return rows
+
+
+def main():
+    print("table,dataset,method,mrr@10,ndcg@3,ndcg@10,ms_per_turn,"
+          "work_dists,speedup_time,speedup_work")
+    run()
+
+
+if __name__ == "__main__":
+    main()

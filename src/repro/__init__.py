@@ -1,0 +1,4 @@
+"""repro — TopLoc (SIGIR'25) as a production-grade JAX retrieval/serving
+framework: core ANN library + TopLoc sessions, Pallas TPU kernels, model
+zoo (LM/GNN/recsys/encoders), distributed runtime, serving engine."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Fault-tolerance substrate: atomic sharded checkpoints, async writer."""
+from repro.checkpoint import checkpoint  # noqa: F401

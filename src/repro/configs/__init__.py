@@ -1,0 +1,26 @@
+"""Architecture configs — one module per assigned architecture.
+
+Importing this package populates the registry (configs.common). Arch ids:
+  LM:     grok-1-314b, deepseek-v2-lite-16b, qwen1.5-4b, qwen3-14b, yi-9b
+  GNN:    gin-tu
+  recsys: two-tower-retrieval, dcn-v2, bst, autoint
+Plus the paper's own encoder configs (dragon / snowflake) used by the
+reproduction pipeline.
+"""
+from repro.configs import common  # noqa: F401
+from repro.configs import (  # noqa: F401
+    autoint,
+    bst,
+    dcn_v2,
+    deepseek_v2_lite_16b,
+    gin_tu,
+    grok_1_314b,
+    qwen15_4b,
+    qwen3_14b,
+    two_tower_retrieval,
+    yi_9b,
+)
+from repro.configs import encoders  # noqa: F401
+
+get = common.get
+list_archs = common.list_archs

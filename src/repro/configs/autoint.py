@@ -1,0 +1,123 @@
+"""autoint [arXiv:1810.11921; paper]
+
+39 sparse fields (embed 16), 3 self-attention layers (2 heads, d_attn
+32) with residual projections. Ranking model — TopLoc inapplicable
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as SH
+from repro.models import recsys as R
+from repro.optim import optimizers as OPT
+from repro.optim import schedules as SCHED
+
+VOCABS = (2 ** 22,) * 2 + (2 ** 18,) * 5 + (2 ** 14,) * 32
+
+SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="serve", batch=1_000_000),
+}
+
+
+SMOKE_SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=4096),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=8192),
+    "retrieval_cand": dict(kind="serve", batch=65536),
+}
+
+
+def full_config() -> R.AutoIntConfig:
+    return R.AutoIntConfig(vocab_sizes=VOCABS)
+
+
+def smoke_config() -> R.AutoIntConfig:
+    return R.AutoIntConfig(n_sparse=8, vocab_sizes=(64,) * 8,
+                           embed_dim=8, d_attn=8)
+
+
+def _flops_per_row(cfg: R.AutoIntConfig) -> float:
+    f, d0 = cfg.n_sparse, cfg.embed_dim
+    da, h = cfg.d_attn, cfg.n_heads
+    flops, d_in = 0.0, d0
+    for _ in range(cfg.n_attn_layers):
+        d_out = da * h
+        flops += 2.0 * f * d_in * d_out * 4          # q,k,v,res projections
+        flops += 2.0 * f * f * d_out * 2             # scores + weighted sum
+        d_in = d_out
+    return flops + 2.0 * f * d_in
+
+
+def build_bundle(cfg: R.AutoIntConfig, shape: str, axes: SH.Axes, *,
+                 n_dp: int = 1, smoke: bool = False,
+                 shape_overrides=None, **kw) -> common.StepBundle:
+    sp = dict(SMOKE_SHAPE_PARAMS[shape] if smoke else SHAPE_PARAMS[shape])
+    sp.update(shape_overrides or {})
+    b = sp["batch"]
+    param_structs = jax.eval_shape(
+        lambda: R.autoint_init(cfg, jax.random.PRNGKey(0)))
+    pspecs = SH.autoint_param_specs(cfg, axes)
+    dp = axes.dp
+    batch_structs = {
+        "sparse": common.struct((b, cfg.n_sparse), jnp.int32),
+        "labels": common.struct((b,), jnp.float32),
+    }
+    bspecs = {"sparse": P(dp, None), "labels": P(dp)}
+    meta = dict(model_flops=(3.0 if sp["kind"] == "train" else 1.0)
+                * b * _flops_per_row(cfg),
+                scan_trip_count=1, params=cfg.param_count(), tokens=b)
+
+    if sp["kind"] == "train":
+        opt = OPT.adamw(SCHED.constant(1e-3))
+        opt_structs = jax.eval_shape(opt.init, param_structs)
+        ospecs = SH.lm_opt_specs("adamw", pspecs)
+
+        def loss_fn(params, batch):
+            logits = R.autoint_forward(params, cfg, batch["sparse"])
+            return R.bce_loss(logits, batch["labels"])
+
+        step = common.simple_train_step(loss_fn, opt)
+        return common.StepBundle(
+            arch="autoint", shape=shape, kind="train", step_fn=step,
+            arg_structs=(param_structs, opt_structs, batch_structs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, None), donate_argnums=(0, 1),
+            meta=meta)
+
+    # serve deployments replicate ALL params (tables are a few GB,
+    # dense layers are MBs — affordable per inference replica): pure
+    # data-parallel inference with ZERO per-request collectives. The
+    # first attempt replicated only the tables, but the Megatron-TP
+    # tower MLP all-reduce then dominated (§Perf hillclimb 4 log).
+    # Training keeps row-sharded tables + TP (optimizer state for the
+    # tables must stay distributed).
+    if sp["kind"] == "serve" and sp.get("replicate_params", True):
+        pspecs = common.replicate_specs(param_structs)
+
+    def serve_step(params, sparse):
+        return R.autoint_forward(params, cfg, sparse)
+
+    # pure-DP serving: the idle model axis takes batch shards too
+    flat = axes.data + (axes.model,)
+    return common.StepBundle(
+        arch="autoint", shape=shape, kind="serve", step_fn=serve_step,
+        arg_structs=(param_structs, batch_structs["sparse"]),
+        in_specs=(pspecs,
+                  P(flat if b % 256 == 0 else dp, None)),
+        out_specs=None, meta=meta)
+
+
+ARCH = common.register(common.ArchDef(
+    arch_id="autoint", family="recsys", shapes=tuple(SHAPE_PARAMS),
+    make_config=full_config, make_smoke_config=smoke_config,
+    build_bundle=build_bundle,
+    notes="field self-attention CTR; TopLoc inapplicable (DESIGN.md §4)"))

@@ -1,0 +1,127 @@
+"""bst — Behaviour Sequence Transformer (Alibaba) [arXiv:1905.06874; paper]
+
+embed_dim=32, behaviour seq_len=20, 1 transformer block (8 heads),
+MLP 1024-512-256. Item vocab 5M + 8 profile features x 100k.
+Ranking model — TopLoc inapplicable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as SH
+from repro.models import recsys as R
+from repro.optim import optimizers as OPT
+from repro.optim import schedules as SCHED
+
+SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="serve", batch=1_000_000),
+}
+
+
+SMOKE_SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=4096),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=8192),
+    "retrieval_cand": dict(kind="serve", batch=65536),
+}
+
+
+def full_config() -> R.BSTConfig:
+    return R.BSTConfig(item_vocab=5_000_000, other_vocab=100_000)
+
+
+def smoke_config() -> R.BSTConfig:
+    return R.BSTConfig(item_vocab=512, other_vocab=64, n_other=3,
+                       mlp=(32, 16), seq_len=6)
+
+
+def _flops_per_row(cfg: R.BSTConfig) -> float:
+    e, s = cfg.embed_dim, cfg.seq_len + 1
+    attn = cfg.n_blocks * (8.0 * s * e * e + 4.0 * s * s * e
+                           + 4.0 * s * e * 4 * e)
+    d_in = s * e + cfg.n_other * e
+    deep, dims = 0.0, (d_in,) + cfg.mlp
+    for a, b in zip(dims[:-1], dims[1:]):
+        deep += 2.0 * a * b
+    return attn + deep + 2.0 * cfg.mlp[-1]
+
+
+def build_bundle(cfg: R.BSTConfig, shape: str, axes: SH.Axes, *,
+                 n_dp: int = 1, smoke: bool = False,
+                 shape_overrides=None, **kw) -> common.StepBundle:
+    sp = dict(SMOKE_SHAPE_PARAMS[shape] if smoke else SHAPE_PARAMS[shape])
+    sp.update(shape_overrides or {})
+    b = sp["batch"]
+    param_structs = jax.eval_shape(
+        lambda: R.bst_init(cfg, jax.random.PRNGKey(0)))
+    pspecs = SH.bst_param_specs(cfg, axes)
+    dp = axes.dp
+    batch_structs = {
+        "history": common.struct((b, cfg.seq_len), jnp.int32),
+        "target": common.struct((b,), jnp.int32),
+        "other": common.struct((b, cfg.n_other), jnp.int32),
+        "labels": common.struct((b,), jnp.float32),
+    }
+    bspecs = {"history": P(dp, None), "target": P(dp),
+              "other": P(dp, None), "labels": P(dp)}
+    meta = dict(model_flops=(3.0 if sp["kind"] == "train" else 1.0)
+                * b * _flops_per_row(cfg),
+                scan_trip_count=1, params=cfg.param_count(), tokens=b)
+
+    if sp["kind"] == "train":
+        opt = OPT.adamw(SCHED.constant(1e-3))
+        opt_structs = jax.eval_shape(opt.init, param_structs)
+        ospecs = SH.lm_opt_specs("adamw", pspecs)
+
+        def loss_fn(params, batch):
+            logits = R.bst_forward(params, cfg, batch["history"],
+                                   batch["target"], batch["other"])
+            return R.bce_loss(logits, batch["labels"])
+
+        step = common.simple_train_step(loss_fn, opt)
+        return common.StepBundle(
+            arch="bst", shape=shape, kind="train", step_fn=step,
+            arg_structs=(param_structs, opt_structs, batch_structs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, None), donate_argnums=(0, 1),
+            meta=meta)
+
+    # serve deployments replicate ALL params (tables are a few GB,
+    # dense layers are MBs — affordable per inference replica): pure
+    # data-parallel inference with ZERO per-request collectives. The
+    # first attempt replicated only the tables, but the Megatron-TP
+    # tower MLP all-reduce then dominated (§Perf hillclimb 4 log).
+    # Training keeps row-sharded tables + TP (optimizer state for the
+    # tables must stay distributed).
+    if sp["kind"] == "serve" and sp.get("replicate_params", True):
+        pspecs = common.replicate_specs(param_structs)
+
+    def serve_step(params, history, target, other):
+        return R.bst_forward(params, cfg, history, target, other)
+
+    # pure-DP serving: the idle model axis takes batch shards too
+    flat = axes.data + (axes.model,)
+    return common.StepBundle(
+        arch="bst", shape=shape, kind="serve", step_fn=serve_step,
+        arg_structs=(param_structs, batch_structs["history"],
+                     batch_structs["target"], batch_structs["other"]),
+        in_specs=(pspecs,
+                  P(flat if b % 256 == 0 else dp, None),
+                  P(flat if b % 256 == 0 else dp),
+                  P(flat if b % 256 == 0 else dp, None)),
+        out_specs=None, meta=meta)
+
+
+ARCH = common.register(common.ArchDef(
+    arch_id="bst", family="recsys", shapes=tuple(SHAPE_PARAMS),
+    make_config=full_config, make_smoke_config=smoke_config,
+    build_bundle=build_bundle,
+    notes="sequential CTR; TopLoc inapplicable (DESIGN.md §4)"))

@@ -1,0 +1,310 @@
+"""Config registry + step-bundle builders shared by all architectures.
+
+Every architecture file registers an ``ArchDef``; the launcher asks it
+for a ``StepBundle`` per (shape × mesh axes): the jittable step function,
+ShapeDtypeStruct stand-ins for every argument (dry-run lowers without
+allocating — a 314B param tree stays abstract), the PartitionSpec
+pytrees for in/out, donation hints, and roofline metadata (analytic
+MODEL_FLOPS, scan trip count for the while-body cost adjustment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.models import transformer as TF
+from repro.optim import grad as G
+from repro.optim import optimizers as OPT
+from repro.optim import schedules as SCHED
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run / launcher needs for one (arch, shape)."""
+    arch: str
+    shape: str
+    kind: str                       # "train" | "serve"
+    step_fn: Callable
+    arg_structs: Tuple[Any, ...]    # ShapeDtypeStruct pytrees
+    in_specs: Tuple[Any, ...]       # PartitionSpec pytrees (None = auto)
+    out_specs: Any
+    donate_argnums: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ArchDef:
+    arch_id: str
+    family: str                     # "lm" | "gnn" | "recsys"
+    shapes: Tuple[str, ...]
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    build_bundle: Callable[..., StepBundle]   # (config, shape, axes) → bundle
+    skip_shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+
+_REGISTRY: Dict[str, ArchDef] = {}
+
+
+def register(arch: ArchDef) -> ArchDef:
+    _REGISTRY[arch.arch_id] = arch
+    return arch
+
+
+def get(arch_id: str) -> ArchDef:
+    import repro.configs  # noqa: F401  (populate registry)
+    return _REGISTRY[arch_id]
+
+
+def list_archs():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared structs helpers
+# ---------------------------------------------------------------------------
+
+def struct(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def eval_structs(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def replicate_specs(tree) -> Any:
+    """P() for every leaf of a struct pytree."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM bundles (shared by the five transformer archs)
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+LM_SHAPE_PARAMS = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="serve", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="serve", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="serve", seq_len=524288, global_batch=1),
+}
+
+LM_SKIPS = {
+    "long_500k": ("pure full-attention arch: rule-mandated skip for "
+                  "seq 524288 (sub-quadratic-only shape); KV cache is "
+                  "sequence-shardable so the cell lowers, but it is "
+                  "excluded from the graded table per the brief"),
+}
+
+# reduced shapes for harness debugging (--smoke); batch ≥ 32 so both
+# production meshes shard the batch dim
+LM_SMOKE_SHAPE_PARAMS = {
+    "train_4k": dict(kind="train", seq_len=128, global_batch=64),
+    "prefill_32k": dict(kind="serve", seq_len=128, global_batch=32),
+    "decode_32k": dict(kind="serve", seq_len=256, global_batch=64),
+    "long_500k": dict(kind="serve", seq_len=512, global_batch=32),
+}
+
+
+def make_lm_optimizer(name: str):
+    lr = SCHED.warmup_cosine(3e-4, 2000, 200_000)
+    if name == "adafactor":
+        return OPT.adafactor(lr)
+    return OPT.adamw(lr, weight_decay=0.1)
+
+
+def lm_bundle(cfg: TF.LMConfig, arch_id: str, shape: str, axes: SH.Axes,
+              *, optimizer: str = "adamw", n_dp: int = 1,
+              smoke: bool = False, microbatches: int = 1,
+              shape_overrides: Optional[dict] = None) -> StepBundle:
+    sp = dict(LM_SMOKE_SHAPE_PARAMS[shape] if smoke
+              else LM_SHAPE_PARAMS[shape])
+    sp.update(shape_overrides or {})
+    seq, batch = sp["seq_len"], sp["global_batch"]
+    kind = sp["kind"]
+    # moe routing groups == data-parallel shard count (DESIGN.md §5);
+    # the group dim shards over the data axes via vmap spmd_axis_name.
+    # Applies to train AND prefill — an ungrouped 1M-token prefill
+    # dispatch is an (E, 330k, d) buffer (§Perf prefill iteration);
+    # decode keeps groups=1 (decode_step forces it internally).
+    if cfg.is_moe and not shape.startswith(("decode", "long")):
+        cfg = dataclasses.replace(
+            cfg, moe_groups=max(n_dp, 1),
+            moe_group_axes=(axes.data if n_dp > 1 else None),
+            moe_tp_axis=(axes.model if n_dp > 1 else None))
+    # activation sharding: batch over data axes + sequence over model
+    # (Megatron-style sequence parallelism between layers: the residual
+    # stream — and therefore the scan's saved remat residuals — shards
+    # tp-ways; XLA inserts the S all-gather before attention and the
+    # reduce-scatter after. §Perf iteration 3.)  Requires the lower to
+    # happen under `with mesh:` — launch/dryrun.py does.  Decode steps
+    # skip it: their activations are (B, 1, d) and long_500k has B=1.
+    act_mode = sp.get("act_spec", "sp")
+    is_decode = shape.startswith(("decode", "long"))
+    if n_dp > 1 and act_mode and not is_decode and batch % n_dp == 0:
+        from jax.sharding import PartitionSpec as _P
+        spec = (_P(axes.dp, axes.model, None) if act_mode == "sp"
+                else _P(axes.dp, None, None))
+        cfg = dataclasses.replace(cfg, act_spec=spec)
+
+    param_structs = jax.eval_shape(
+        lambda: TF.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = SH.lm_param_specs(cfg, axes)
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+
+    if kind == "train":
+        opt = make_lm_optimizer(optimizer)
+        opt_structs = jax.eval_shape(opt.init, param_structs)
+        ospecs = SH.lm_opt_specs(
+            "adafactor" if optimizer == "adafactor" else "adamw", pspecs,
+            param_structs)
+        bspecs = SH.lm_batch_specs(axes)
+        batch_structs = {"tokens": struct((batch, seq), jnp.int32),
+                         "labels": struct((batch, seq), jnp.int32)}
+
+        mb = int(sp.get("microbatches", microbatches))
+        assert batch % max(mb, 1) == 0, (batch, mb)
+
+        def train_step(params, opt_state, data):
+            def lf(p, d):
+                return TF.loss_fn(p, cfg, d["tokens"], d["labels"])
+
+            if mb > 1:
+                # gradient accumulation: scan over microbatches — peak
+                # activation memory scales with batch/mb. Accumulator
+                # dtype: f32 for adamw; param dtype (bf16) for adafactor,
+                # whose per-tensor RMS-normalised updates tolerate it —
+                # halves the largest remaining buffer on the 314B config.
+                acc_dt = (jnp.float32 if optimizer == "adamw"
+                          else cfg.param_dtype)
+                data_r = jax.tree.map(
+                    lambda t: t.reshape(mb, t.shape[0] // mb,
+                                        *t.shape[1:]), data)
+
+                def body(carry, d):
+                    acc, loss_acc = carry
+                    (loss, metrics), g = jax.value_and_grad(
+                        lf, has_aux=True)(params, d)
+                    acc = jax.tree.map(
+                        lambda a, b: (a + (b / mb).astype(a.dtype)),
+                        acc, g)
+                    return (acc, loss_acc + loss / mb), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dt), params)
+                (grads, loss), _ = jax.lax.scan(
+                    body, (zeros, jnp.zeros((), jnp.float32)), data_r)
+            else:
+                (loss, _metrics), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params, data)
+            grads, gnorm = G.clip_by_global_norm(grads, 1.0)
+            updates, opt_state2 = opt.update(grads, opt_state, params)
+            params2 = OPT.apply_updates(params, updates)
+            return params2, opt_state2, {"loss": loss, "gnorm": gnorm}
+
+        return StepBundle(
+            arch=arch_id, shape=shape, kind="train", step_fn=train_step,
+            arg_structs=(param_structs, opt_structs, batch_structs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, None),
+            donate_argnums=(0, 1),
+            meta=dict(
+                model_flops=6.0 * n_active * batch * seq,
+                scan_trip_count=cfg.n_layers,
+                params=n_params, active_params=n_active,
+                tokens=batch * seq,
+            ),
+        )
+
+    if shape.startswith("decode") or shape.startswith("long"):
+        cache_structs = jax.eval_shape(
+            lambda: TF.init_cache(cfg, batch, seq))
+        cspecs = SH.lm_cache_specs(cfg, axes,
+                                   shard_batch=batch % n_dp == 0)
+        tok_struct = struct((batch,), jnp.int32)
+        len_struct = struct((batch,), jnp.int32)
+
+        def serve_step(params, cache, tokens, cache_len):
+            return TF.decode_step(params, cfg, cache, tokens, cache_len)
+
+        batch_spec = P(axes.dp) if batch >= 16 else P()
+        return StepBundle(
+            arch=arch_id, shape=shape, kind="serve", step_fn=serve_step,
+            arg_structs=(param_structs, cache_structs, tok_struct,
+                         len_struct),
+            in_specs=(pspecs, cspecs, batch_spec, batch_spec),
+            out_specs=(None, cspecs),
+            donate_argnums=(1,),
+            meta=dict(
+                model_flops=2.0 * n_active * batch,
+                scan_trip_count=cfg.n_layers,
+                params=n_params, active_params=n_active,
+                tokens=batch,
+            ),
+        )
+
+    # prefill
+    def serve_step(params, tokens):
+        logits, cache, cache_len = TF.prefill(params, cfg, tokens, seq)
+        return logits, cache, cache_len
+
+    cspecs = SH.lm_cache_specs(cfg, axes)
+    return StepBundle(
+        arch=arch_id, shape=shape, kind="serve", step_fn=serve_step,
+        arg_structs=(param_structs,
+                     struct((batch, seq), jnp.int32)),
+        in_specs=(pspecs, SH.lm_batch_specs(axes)["tokens"]),
+        out_specs=(None, cspecs, None),
+        meta=dict(
+            model_flops=2.0 * n_active * batch * seq,
+            scan_trip_count=cfg.n_layers,
+            params=n_params, active_params=n_active,
+            tokens=batch * seq,
+        ),
+    )
+
+
+def lm_archdef(arch_id: str, full_cfg: Callable[[], TF.LMConfig],
+               smoke_cfg: Callable[[], TF.LMConfig], *,
+               optimizer: str = "adamw", microbatches: int = 1,
+               notes: str = "") -> ArchDef:
+    def build(cfg, shape, axes, *, n_dp: int = 1, smoke: bool = False,
+              shape_overrides: Optional[dict] = None, **kw):
+        return lm_bundle(cfg, arch_id, shape, axes, optimizer=optimizer,
+                         n_dp=n_dp, smoke=smoke,
+                         microbatches=1 if smoke else microbatches,
+                         shape_overrides=shape_overrides)
+
+    return register(ArchDef(
+        arch_id=arch_id, family="lm", shapes=LM_SHAPES,
+        make_config=full_cfg, make_smoke_config=smoke_cfg,
+        build_bundle=build, skip_shapes=dict(LM_SKIPS), notes=notes))
+
+
+# ---------------------------------------------------------------------------
+# generic train-step factory (non-LM models)
+# ---------------------------------------------------------------------------
+
+def simple_train_step(loss_fn, optimizer):
+    """loss_fn(params, batch) → (loss, metrics)."""
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads, gnorm = G.clip_by_global_norm(grads, 1.0)
+        updates, opt_state2 = optimizer.update(grads, opt_state, params)
+        params2 = OPT.apply_updates(params, updates)
+        out = {"loss": loss, "gnorm": gnorm}
+        out.update(metrics)
+        return params2, opt_state2, out
+    return train_step

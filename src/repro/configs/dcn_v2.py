@@ -1,0 +1,130 @@
+"""dcn-v2 [arXiv:2008.13535; paper]
+
+13 dense + 26 sparse features (embed 16), 3 full-rank cross layers,
+deep MLP 1024-1024-512. Criteo-like skewed vocab distribution
+(2x16.7M + 2x2M + 2x262k + 20x65k ≈ 39.6M rows). Ranking model —
+TopLoc inapplicable (dense scoring of given candidates; DESIGN.md §4).
+``retrieval_cand`` = offline scoring of 10⁶ candidate rows for one user.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as SH
+from repro.models import recsys as R
+from repro.optim import optimizers as OPT
+from repro.optim import schedules as SCHED
+
+VOCABS = (2 ** 24, 2 ** 24, 2 ** 21, 2 ** 21, 2 ** 18, 2 ** 18
+          ) + (2 ** 16,) * 20
+
+SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="serve", batch=1_000_000),
+}
+
+
+SMOKE_SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=4096),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=8192),
+    "retrieval_cand": dict(kind="serve", batch=65536),
+}
+
+
+def full_config() -> R.DCNv2Config:
+    return R.DCNv2Config(vocab_sizes=VOCABS)
+
+
+def smoke_config() -> R.DCNv2Config:
+    return R.DCNv2Config(vocab_sizes=(64,) * 26, mlp=(64, 32),
+                         embed_dim=8)
+
+
+def _flops_per_row(cfg: R.DCNv2Config) -> float:
+    d = cfg.d_input
+    cross = cfg.n_cross_layers * 2.0 * d * d
+    deep, dims = 0.0, (d,) + cfg.mlp
+    for a, b in zip(dims[:-1], dims[1:]):
+        deep += 2.0 * a * b
+    return cross + deep + 2.0 * (d + cfg.mlp[-1])
+
+
+def build_bundle(cfg: R.DCNv2Config, shape: str, axes: SH.Axes, *,
+                 n_dp: int = 1, smoke: bool = False,
+                 shape_overrides=None, **kw) -> common.StepBundle:
+    sp = dict(SMOKE_SHAPE_PARAMS[shape] if smoke else SHAPE_PARAMS[shape])
+    sp.update(shape_overrides or {})
+    b = sp["batch"]
+    param_structs = jax.eval_shape(
+        lambda: R.dcnv2_init(cfg, jax.random.PRNGKey(0)))
+    pspecs = SH.dcnv2_param_specs(cfg, axes)
+    dp = axes.dp
+    batch_structs = {
+        "dense": common.struct((b, cfg.n_dense), jnp.float32),
+        "sparse": common.struct((b, cfg.n_sparse), jnp.int32),
+        "labels": common.struct((b,), jnp.float32),
+    }
+    bspecs = {"dense": P(dp, None), "sparse": P(dp, None), "labels": P(dp)}
+    meta = dict(model_flops=(3.0 if sp["kind"] == "train" else 1.0)
+                * b * _flops_per_row(cfg),
+                scan_trip_count=1, params=cfg.param_count(), tokens=b)
+
+    if sp["kind"] == "train":
+        opt = OPT.adamw(SCHED.constant(1e-3))
+        opt_structs = jax.eval_shape(opt.init, param_structs)
+        ospecs = SH.lm_opt_specs("adamw", pspecs)
+
+        def loss_fn(params, batch):
+            logits = R.dcnv2_forward(params, cfg, batch["dense"],
+                                     batch["sparse"])
+            return R.bce_loss(logits, batch["labels"])
+
+        step = common.simple_train_step(loss_fn, opt)
+        return common.StepBundle(
+            arch="dcn-v2", shape=shape, kind="train", step_fn=step,
+            arg_structs=(param_structs, opt_structs, batch_structs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, None), donate_argnums=(0, 1),
+            meta=meta)
+
+    # serve deployments replicate ALL params (tables are a few GB,
+    # dense layers are MBs — affordable per inference replica): pure
+    # data-parallel inference with ZERO per-request collectives. The
+    # first attempt replicated only the tables, but the Megatron-TP
+    # tower MLP all-reduce then dominated (§Perf hillclimb 4 log).
+    # Training keeps row-sharded tables + TP (optimizer state for the
+    # tables must stay distributed).
+    if sp["kind"] == "serve" and sp.get("replicate_params", True):
+        pspecs = common.replicate_specs(param_structs)
+
+    def serve_step(params, dense, sparse):
+        return R.dcnv2_forward(params, cfg, dense, sparse)
+
+    # pure-DP serving: the idle model axis takes batch shards too
+    flat = axes.data + (axes.model,)
+    return common.StepBundle(
+        arch="dcn-v2", shape=shape, kind="serve", step_fn=serve_step,
+        arg_structs=(param_structs, batch_structs["dense"],
+                     batch_structs["sparse"]),
+        in_specs=(pspecs,
+                  # retrieval_cand batch (10^6) is not divisible by the
+                  # full 256/512-chip mesh — shard over data axes only
+                  # (params replicated: still zero collectives)
+                  P(flat if b % 256 == 0 else dp, None),
+                  P(flat if b % 256 == 0 else dp, None)),
+        out_specs=None, meta=meta)
+
+
+ARCH = common.register(common.ArchDef(
+    arch_id="dcn-v2", family="recsys", shapes=tuple(SHAPE_PARAMS),
+    make_config=full_config, make_smoke_config=smoke_config,
+    build_bundle=build_bundle,
+    notes="ranking model; TopLoc inapplicable (DESIGN.md §4)"))

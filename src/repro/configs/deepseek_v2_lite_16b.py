@@ -1,0 +1,42 @@
+"""deepseek-v2-lite-16b [arXiv:2405.04434; hf]
+
+27L d_model=2048 16H d_ff(expert)=1408 vocab=102400, MLA kv_lora=512
+(+64 decoupled rope dims), MoE 2 shared + 64 routed top-6.
+
+Deviations from the HF checkpoint (recorded per DESIGN.md): the
+assignment line says both "64e" and "160 routed"; we implement 64 routed
+(the actual v2-lite count). The first dense layer (d_ff 10944) is
+simplified to MoE-everywhere. Decode uses the absorbed-latent MLA form
+(cache = 512+64 dims/token — the paper's memory win).
+"""
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models.transformer import LMConfig
+
+
+def full_config() -> LMConfig:
+    return LMConfig(
+        name="deepseek-v2-lite-16b", n_layers=27, d_model=2048, n_heads=16,
+        n_kv_heads=16, d_head=128, d_ff=1408, vocab=102400,
+        attn_kind="mla", kv_lora_rank=512, d_rope=64,
+        n_experts=64, top_k=6, n_shared=2, moe_d_ff=1408,
+        param_dtype=jnp.bfloat16, dtype=jnp.bfloat16,
+        remat=True, loss_chunk=512,
+    )
+
+
+def smoke_config() -> LMConfig:
+    return LMConfig(
+        name="deepseek-v2-lite-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_head=16, d_ff=48, vocab=512,
+        attn_kind="mla", kv_lora_rank=32, d_rope=8,
+        n_experts=8, top_k=2, n_shared=1, moe_d_ff=48,
+        remat=False, loss_chunk=16,
+    )
+
+
+ARCH = common.lm_archdef(
+    "deepseek-v2-lite-16b", full_config, smoke_config, optimizer="adamw",
+    microbatches=4,   # 64-expert dispatch buffers scale 1/mb
+    notes="MLA latent cache; absorbed decode; MoE shared+routed")

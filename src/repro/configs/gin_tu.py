@@ -1,0 +1,188 @@
+"""gin-tu [arXiv:1810.00826; paper] — GIN, 5 layers, d_hidden=64, sum
+aggregator, learnable eps.
+
+Four kernel regimes (taxonomy §GNN), one per shape:
+  full_graph_sm  — Cora-scale full-batch (n=2,708, e=10,556, d=1,433)
+  minibatch_lg   — Reddit-scale sampled training (232,965 nodes,
+                   114.6M edges, batch_nodes=1,024, fanout 15-10).
+                   Sampled subgraphs are *per-seed trees* (1 + 15 + 150
+                   nodes, 165 edges each): disjoint by construction, so
+                   the batch shards over data axes with zero cross-shard
+                   edges (DESIGN.md §5).
+  ogb_products   — full-batch large (n=2,449,029, e=61,859,140, d=100):
+                   edges shard over the whole mesh, node states
+                   replicate, partial segment_sum + all-reduce.
+  molecule       — batched small graphs (30 nodes / 64 edges x 128).
+
+TopLoc: inapplicable (no ANN search in a GNN step) — DESIGN.md §4.
+d_in / n_classes are shape-level (different datasets); params stay tiny
+and replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as SH
+from repro.models import gnn
+from repro.optim import optimizers as OPT
+from repro.optim import schedules as SCHED
+
+SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7, pad_edges_to=512),
+    "minibatch_lg": dict(kind="train", batch_nodes=1024, fanouts=(15, 10),
+                         d_feat=602, n_classes=41,
+                         tree_nodes=166, tree_edges=165),
+    "ogb_products": dict(kind="train", n_nodes=2_449_029,
+                         n_edges=61_859_140, d_feat=100, n_classes=47,
+                         pad_edges_to=512),
+    "molecule": dict(kind="train", batch=128, n_nodes=30, n_edges=64,
+                     d_feat=16, n_classes=2),
+}
+
+
+SMOKE_SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "full_graph_sm": dict(kind="train", n_nodes=512, n_edges=2048,
+                          d_feat=32, n_classes=7, pad_edges_to=512),
+    "minibatch_lg": dict(kind="train", batch_nodes=64, fanouts=(3, 2),
+                         d_feat=32, n_classes=8, tree_nodes=10,
+                         tree_edges=9),
+    "ogb_products": dict(kind="train", n_nodes=4096, n_edges=16384,
+                         d_feat=32, n_classes=16, pad_edges_to=512),
+    "molecule": dict(kind="train", batch=32, n_nodes=10, n_edges=16,
+                     d_feat=8, n_classes=2),
+}
+
+
+def full_config() -> gnn.GINConfig:
+    return gnn.GINConfig(name="gin-tu", n_layers=5, d_hidden=64)
+
+
+def smoke_config() -> gnn.GINConfig:
+    return gnn.GINConfig(name="gin-tu-smoke", n_layers=3, d_hidden=16)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _optimizer():
+    return OPT.adamw(SCHED.constant(1e-3))
+
+
+def build_bundle(cfg: gnn.GINConfig, shape: str, axes: SH.Axes, *,
+                 n_dp: int = 1, smoke: bool = False,
+                 shape_overrides=None, **kw) -> common.StepBundle:
+    sp = dict(SMOKE_SHAPE_PARAMS[shape] if smoke else SHAPE_PARAMS[shape])
+    sp.update(shape_overrides or {})
+    cfg = dataclasses.replace(cfg, d_in=sp["d_feat"],
+                              n_classes=sp["n_classes"])
+    opt = _optimizer()
+    param_structs = jax.eval_shape(
+        lambda: gnn.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = common.replicate_specs(param_structs)
+    ospecs = common.replicate_specs(jax.eval_shape(opt.init, param_structs))
+    opt_structs = jax.eval_shape(opt.init, param_structs)
+    flat = axes.data + (axes.model,)
+
+    if shape in ("full_graph_sm", "ogb_products"):
+        n, e = sp["n_nodes"], sp["n_edges"]
+        e_pad = _pad_to(e, sp["pad_edges_to"])
+        batch_structs = {
+            "x": common.struct((n, sp["d_feat"]), jnp.float32),
+            "edge_src": common.struct((e_pad,), jnp.int32),
+            "edge_dst": common.struct((e_pad,), jnp.int32),
+            "edge_mask": common.struct((e_pad,), jnp.bool_),
+            "labels": common.struct((n,), jnp.int32),
+            "train_mask": common.struct((n,), jnp.bool_),
+        }
+        bspecs = {"x": P(), "edge_src": P(flat), "edge_dst": P(flat),
+                  "edge_mask": P(flat), "labels": P(), "train_mask": P()}
+
+        def loss_fn(params, b):
+            return gnn.node_loss(params, cfg, b["x"], b["edge_src"],
+                                 b["edge_dst"], b["labels"],
+                                 b["train_mask"], b["edge_mask"])
+
+        # fwd ≈ Σ_l 2·N·d_in·d_h + 2·N·d_h² + E·d_h ; train ≈ 3× fwd
+        d_h = cfg.d_hidden
+        fwd = (2 * n * sp["d_feat"] * d_h + 2 * n * d_h * d_h
+               + (cfg.n_layers - 1) * (4 * n * d_h * d_h + e * d_h)
+               + e * sp["d_feat"])
+        meta = dict(model_flops=3.0 * fwd, scan_trip_count=1,
+                    params=cfg.param_count(), tokens=n)
+
+    elif shape == "minibatch_lg":
+        bsz, tn, te = sp["batch_nodes"], sp["tree_nodes"], sp["tree_edges"]
+        batch_structs = {
+            "x": common.struct((bsz, tn, sp["d_feat"]), jnp.float32),
+            "edge_src": common.struct((bsz, te), jnp.int32),
+            "edge_dst": common.struct((bsz, te), jnp.int32),
+            "edge_mask": common.struct((bsz, te), jnp.bool_),
+            "labels": common.struct((bsz,), jnp.int32),
+        }
+        bspecs = {k: P(axes.dp) for k in batch_structs}
+
+        def loss_fn(params, b):
+            def tree_logits(x, es, ed, em):
+                return gnn.forward_node(params, cfg, x, es, ed, em)[0]
+            logits = jax.vmap(tree_logits)(
+                b["x"], b["edge_src"], b["edge_dst"], b["edge_mask"])
+            logz = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(
+                logits, b["labels"][:, None], -1)[..., 0]
+            loss = jnp.mean(logz - gold)
+            acc = jnp.mean(jnp.argmax(logits, -1) == b["labels"])
+            return loss, {"acc": acc}
+
+        d_h = cfg.d_hidden
+        fwd_tree = (2 * tn * sp["d_feat"] * d_h
+                    + (cfg.n_layers) * (4 * tn * d_h * d_h + te * d_h))
+        meta = dict(model_flops=3.0 * bsz * fwd_tree, scan_trip_count=1,
+                    params=cfg.param_count(), tokens=bsz)
+
+    else:  # molecule
+        bsz, n, e = sp["batch"], sp["n_nodes"], sp["n_edges"]
+        batch_structs = {
+            "x": common.struct((bsz, n, sp["d_feat"]), jnp.float32),
+            "edge_src": common.struct((bsz, e), jnp.int32),
+            "edge_dst": common.struct((bsz, e), jnp.int32),
+            "node_mask": common.struct((bsz, n), jnp.bool_),
+            "edge_mask": common.struct((bsz, e), jnp.bool_),
+            "labels": common.struct((bsz,), jnp.int32),
+        }
+        bspecs = {k: P(axes.dp) for k in batch_structs}
+
+        def loss_fn(params, b):
+            return gnn.graph_loss(params, cfg, b["x"], b["edge_src"],
+                                  b["edge_dst"], b["node_mask"],
+                                  b["labels"], b["edge_mask"])
+
+        d_h = cfg.d_hidden
+        fwd = bsz * (2 * n * sp["d_feat"] * d_h
+                     + cfg.n_layers * (4 * n * d_h * d_h + e * d_h))
+        meta = dict(model_flops=3.0 * fwd, scan_trip_count=1,
+                    params=cfg.param_count(), tokens=bsz)
+
+    step = common.simple_train_step(loss_fn, opt)
+    return common.StepBundle(
+        arch="gin-tu", shape=shape, kind="train", step_fn=step,
+        arg_structs=(param_structs, opt_structs, batch_structs),
+        in_specs=(pspecs, ospecs, bspecs),
+        out_specs=(pspecs, ospecs, None),
+        donate_argnums=(0, 1),
+        meta=meta,
+    )
+
+
+ARCH = common.register(common.ArchDef(
+    arch_id="gin-tu", family="gnn", shapes=tuple(SHAPE_PARAMS),
+    make_config=full_config, make_smoke_config=smoke_config,
+    build_bundle=build_bundle,
+    notes="segment_sum message passing; TopLoc inapplicable (no ANN)"))

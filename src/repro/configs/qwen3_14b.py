@@ -1,0 +1,31 @@
+"""qwen3-14b [hf:Qwen/Qwen3-*; hf]
+
+40L d_model=5120 40H (GQA kv=8) d_head=128 d_ff=17408 vocab=151936,
+qk-norm (per-head RMSNorm on q and k — the qwen3 signature), SwiGLU.
+"""
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models.transformer import LMConfig
+
+
+def full_config() -> LMConfig:
+    return LMConfig(
+        name="qwen3-14b", n_layers=40, d_model=5120, n_heads=40,
+        n_kv_heads=8, d_head=128, d_ff=17408, vocab=151936,
+        qk_norm=True,
+        param_dtype=jnp.bfloat16, dtype=jnp.bfloat16,
+        remat=True, loss_chunk=512,
+    )
+
+
+def smoke_config() -> LMConfig:
+    return LMConfig(
+        name="qwen3-14b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, vocab=512, qk_norm=True,
+        remat=False, loss_chunk=16,
+    )
+
+
+ARCH = common.lm_archdef("qwen3-14b", full_config, smoke_config,
+                         notes="dense, GQA kv=8, qk_norm")

@@ -1,0 +1,309 @@
+"""two-tower-retrieval [RecSys'19 (YouTube); unverified]
+
+embed_dim=256, tower MLP 1024-512-256, dot interaction, in-batch sampled
+softmax. User/item tables row-sharded over ``model``.
+
+THE paper-representative architecture: ``retrieval_cand`` (1 query vs
+10⁶ candidates) is the exact serving problem TopLoc accelerates — the
+benchmark harness runs this cell both brute-force (the bundle below) and
+through TopLoc_IVF over the item corpus (benchmarks/table1.py,
+examples/recsys_retrieval.py). This is hillclimb cell #1 (§Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as SH
+from repro.models import recsys as R
+from repro.optim import optimizers as OPT
+from repro.optim import schedules as SCHED
+
+SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=1_000_000,
+                           k=100),
+}
+
+
+SMOKE_SHAPE_PARAMS: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=4096),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=8192),
+    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=65536,
+                           k=100),
+}
+
+
+def full_config() -> R.TwoTowerConfig:
+    return R.TwoTowerConfig(user_vocab=1_048_576, item_vocab=2_097_152,
+                            history_len=50)
+
+
+def smoke_config() -> R.TwoTowerConfig:
+    return R.TwoTowerConfig(embed_dim=16, tower_mlp=(32, 16),
+                            user_vocab=512, item_vocab=1024,
+                            history_len=5)
+
+
+def build_bundle(cfg: R.TwoTowerConfig, shape: str, axes: SH.Axes, *,
+                 n_dp: int = 1, smoke: bool = False,
+                 shape_overrides=None, **kw) -> common.StepBundle:
+    sp = dict(SMOKE_SHAPE_PARAMS[shape] if smoke else SHAPE_PARAMS[shape])
+    sp.update(shape_overrides or {})
+    b = sp["batch"]
+    param_structs = jax.eval_shape(
+        lambda: R.two_tower_init(cfg, jax.random.PRNGKey(0)))
+    pspecs = SH.two_tower_param_specs(cfg, axes)
+    dp = axes.dp
+    dense_flops = 2.0 * sum(
+        a * bb for a, bb in zip((2 * cfg.embed_dim,) + cfg.tower_mlp[:-1],
+                                cfg.tower_mlp)) + 2.0 * sum(
+        a * bb for a, bb in zip((cfg.embed_dim,) + cfg.tower_mlp[:-1],
+                                cfg.tower_mlp))
+
+    if sp["kind"] == "train":
+        opt = OPT.adamw(SCHED.constant(1e-3))
+        opt_structs = jax.eval_shape(opt.init, param_structs)
+        ospecs = SH.lm_opt_specs("adamw", pspecs)
+        batch_structs = {
+            "user_id": common.struct((b,), jnp.int32),
+            "item_id": common.struct((b,), jnp.int32),
+            "history": common.struct((b, cfg.history_len), jnp.int32),
+        }
+        bspecs = {k: P(dp) if v.ndim == 1 else P(dp, None)
+                  for k, v in batch_structs.items()}
+
+        def loss_fn(params, batch):
+            return R.two_tower_loss(params, cfg, batch)
+
+        step = common.simple_train_step(loss_fn, opt)
+        return common.StepBundle(
+            arch="two-tower-retrieval", shape=shape, kind="train",
+            step_fn=step,
+            arg_structs=(param_structs, opt_structs, batch_structs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, None), donate_argnums=(0, 1),
+            meta=dict(model_flops=3.0 * b * dense_flops
+                      + 2.0 * b * b * cfg.tower_mlp[-1],  # in-batch logits
+                      scan_trip_count=1, params=cfg.param_count(),
+                      tokens=b))
+
+    # serve deployments replicate ALL params (tables are a few GB,
+    # dense layers are MBs — affordable per inference replica): pure
+    # data-parallel inference with ZERO per-request collectives. The
+    # first attempt replicated only the tables, but the Megatron-TP
+    # tower MLP all-reduce then dominated (§Perf hillclimb 4 log).
+    # Training keeps row-sharded tables + TP (optimizer state for the
+    # tables must stay distributed).
+    if sp["kind"] == "serve" and sp.get("replicate_params", True):
+        pspecs = common.replicate_specs(param_structs)
+
+    if shape == "retrieval_cand":
+        n_cand, k = sp["n_candidates"], sp["k"]
+        e = cfg.tower_mlp[-1]
+        variant = sp.get("variant", "brute")
+
+        if variant == "toploc_ivf_dist":
+            # combined: TopLoc centroid-cache pruning + shard-local list
+            # scan + k-wide merge (hillclimb cell #3 final form)
+            p_parts = sp.get("partitions", 1024)
+            lmax = sp.get("lmax", (n_cand // p_parts) * 5 // 4)
+            h = sp.get("h", 128)
+            nprobe = sp.get("nprobe", 32)
+
+            def serve_step(params, user_id, history, list_vecs, list_ids,
+                           cache_vecs, cache_ids):
+                from repro.core.topk import distributed_topk
+                u = R.user_tower(params, cfg, user_id, history)  # (1, e)
+                csc = u @ cache_vecs.T
+                _, sel_local = jax.lax.top_k(csc, nprobe)
+                sel = cache_ids[sel_local]                       # (1, np)
+
+                # per-shard slot cap: selected lists spread ~uniformly
+                # over shards (Poisson λ = np/shards); 2λ+2 slots bound
+                # the overflow-drop probability to a few percent — the
+                # same bounded-spill philosophy as the balanced k-means
+                # build. Each shard gathers/scans only `cap` lists
+                # instead of all `nprobe` masked (16x less work/HBM).
+                shards = sp.get("shards", 16)
+                cap = sp.get("shard_cap",
+                             max(2 * nprobe // shards + 2, 2))
+
+                def local(lv, li, q, s):
+                    p_local = lv.shape[0]
+                    shard = jax.lax.axis_index(axes.model)
+                    s_loc = s[0] - shard * p_local               # (np,)
+                    own = (s_loc >= 0) & (s_loc < p_local)
+                    # owned-first ordering, take the first `cap` slots
+                    order = jnp.argsort(~own)[:cap]
+                    s_cap = jnp.clip(s_loc[order], 0, p_local - 1)
+                    own_cap = own[order]
+                    lvs = lv[s_cap]                              # (cap,L,e)
+                    lis = jnp.where(own_cap[:, None], li[s_cap], -1)
+                    sc = jnp.einsum("bd,nld->bnl", q, lvs)
+                    sc = jnp.where(lis[None] >= 0, sc, -jnp.inf)
+                    v, pos = jax.lax.top_k(sc.reshape(1, -1), k)
+                    ids = jnp.take_along_axis(lis.reshape(1, -1), pos,
+                                              axis=-1)
+                    return distributed_topk(v, ids, k, axes.model)
+
+                return jax.shard_map(
+                    local,
+                    in_specs=(P(axes.model, None, None),
+                              P(axes.model, None), P(None, None),
+                              P(None, None)),
+                    out_specs=(P(None, None), P(None, None)),
+                    check_vma=False,
+                )(list_vecs, list_ids, u, sel)
+
+            arg_structs = (param_structs,
+                           common.struct((b,), jnp.int32),
+                           common.struct((b, cfg.history_len), jnp.int32),
+                           common.struct((p_parts, lmax, e), jnp.float32),
+                           common.struct((p_parts, lmax), jnp.int32),
+                           common.struct((h, e), jnp.float32),
+                           common.struct((h,), jnp.int32))
+            work = h * e + nprobe * lmax * e
+            return common.StepBundle(
+                arch="two-tower-retrieval", shape=shape, kind="serve",
+                step_fn=serve_step, arg_structs=arg_structs,
+                in_specs=(pspecs, P(), P(),
+                          P(axes.model, None, None), P(axes.model, None),
+                          P(), P()),
+                out_specs=None,
+                meta=dict(model_flops=dense_flops + 2.0 * work,
+                          scan_trip_count=1, params=cfg.param_count(),
+                          tokens=nprobe * lmax,
+                          note="TopLoc + shard-local scan + k-merge"))
+
+        if variant == "toploc_ivf":
+            # the paper's technique on this arch: the item corpus is IVF-
+            # clustered offline; the serving step scores the conversation
+            # session's cached centroids (h << p), scans the selected
+            # posting lists (sharded by partition over `model`), and
+            # merges per-shard top-k — work drops from N to
+            # h + nprobe·Lmax per request (DESIGN.md §4).
+            p_parts = sp.get("partitions", 1024)
+            lmax = sp.get("lmax", (n_cand // p_parts) * 5 // 4)
+            h = sp.get("h", 128)
+            nprobe = sp.get("nprobe", 32)
+
+            def serve_step(params, user_id, history, list_vecs, list_ids,
+                           cache_vecs, cache_ids):
+                u = R.user_tower(params, cfg, user_id, history)  # (1, e)
+                csc = u @ cache_vecs.T                           # (1, h)
+                _, sel_local = jax.lax.top_k(csc, nprobe)
+                sel = cache_ids[sel_local]                       # (1, np)
+                lv = list_vecs[sel[0]]                           # (np,L,e)
+                li = list_ids[sel[0]]
+                scores = jnp.einsum("nld,bd->bnl", lv, u)
+                scores = jnp.where(li[None] >= 0, scores, -jnp.inf)
+                flat = scores.reshape(1, -1)
+                v, pos = jax.lax.top_k(flat, k)
+                ids = jnp.take_along_axis(
+                    li.reshape(1, -1), pos, axis=-1)
+                return v, ids
+
+            arg_structs = (param_structs,
+                           common.struct((b,), jnp.int32),
+                           common.struct((b, cfg.history_len), jnp.int32),
+                           common.struct((p_parts, lmax, e), jnp.float32),
+                           common.struct((p_parts, lmax), jnp.int32),
+                           common.struct((h, e), jnp.float32),
+                           common.struct((h,), jnp.int32))
+            work = h * e + nprobe * lmax * e
+            return common.StepBundle(
+                arch="two-tower-retrieval", shape=shape, kind="serve",
+                step_fn=serve_step, arg_structs=arg_structs,
+                in_specs=(pspecs, P(), P(),
+                          P(axes.model, None, None), P(axes.model, None),
+                          P(), P()),
+                out_specs=None,
+                meta=dict(model_flops=dense_flops + 2.0 * work,
+                          scan_trip_count=1, params=cfg.param_count(),
+                          tokens=nprobe * lmax,
+                          note="TopLoc_IVF-pruned candidate scan "
+                               "(hillclimb cell #3, paper technique)"))
+
+        if variant == "dist_topk":
+            # beyond-paper: per-shard top-k + k-wide merge instead of
+            # letting XLA all-gather the (1, N) score row
+
+            def serve_step(params, user_id, history, corpus):
+                u = R.user_tower(params, cfg, user_id, history)
+                # shard_map resolves the mesh from jax.set_mesh context
+                from repro.core.topk import distributed_topk
+
+                def local(corpus_l, u_l):
+                    n_local = corpus_l.shape[0]
+                    idx = jax.lax.axis_index(axes.model)
+                    scores = u_l @ corpus_l.T
+                    v, i = jax.lax.top_k(scores, k)
+                    gids = i.astype(jnp.int32) + idx * n_local
+                    return distributed_topk(v, gids, k, axes.model)
+
+                return jax.shard_map(
+                    local,
+                    in_specs=(P(axes.model, None), P(None, None)),
+                    out_specs=(P(None, None), P(None, None)),
+                    check_vma=False,  # replicated post k-merge
+                )(corpus, u)
+
+        else:
+            def serve_step(params, user_id, history, corpus):
+                u = R.user_tower(params, cfg, user_id, history)  # (1, e)
+                scores = u @ corpus.T                            # (1, N)
+                return jax.lax.top_k(scores, k)
+
+        arg_structs = (param_structs,
+                       common.struct((b,), jnp.int32),
+                       common.struct((b, cfg.history_len), jnp.int32),
+                       common.struct((n_cand, e), jnp.float32))
+        return common.StepBundle(
+            arch="two-tower-retrieval", shape=shape, kind="serve",
+            step_fn=serve_step,
+            arg_structs=arg_structs,
+            in_specs=(pspecs, P(), P(), P(axes.model, None)),
+            out_specs=None,
+            meta=dict(model_flops=dense_flops + 2.0 * n_cand * e,
+                      scan_trip_count=1, params=cfg.param_count(),
+                      tokens=n_cand,
+                      note=f"variant={variant}; TopLoc_IVF variant via "
+                           "shape_overrides (hillclimb cell #3)"))
+
+    # pairwise serve (p99 / bulk)
+    def serve_step(params, user_id, history, item_id):
+        u = R.user_tower(params, cfg, user_id, history)
+        i = R.item_tower(params, cfg, item_id)
+        return jnp.sum(u * i, -1)
+
+    # pure-DP serving: the idle model axis takes batch shards too
+    flat = axes.data + (axes.model,)
+    arg_structs = (param_structs,
+                   common.struct((b,), jnp.int32),
+                   common.struct((b, cfg.history_len), jnp.int32),
+                   common.struct((b,), jnp.int32))
+    return common.StepBundle(
+        arch="two-tower-retrieval", shape=shape, kind="serve",
+        step_fn=serve_step,
+        arg_structs=arg_structs,
+        in_specs=(pspecs, P(flat), P(flat, None), P(flat)),
+        out_specs=None,
+        meta=dict(model_flops=b * dense_flops, scan_trip_count=1,
+                  params=cfg.param_count(), tokens=b))
+
+
+ARCH = common.register(common.ArchDef(
+    arch_id="two-tower-retrieval", family="recsys",
+    shapes=tuple(SHAPE_PARAMS),
+    make_config=full_config, make_smoke_config=smoke_config,
+    build_bundle=build_bundle,
+    notes="paper-representative arch: retrieval_cand == TopLoc's serving "
+          "problem"))

@@ -1,0 +1,11 @@
+"""Core library: TopLoc (the paper's contribution) + the ANN substrate.
+
+Public API:
+  ivf      — bucketed-padded IVF index (build / search / search_cached)
+  hnsw     — HNSW index (host build, JAX beam-query)
+  toploc   — TopLoc sessions: centroid cache, |I0| refresh, entry points
+  kmeans   — distributed balanced k-means (index build substrate)
+  topk     — top-k select/merge utilities incl. distributed merge
+  pq       — product-quantised posting lists (IVF-PQ, beyond-paper)
+"""
+from repro.core import hnsw, ivf, kmeans, pq, topk, toploc  # noqa: F401

@@ -1,0 +1,271 @@
+"""HNSW index — host-side (numpy) build, TPU-native (JAX) query path.
+
+Build follows Malkov & Yashunin (the paper's [14]): probabilistic level
+assignment (ml = 1/ln(M)), ef_construction beam insertion, bidirectional
+links, degree cap 2M at level 0 / M above.  Index *construction* is an
+offline pipeline step and runs on host; the *query* path — the part the
+paper accelerates — is pure JAX.
+
+TPU adaptation (DESIGN.md §2): the greedy candidate-list traversal is
+re-expressed as a fixed-width beam over padded adjacency tensors:
+
+  * adjacency: level 0 ``(n, 2M) int32`` (-1 pad), upper levels stacked
+    ``(L, n, M) int32`` — regular gathers, no pointer chasing;
+  * candidate heap → sorted ``(ef,)`` register tile, merged with top-k;
+  * visited hash-set → dense ``(n,)`` bool bitmap;
+  * the classic termination test ("best unexpanded candidate is worse
+    than the worst result") is the ``while_loop`` predicate, so the
+    data-dependent early exit — which TopLoc's privileged entry point
+    makes fire sooner — is preserved.
+
+Distance-computation counters are carried through the loop and returned
+per query; they are the hardware-independent cost evidence for Table 1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class HNSWIndex(NamedTuple):
+    vectors: jax.Array      # (n, d) float32
+    adj0: jax.Array         # (n, 2M) int32, -1 padded — level-0 graph
+    upper_adj: jax.Array    # (L, n, M) int32, -1 padded — levels 1..L (bottom→top)
+    entry_point: jax.Array  # () int32 — node at the top level
+    node_level: jax.Array   # (n,) int32 — max level of each node
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def top_level(self) -> int:
+        return self.upper_adj.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Host-side build (offline indexing step)
+# ---------------------------------------------------------------------------
+
+def build(vectors, m: int = 16, ef_construction: int = 64,
+          seed: int = 0) -> HNSWIndex:
+    """Standard HNSW insertion, numpy. O(n·ef·M·hops) — offline."""
+    x = np.asarray(vectors, np.float32)
+    n, d = x.shape
+    rng = np.random.default_rng(seed)
+    ml = 1.0 / np.log(max(m, 2))
+    levels = np.minimum((-np.log(rng.uniform(1e-12, 1.0, n)) * ml).astype(np.int64), 12)
+    top = int(levels.max()) if n else 0
+
+    m0 = 2 * m
+    adj = [np.full((n, m0 if l == 0 else m), -1, np.int32) for l in range(top + 1)]
+    deg = [np.zeros(n, np.int32) for _ in range(top + 1)]
+    entry, entry_level = 0, int(levels[0])
+
+    def sims_to(q, ids):
+        return x[ids] @ q
+
+    def greedy(q, start, level):
+        cur, cur_s = start, float(x[start] @ q)
+        while True:
+            nbrs = adj[level][cur]
+            nbrs = nbrs[nbrs >= 0]
+            if nbrs.size == 0:
+                return cur, cur_s
+            s = sims_to(q, nbrs)
+            j = int(np.argmax(s))
+            if s[j] > cur_s:
+                cur, cur_s = int(nbrs[j]), float(s[j])
+            else:
+                return cur, cur_s
+
+    def search_layer(q, start, level, ef):
+        """Classic ef-beam search; returns (ids, sims) sorted desc."""
+        visited = {start}
+        s0 = float(x[start] @ q)
+        cand = [(s0, start)]        # max-candidates (python list, small)
+        result = [(s0, start)]
+        while cand:
+            cand.sort(key=lambda t: -t[0])
+            c_s, c = cand.pop(0)
+            w_s = min(r[0] for r in result)
+            if c_s < w_s and len(result) >= ef:
+                break
+            nbrs = adj[level][c]
+            nbrs = [int(v) for v in nbrs if v >= 0 and v not in visited]
+            if not nbrs:
+                continue
+            visited.update(nbrs)
+            s = sims_to(q, np.asarray(nbrs, np.int64))
+            for sv, nid in zip(s, nbrs):
+                if len(result) < ef or sv > min(r[0] for r in result):
+                    cand.append((float(sv), nid))
+                    result.append((float(sv), nid))
+                    if len(result) > ef:
+                        result.remove(min(result))
+        result.sort(key=lambda t: -t[0])
+        return result
+
+    def connect(src, dst_list, level):
+        cap = m0 if level == 0 else m
+        for dst in dst_list:
+            for a, b in ((src, dst), (dst, src)):
+                if deg[level][a] < cap:
+                    adj[level][a, deg[level][a]] = b
+                    deg[level][a] += 1
+                else:  # shrink: keep the `cap` nearest neighbours
+                    cur = adj[level][a][: deg[level][a]].tolist() + [b]
+                    s = sims_to(x[a], np.asarray(cur, np.int64))
+                    keep = np.argsort(-s)[:cap]
+                    adj[level][a, :cap] = np.asarray(cur, np.int32)[keep]
+                    deg[level][a] = cap
+
+    for i in range(1, n):
+        q = x[i]
+        l_i = int(levels[i])
+        cur = entry
+        for level in range(entry_level, l_i, -1):
+            cur, _ = greedy(q, cur, level)
+        for level in range(min(l_i, entry_level), -1, -1):
+            res = search_layer(q, cur, level, ef_construction)
+            nbr = [nid for _, nid in res[: (m0 if level == 0 else m)]]
+            connect(i, nbr, level)
+            cur = res[0][1]
+        if l_i > entry_level:
+            entry, entry_level = i, l_i
+
+    upper = (np.stack([a[:, :m] for a in adj[1:]], 0)
+             if top >= 1 else np.zeros((0, n, m), np.int32))
+    return HNSWIndex(
+        vectors=jnp.asarray(x),
+        adj0=jnp.asarray(adj[0]),
+        upper_adj=jnp.asarray(upper),
+        entry_point=jnp.asarray(entry, jnp.int32),
+        node_level=jnp.asarray(levels, jnp.int32),
+    )
+
+
+def save(index: HNSWIndex, path: str) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in index._asdict().items()})
+
+
+def load(path: str) -> HNSWIndex:
+    z = np.load(path)
+    return HNSWIndex(**{k: jnp.asarray(z[k]) for k in z.files})
+
+
+# ---------------------------------------------------------------------------
+# JAX query path
+# ---------------------------------------------------------------------------
+
+def _greedy_level(vectors, adj, q, cur, cur_s, ndist):
+    """Greedy hill-climb on one level (vectorised neighbour expansion)."""
+    def cond(st):
+        _, _, _, improved = st
+        return improved
+
+    def body(st):
+        cur, cur_s, ndist, _ = st
+        nbrs = adj[cur]                              # (deg,)
+        valid = nbrs >= 0
+        vecs = vectors[jnp.maximum(nbrs, 0)]
+        s = jnp.where(valid, vecs @ q, -jnp.inf)
+        j = jnp.argmax(s)
+        better = s[j] > cur_s
+        ndist = ndist + jnp.sum(valid.astype(jnp.int32))
+        return (jnp.where(better, nbrs[j], cur),
+                jnp.where(better, s[j], cur_s),
+                ndist, better)
+
+    cur, cur_s, ndist, _ = jax.lax.while_loop(
+        cond, body, (cur, cur_s, ndist, jnp.asarray(True)))
+    return cur, cur_s, ndist
+
+
+def _search_layer0(vectors, adj0, q, entry, ef: int, max_steps: int):
+    """Fixed-width beam realisation of the ef-search candidate loop."""
+    n = vectors.shape[0]
+    entry_s = vectors[entry] @ q
+    cand_v = jnp.full((ef,), -jnp.inf).at[0].set(entry_s)
+    cand_i = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
+    expanded = jnp.zeros((ef,), bool)
+    visited = jnp.zeros((n,), bool).at[entry].set(True)
+    ndist = jnp.asarray(1, jnp.int32)
+
+    def cond(st):
+        cand_v, cand_i, expanded, visited, ndist, step = st
+        unexp = (~expanded) & (cand_i >= 0)
+        any_unexp = jnp.any(unexp)
+        best_unexp = jnp.max(jnp.where(unexp, cand_v, -jnp.inf))
+        worst = jnp.min(jnp.where(cand_i >= 0, cand_v, jnp.inf))
+        full = jnp.sum((cand_i >= 0).astype(jnp.int32)) >= ef
+        # classic HNSW stop: nothing promising left to expand
+        go = any_unexp & ~(full & (best_unexp < worst))
+        return go & (step < max_steps)
+
+    def body(st):
+        cand_v, cand_i, expanded, visited, ndist, step = st
+        unexp = (~expanded) & (cand_i >= 0)
+        pick = jnp.argmax(jnp.where(unexp, cand_v, -jnp.inf))
+        node = cand_i[pick]
+        expanded = expanded.at[pick].set(True)
+        nbrs = adj0[node]                            # (2M,)
+        ok = (nbrs >= 0) & ~visited[jnp.maximum(nbrs, 0)]
+        vecs = vectors[jnp.maximum(nbrs, 0)]
+        s = jnp.where(ok, vecs @ q, -jnp.inf)
+        ndist = ndist + jnp.sum(ok.astype(jnp.int32))
+        visited = visited.at[jnp.maximum(nbrs, 0)].max(ok)
+        # merge new candidates into the beam (expanded flag rides along)
+        all_v = jnp.concatenate([cand_v, s])
+        all_i = jnp.concatenate([cand_i, jnp.where(ok, nbrs, -1)])
+        all_e = jnp.concatenate([expanded, jnp.zeros_like(ok)])
+        top_v, pos = jax.lax.top_k(all_v, ef)
+        return (top_v, all_i[pos], all_e[pos], visited, ndist, step + 1)
+
+    cand_v, cand_i, expanded, visited, ndist, _ = jax.lax.while_loop(
+        cond, body, (cand_v, cand_i, expanded, visited, ndist,
+                     jnp.asarray(0, jnp.int32)))
+    return cand_v, cand_i, ndist
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k", "use_entry_override"))
+def search(index: HNSWIndex, queries: jax.Array, *, ef: int, k: int,
+           entry_override: Optional[jax.Array] = None,
+           use_entry_override: bool = False,
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batch HNSW search. queries: (B, d).
+
+    Plain HNSW: hierarchy descent from the global entry point, then the
+    level-0 ef-beam.  TopLoc_HNSW: ``use_entry_override=True`` starts the
+    level-0 beam directly at ``entry_override`` (the conversation's
+    privileged entry point), skipping the descent — the paper's saving.
+
+    Returns (scores (B,k), ids (B,k), ndist (B,) int32).
+    """
+    max_steps = 4 * ef + 16
+
+    def one(q, override):
+        ndist = jnp.asarray(0, jnp.int32)
+        if use_entry_override:
+            start = override
+        else:
+            cur = index.entry_point
+            cur_s = index.vectors[cur] @ q
+            ndist = ndist + 1
+            L = index.top_level
+            for lvl in range(L - 1, -1, -1):   # top level → level 1
+                cur, cur_s, ndist = _greedy_level(
+                    index.vectors, index.upper_adj[lvl], q, cur, cur_s, ndist)
+            start = cur
+        cand_v, cand_i, nd0 = _search_layer0(
+            index.vectors, index.adj0, q, start, ef, max_steps)
+        top_v, pos = jax.lax.top_k(cand_v, k)
+        return top_v, cand_i[pos], ndist + nd0
+
+    if entry_override is None:
+        entry_override = jnp.zeros((queries.shape[0],), jnp.int32)
+    return jax.vmap(one)(queries, entry_override)

@@ -1,0 +1,120 @@
+"""Top-k selection and merge utilities.
+
+Everything here operates on *similarity scores* (higher is better), matching
+the paper's use of the dot product as the similarity measure (TopLoc §2,
+footnote 1).  All functions are jit-safe and differentiable-free (top-k has
+no gradient; these are serving-path ops).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def topk(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k over the last axis. Returns (values, indices), sorted desc."""
+    return jax.lax.top_k(scores, k)
+
+
+def masked_topk(scores: jax.Array, mask: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k over the last axis ignoring positions where ``mask`` is False."""
+    neg = jnp.asarray(-jnp.inf, scores.dtype)
+    return jax.lax.top_k(jnp.where(mask, scores, neg), k)
+
+
+def merge_topk(
+    values_a: jax.Array,
+    ids_a: jax.Array,
+    values_b: jax.Array,
+    ids_b: jax.Array,
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge two (values, ids) top-k lists into a single top-k list.
+
+    Works on the last axis; leading axes broadcast. Ties are broken by
+    whichever side sorts first in lax.top_k (stable enough for our use —
+    ids are unique across sides by construction in the ivf/hnsw callers).
+    """
+    v = jnp.concatenate([values_a, values_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1)
+    top_v, pos = jax.lax.top_k(v, k)
+    top_i = jnp.take_along_axis(i, pos, axis=-1)
+    return top_v, top_i
+
+
+def distributed_topk(
+    local_values: jax.Array,
+    local_ids: jax.Array,
+    k: int,
+    axis_name: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Global top-k across a mesh axis from per-shard top-k lists.
+
+    Inside ``shard_map``: each shard passes its local top-k (already reduced
+    to k entries — so the all_gather moves only ``k * axis_size`` entries,
+    not the full candidate set). Returns identical (values, ids) on every
+    shard.
+    """
+    all_v = jax.lax.all_gather(local_values, axis_name, axis=-1, tiled=True)
+    all_i = jax.lax.all_gather(local_ids, axis_name, axis=-1, tiled=True)
+    top_v, pos = jax.lax.top_k(all_v, k)
+    top_i = jnp.take_along_axis(all_i, pos, axis=-1)
+    return top_v, top_i
+
+
+def intersect_count(ids_a: jax.Array, ids_b: jax.Array) -> jax.Array:
+    """|set(ids_a) ∩ set(ids_b)| for 1-D id vectors (entries assumed unique
+    within each vector; -1 entries are treated as padding and ignored).
+
+    This is the paper's ``|I0|`` computation (Eq. 1). Cost is
+    O(|a|·|b|) elementwise on the VPU — with np ≤ 4096 this is trivia
+    compared to a single centroid scan, which is the point of the proxy.
+    """
+    a = ids_a[:, None]
+    b = ids_b[None, :]
+    eq = (a == b) & (a >= 0)
+    return jnp.sum(jnp.any(eq, axis=1).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def streaming_topk(scores: jax.Array, k: int, block: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """Block-streaming top-k over a long last axis.
+
+    Equivalent to ``jax.lax.top_k(scores, k)`` but processes ``scores`` in
+    blocks, carrying a running (k,) register tile — the same schedule the
+    Pallas ``centroid_topk`` kernel uses, exposed as a pure-jnp op so the
+    host path and the kernel share a reference.
+    """
+    n = scores.shape[-1]
+    pad = (-n) % block
+    if pad:
+        neg = jnp.full(scores.shape[:-1] + (pad,), -jnp.inf, scores.dtype)
+        scores = jnp.concatenate([scores, neg], axis=-1)
+    nblk = scores.shape[-1] // block
+    blocks = scores.reshape(scores.shape[:-1] + (nblk, block))
+
+    def body(carry, xs):
+        run_v, run_i = carry
+        blk_scores, blk_start = xs
+        v, i = jax.lax.top_k(blk_scores, min(k, block))
+        i = i + blk_start
+        if k > block:  # pad the block's partial list up to k
+            padv = jnp.full(blk_scores.shape[:-1] + (k - block,), -jnp.inf, blk_scores.dtype)
+            padi = jnp.full(blk_scores.shape[:-1] + (k - block,), -1, i.dtype)
+            v = jnp.concatenate([v, padv], axis=-1)
+            i = jnp.concatenate([i, padi], axis=-1)
+        mv, mi = merge_topk(run_v, run_i, v, i, k)
+        return (mv, mi), None
+
+    init_v = jnp.full(scores.shape[:-2] + (k,), -jnp.inf, scores.dtype)
+    init_i = jnp.full(scores.shape[:-2] + (k,), -1, jnp.int32)
+    blk_axis = -2 if scores.ndim > 1 else 0
+    blocks_first = jnp.moveaxis(blocks, blk_axis, 0)
+    starts = jnp.arange(nblk, dtype=jnp.int32) * block
+    (v, i), _ = jax.lax.scan(body, (init_v, init_i), (blocks_first, starts))
+    return v, i

@@ -1,0 +1,245 @@
+"""TopLoc — the paper's contribution (§2), as a composable JAX module.
+
+Three mechanisms, each a pure function over an explicit session pytree so
+they vmap over concurrently-served conversations and jit into the serving
+step:
+
+  * ``ivf_start`` / ``ivf_step``   — TopLoc_IVF / TopLoc_IVF+ centroid
+    caching with the |I0| drift proxy (Eq. 1) and α·np refresh trigger.
+  * ``hnsw_start`` / ``hnsw_step`` — TopLoc_HNSW privileged entry point
+    with the ``up`` first-turn ef upscaling.
+  * ``conversation_scan``          — run a whole conversation under
+    ``lax.scan`` (benchmark harness path).
+
+Work accounting: every step returns a ``TurnStats`` whose fields mirror
+the paper's cost model — centroid distances (p for a full scan, h for a
+cached one), posting-list distances, graph distances.  Speedups in
+benchmarks/ are computed from these counters *and* wall-clock.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw as _hnsw
+from repro.core import ivf as _ivf
+from repro.core.topk import intersect_count, masked_topk
+
+
+class IVFSession(NamedTuple):
+    """Per-conversation TopLoc_IVF state (device resident)."""
+    cache_ids: jax.Array    # (h,) int32 — global centroid ids of C0
+    cache_vecs: jax.Array   # (h, d)     — gathered centroid vectors
+    anchor_sel: jax.Array   # (np,) int32 — top_np(q0, C0), for Eq. 1
+    refreshes: jax.Array    # () int32
+    turn: jax.Array         # () int32
+
+
+class HNSWSession(NamedTuple):
+    """Per-conversation TopLoc_HNSW state."""
+    entry_point: jax.Array  # () int32 — privileged entry node
+    turn: jax.Array         # () int32
+
+
+class TurnStats(NamedTuple):
+    centroid_dists: jax.Array  # () int32
+    list_dists: jax.Array      # () int32
+    graph_dists: jax.Array     # () int32
+    i0: jax.Array              # () int32 — |I0| (IVF+ only; -1 otherwise)
+    refreshed: jax.Array       # () bool
+
+
+def _zero_stats() -> TurnStats:
+    z = jnp.asarray(0, jnp.int32)
+    return TurnStats(z, z, z, jnp.asarray(-1, jnp.int32), jnp.asarray(False))
+
+
+# ---------------------------------------------------------------------------
+# TopLoc_IVF / TopLoc_IVF+
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k"))
+def ivf_start(index: _ivf.IVFIndex, q0: jax.Array, *, h: int, nprobe: int,
+              k: int) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
+    """First utterance: full centroid scan, build C0 = top_h(q0, C), answer.
+
+    Returns (scores (k,), doc_ids (k,), session, stats).
+    """
+    cache_ids, cache_vecs = _ivf.make_cache(index, q0, h=h)
+    # top_np(q0, C0) == top_np(q0, C) since C0 holds q0's h best centroids
+    anchor_sel = cache_ids[:nprobe]
+    top_v, top_i, real = _ivf._scan_lists(index, q0[None], anchor_sel[None], k)
+    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
+                      jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
+    stats = TurnStats(
+        centroid_dists=jnp.asarray(index.p, jnp.int32),
+        list_dists=real[0],
+        graph_dists=jnp.asarray(0, jnp.int32),
+        i0=jnp.asarray(-1, jnp.int32),
+        refreshed=jnp.asarray(True),
+    )
+    return top_v[0], top_i[0], sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha"))
+def ivf_step(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
+             nprobe: int, k: int, alpha: float = -1.0
+             ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
+    """Follow-up utterance.
+
+    ``alpha < 0``  → TopLoc_IVF  (static cache, never refreshed)
+    ``alpha >= 0`` → TopLoc_IVF+ (refresh when |I0| < α·np, Eq. 1)
+
+    The drift check runs *before* any posting list is scanned, so a
+    refreshed turn pays (h + p) centroid distances but only one list scan.
+    """
+    h = sess.cache_ids.shape[0]
+    # 1. centroid selection against the cached set C0  (cost: h)
+    csims = sess.cache_vecs @ q                      # (h,)
+    _, sel_local = jax.lax.top_k(csims, nprobe)
+    sel_cached = sess.cache_ids[sel_local]           # (np,) global ids
+
+    # 2. drift proxy |I0| = |top_np(qj, C0) ∩ top_np(q0, C0)|   (Eq. 1)
+    i0 = intersect_count(sel_cached, sess.anchor_sel)
+    need_refresh = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
+
+    # 3. optional refresh: rescan the full centroid set, re-anchor on qj
+    def refreshed(_):
+        cache_ids, cache_vecs = _ivf.make_cache(index, q, h=h)
+        return cache_ids, cache_vecs, cache_ids[:nprobe], cache_ids[:nprobe]
+
+    def kept(_):
+        return sess.cache_ids, sess.cache_vecs, sess.anchor_sel, sel_cached
+
+    cache_ids, cache_vecs, anchor_sel, sel = jax.lax.cond(
+        need_refresh, refreshed, kept, None)
+
+    # 4. one posting-list scan with the final selection
+    top_v, top_i, real = _ivf._scan_lists(index, q[None], sel[None], k)
+
+    new_sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
+                          sess.refreshes + need_refresh.astype(jnp.int32),
+                          sess.turn + 1)
+    stats = TurnStats(
+        centroid_dists=jnp.asarray(h, jnp.int32)
+        + need_refresh.astype(jnp.int32) * index.p,
+        list_dists=real[0],
+        graph_dists=jnp.asarray(0, jnp.int32),
+        i0=i0,
+        refreshed=need_refresh,
+    )
+    return top_v[0], top_i[0], new_sess, stats
+
+
+# ---------------------------------------------------------------------------
+# TopLoc_HNSW
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up"))
+def hnsw_start(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int, k: int,
+               up: int = 2) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
+    """First utterance: plain HNSW with an upscaled candidate list
+    (up · ef_search) so the privileged entry point is reliable."""
+    v, i, nd = _hnsw.search(index, q0[None], ef=up * ef, k=k)
+    sess = HNSWSession(entry_point=i[0, 0].astype(jnp.int32),
+                       turn=jnp.asarray(1, jnp.int32))
+    stats = _zero_stats()._replace(graph_dists=nd[0],
+                                   refreshed=jnp.asarray(True))
+    return v[0], i[0], sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k", "adaptive"))
+def hnsw_step(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array, *,
+              ef: int, k: int, adaptive: bool = False
+              ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
+    """Follow-up utterance: start the level-0 beam at the privileged entry
+    point — no hierarchy descent (the paper's saving).
+
+    ``adaptive=True`` is a beyond-paper extension: re-anchor the entry
+    point at every turn's top-1 (the paper keeps q0's anchor for the whole
+    conversation).
+    """
+    v, i, nd = _hnsw.search(index, q[None],
+                            ef=ef, k=k,
+                            entry_override=sess.entry_point[None],
+                            use_entry_override=True)
+    new_entry = i[0, 0].astype(jnp.int32) if adaptive else sess.entry_point
+    sess = HNSWSession(entry_point=new_entry, turn=sess.turn + 1)
+    stats = _zero_stats()._replace(graph_dists=nd[0])
+    return v[0], i[0], sess, stats
+
+
+# ---------------------------------------------------------------------------
+# Whole-conversation scan (benchmark path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("h", "nprobe", "k", "alpha", "mode"))
+def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
+                     nprobe: int, k: int, alpha: float = -1.0,
+                     mode: str = "toploc"
+                     ) -> Tuple[jax.Array, jax.Array, TurnStats]:
+    """Run a (T, d) conversation through one IVF strategy.
+
+    mode: 'toploc' (cache; alpha<0 static, alpha>=0 refresh) or 'plain'
+    (full centroid scan every turn — the baseline).
+    Returns (scores (T,k), ids (T,k), stats stacked over turns).
+    """
+    if mode == "plain":
+        def body(carry, q):
+            top_v, top_i, st = _ivf.search(index, q[None], nprobe=nprobe, k=k)
+            stats = TurnStats(jnp.asarray(index.p, jnp.int32),
+                              st.list_dists[0], jnp.asarray(0, jnp.int32),
+                              jnp.asarray(-1, jnp.int32), jnp.asarray(False))
+            return carry, (top_v[0], top_i[0], stats)
+        _, (v, i, stats) = jax.lax.scan(body, 0, utterances)
+        return v, i, stats
+
+    q0, rest = utterances[0], utterances[1:]
+    v0, i0_, sess, st0 = ivf_start(index, q0, h=h, nprobe=nprobe, k=k)
+
+    def body(sess, q):
+        v, i, sess, st = ivf_step(index, sess, q, nprobe=nprobe, k=k,
+                                  alpha=alpha)
+        return sess, (v, i, st)
+
+    _, (v, i, st) = jax.lax.scan(body, sess, rest)
+    v = jnp.concatenate([v0[None], v])
+    i = jnp.concatenate([i0_[None], i])
+    stats = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b]), st0, st)
+    return v, i, stats
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "mode"))
+def hnsw_conversation(index: _hnsw.HNSWIndex, utterances: jax.Array, *,
+                      ef: int, k: int, up: int = 2, mode: str = "toploc"
+                      ) -> Tuple[jax.Array, jax.Array, TurnStats]:
+    """Run a (T, d) conversation through one HNSW strategy.
+
+    mode: 'plain' | 'toploc' (paper: static q0 anchor) | 'adaptive'
+    (beyond-paper: re-anchor the entry point at every turn's top-1).
+    """
+    if mode == "plain":
+        v, i, nd = _hnsw.search(index, utterances, ef=ef, k=k)
+        stats = TurnStats(
+            jnp.zeros_like(nd), jnp.zeros_like(nd), nd,
+            jnp.full_like(nd, -1), jnp.zeros(nd.shape, bool))
+        return v, i, stats
+
+    q0, rest = utterances[0], utterances[1:]
+    v0, i0_, sess, st0 = hnsw_start(index, q0, ef=ef, k=k, up=up)
+    adaptive = mode == "adaptive"
+
+    def body(sess, q):
+        v, i, sess, st = hnsw_step(index, sess, q, ef=ef, k=k,
+                                   adaptive=adaptive)
+        return sess, (v, i, st)
+
+    _, (v, i, st) = jax.lax.scan(body, sess, rest)
+    v = jnp.concatenate([v0[None], v])
+    i = jnp.concatenate([i0_[None], i])
+    stats = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b]), st0, st)
+    return v, i, stats

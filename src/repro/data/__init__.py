@@ -1,0 +1,2 @@
+"""Input pipelines: synthetic CAsT-like workload, tokenizer, graphs."""
+from repro.data import graph, pipeline, synthetic, tokenizer  # noqa: F401

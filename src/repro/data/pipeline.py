@@ -1,0 +1,88 @@
+"""Host→device input pipeline: batching, shuffling, shard-aware feeding.
+
+Deliberately simple and deterministic (seeded) — the point is a real
+pipeline boundary (host numpy → sharded device arrays) with double
+buffering, not a dataset framework.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_iterator(arrays: Dict[str, np.ndarray], batch_size: int, *,
+                   shuffle: bool = True, seed: int = 0,
+                   drop_remainder: bool = True
+                   ) -> Iterator[Dict[str, np.ndarray]]:
+    """Epoch-looping iterator over equally-indexed host arrays."""
+    n = len(next(iter(arrays.values())))
+    rng = np.random.default_rng(seed)
+    while True:
+        idx = rng.permutation(n) if shuffle else np.arange(n)
+        stop = n - (n % batch_size) if drop_remainder else n
+        for s in range(0, stop, batch_size):
+            take = idx[s: s + batch_size]
+            yield {k: v[take] for k, v in arrays.items()}
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh: Optional[Mesh],
+                spec_fn: Optional[Callable[[str, np.ndarray], P]] = None
+                ) -> Dict[str, jax.Array]:
+    """Place a host batch on device(s). Default spec: batch dim over all
+    data-like mesh axes (('pod',) if present, then 'data')."""
+    if mesh is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def default_spec(name: str, arr: np.ndarray) -> P:
+        return P(data_axes) if arr.ndim >= 1 else P()
+
+    spec_fn = spec_fn or default_spec
+    return {
+        k: jax.device_put(v, NamedSharding(mesh, spec_fn(k, v)))
+        for k, v in batch.items()
+    }
+
+
+class Prefetcher:
+    """One-deep background prefetch (overlaps host batch prep with step)."""
+
+    def __init__(self, it: Iterator[Any], depth: int = 2):
+        self._it = it
+        self._q: "collections.deque[Any]" = collections.deque()
+        self._depth = depth
+        self._lock = threading.Lock()
+        self._stop = False
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._sema = threading.Semaphore(0)
+        self._thread.start()
+
+    def _fill(self):
+        for item in self._it:
+            while True:
+                with self._lock:
+                    if len(self._q) < self._depth:
+                        self._q.append(item)
+                        self._sema.release()
+                        break
+                if self._stop:
+                    return
+                threading.Event().wait(0.001)
+            if self._stop:
+                return
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        self._sema.acquire()
+        with self._lock:
+            return self._q.popleft()
+
+    def close(self):
+        self._stop = True

@@ -1,0 +1,2 @@
+"""Mesh/sharding rules, retrieval collectives, fault tolerance, elastic."""
+from repro.distributed import collectives, elastic, fault, sharding  # noqa: F401

@@ -1,0 +1,86 @@
+"""Distributed retrieval collectives (shard_map building blocks).
+
+The serving-scale primitive: posting lists / candidate corpora are
+sharded over the ``model`` axis; each shard reduces its local candidates
+to k entries and a single k-wide all-gather + merge yields the global
+top-k — the collective payload is O(k·shards), independent of corpus
+size (DESIGN.md §2 'Distribution').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.topk import distributed_topk
+
+
+def sharded_corpus_topk(mesh: Mesh, corpus: jax.Array, queries: jax.Array,
+                        k: int, *, axis: str = "model"
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k of ``queries @ corpus.T`` with corpus rows sharded over
+    ``axis``. queries replicated over ``axis``; batch over data axes.
+
+    Returns (scores (B,k), global ids (B,k)) replicated over ``axis``.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def local(corpus_l, queries_l):
+        n_local = corpus_l.shape[0]
+        idx = jax.lax.axis_index(axis)
+        scores = queries_l @ corpus_l.T                     # (B, n_local)
+        v, i = jax.lax.top_k(scores, min(k, n_local))
+        gids = i.astype(jnp.int32) + idx * n_local
+        return distributed_topk(v, gids, k, axis)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(data_axes, None)),
+        out_specs=(P(data_axes, None), P(data_axes, None)),
+        check_vma=False,   # result IS replicated over `axis` post-merge
+    )
+    return fn(corpus, queries)
+
+
+def sharded_ivf_probe(mesh: Mesh, list_vecs: jax.Array, list_ids: jax.Array,
+                      queries: jax.Array, sel: jax.Array, k: int, *,
+                      axis: str = "model") -> Tuple[jax.Array, jax.Array]:
+    """Distributed IVF list scan: posting lists sharded by partition over
+    ``axis``; every shard scans the selected lists it owns (others are
+    masked), then k-wide merge.
+
+    sel (B, nprobe) *global* partition ids (from the replicated-centroid
+    selection step).
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    p = list_vecs.shape[0]
+
+    def local(lv, li, q, s):
+        p_local = lv.shape[0]
+        shard = jax.lax.axis_index(axis)
+        lo = shard * p_local
+        s_local = s - lo
+        own = (s_local >= 0) & (s_local < p_local)           # (B, np)
+        s_safe = jnp.clip(s_local, 0, p_local - 1)
+        lvs = lv[s_safe]                                      # (B,np,L,d)
+        lis = jnp.where(own[..., None], li[s_safe], -1)       # mask foreign
+        scores = jnp.einsum("bd,bnld->bnl", q, lvs)
+        scores = jnp.where(lis >= 0, scores, -jnp.inf)
+        b = q.shape[0]
+        flat_v = scores.reshape(b, -1)
+        flat_i = lis.reshape(b, -1)
+        v, pos = jax.lax.top_k(flat_v, k)
+        ids = jnp.take_along_axis(flat_i, pos, axis=-1)
+        return distributed_topk(v, ids, k, axis)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None),
+                  P(data_axes, None), P(data_axes, None)),
+        out_specs=(P(data_axes, None), P(data_axes, None)),
+        check_vma=False,   # result IS replicated over `axis` post-merge
+    )
+    return fn(list_vecs, list_ids, queries, sel)

@@ -1,0 +1,50 @@
+"""Elastic scaling: rebuild the mesh for whatever devices survive.
+
+Checkpoints restore as host arrays (mesh-independent), so elasticity is
+(1) pick a mesh shape for the new device count, (2) re-place params with
+the same logical PartitionSpecs on the new mesh.  Divisibility rule:
+keep the model axis as large as possible (≤ requested tp) while it still
+divides the device count; the remainder becomes data parallelism —
+shrinking tp changes math-per-device, shrinking dp only changes
+throughput, so dp absorbs the loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def choose_mesh_shape(n_devices: int, *, preferred_model: int = 16,
+                      multi_pod: bool = False) -> Tuple[Tuple[int, ...],
+                                                        Tuple[str, ...]]:
+    """Largest model axis ≤ preferred_model dividing n_devices; rest → data."""
+    tp = min(preferred_model, n_devices)
+    while tp > 1 and n_devices % tp:
+        tp -= 1
+    rest = n_devices // tp
+    if multi_pod and rest % 2 == 0 and rest > 1:
+        return (2, rest // 2, tp), ("pod", "data", "model")
+    return (rest, tp), ("data", "model")
+
+
+def make_elastic_mesh(n_devices: Optional[int] = None, *,
+                      preferred_model: int = 16,
+                      multi_pod: bool = False) -> Mesh:
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    shape, axes = choose_mesh_shape(n, preferred_model=preferred_model,
+                                    multi_pod=multi_pod)
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def replace_on_mesh(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    """Place a host pytree on ``mesh`` with logical ``specs``.
+
+    Used after an elastic restore: the same PartitionSpecs work on any
+    mesh that keeps the axis names (sizes may differ)."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, specs,
+                        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

@@ -1,0 +1,294 @@
+"""Per-architecture sharding rules (PartitionSpec pytrees).
+
+Conventions (DESIGN.md §5):
+  * ``tp``  — the ``model`` mesh axis: tensor-parallel dims (attention
+    heads, FFN hidden, vocab, embedding-table rows, posting lists).
+  * ``fsdp`` — the data axes (``('data',)`` single-pod,
+    ``('pod','data')`` multi-pod): parameter/optimizer sharding; XLA
+    inserts the per-layer all-gathers (which the layer scan overlaps).
+  * batch always shards over the data axes.
+  * decode KV caches shard the *sequence* dim over ``model`` — kv-head
+    counts (8, 20, 4…) do not divide a 16-wide model axis, sequence
+    always does, and XLA turns the softmax into a clean two-pass
+    partial-reduce (ring-attention-lite).
+
+Spec builders mirror each model's param pytree structure exactly; a
+structural zip failure here fails loudly at dry-run time, not silently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as TF
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Logical → mesh axis binding."""
+    data: Tuple[str, ...] = ("data",)
+    model: str = "model"
+
+    @property
+    def dp(self):                  # batch / fsdp axes
+        return self.data if len(self.data) > 1 else self.data[0]
+
+
+def from_mesh(mesh) -> Axes:
+    names = mesh.axis_names
+    data = tuple(a for a in ("pod", "data") if a in names)
+    return Axes(data=data, model="model" if "model" in names else names[-1])
+
+
+# ---------------------------------------------------------------------------
+# LM transformer
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg: TF.LMConfig, ax: Axes) -> Dict[str, Any]:
+    dp, tp = ax.dp, ax.model
+    n = P(None)
+
+    def attn_specs() -> Dict[str, Any]:
+        if cfg.attn_kind == "mla":
+            return {
+                "wq": P(None, dp, tp),
+                "w_dkv": P(None, dp, None),
+                "w_krope": P(None, dp, None),
+                "w_uk": P(None, None, tp),
+                "w_uv": P(None, None, tp),
+                "kv_norm": {"scale": P(None, None)},
+                "wo": P(None, tp, dp),
+            }
+        s: Dict[str, Any] = {
+            "wq": P(None, dp, tp),
+            "wk": P(None, dp, tp),
+            "wv": P(None, dp, tp),
+            "wo": P(None, tp, dp),
+        }
+        if cfg.qkv_bias:
+            s["bq"] = P(None, tp)
+            s["bk"] = P(None, tp)
+            s["bv"] = P(None, tp)
+        if cfg.qk_norm:
+            s["q_norm"] = {"scale": P(None, None)}
+            s["k_norm"] = {"scale": P(None, None)}
+        return s
+
+    layer: Dict[str, Any] = {
+        "norm_attn": {"scale": P(None, None)},
+        "norm_mlp": {"scale": P(None, None)},
+        "attn": attn_specs(),
+    }
+    if cfg.is_moe:
+        layer["moe"] = {
+            "router": P(None, dp, None),
+            "w_gate": P(None, None, dp, tp),
+            "w_up": P(None, None, dp, tp),
+            "w_down": P(None, None, tp, dp),
+        }
+        if cfg.n_shared:
+            layer["moe"]["shared"] = {
+                "w_gate": P(None, dp, tp),
+                "w_up": P(None, dp, tp),
+                "w_down": P(None, tp, dp),
+            }
+    else:
+        layer["mlp"] = {
+            "w_gate": P(None, dp, tp),
+            "w_up": P(None, dp, tp),
+            "w_down": P(None, tp, dp),
+        }
+
+    return {
+        "embed": P(tp, dp),
+        "layers": layer,
+        "final_norm": {"scale": n},
+        "lm_head": P(dp, tp),
+    }
+
+
+def lm_batch_specs(ax: Axes) -> Dict[str, Any]:
+    return {"tokens": P(ax.dp, None), "labels": P(ax.dp, None)}
+
+
+def lm_cache_specs(cfg: TF.LMConfig, ax: Axes,
+                   shard_batch: bool = True) -> Dict[str, Any]:
+    """shard_batch=False: batch too small to split (e.g. long_500k B=1);
+    the sequence dim still shards over the model axis."""
+    dp, tp = (ax.dp if shard_batch else None), ax.model
+    if cfg.attn_kind == "mla":
+        return {"ckv": P(None, dp, tp, None),
+                "krope": P(None, dp, tp, None)}
+    # (L, B, Hkv, S, dh): sequence over tp
+    return {"k": P(None, dp, None, tp, None),
+            "v": P(None, dp, None, tp, None)}
+
+
+def lm_opt_specs(opt_name: str, param_specs, param_structs=None) -> Any:
+    """Optimizer-state specs mirror param specs (moments shard like
+    weights).  Adafactor's factoring decision is SHAPE-based (both
+    trailing dims ≥ 128 — optimizers.adafactor._factored), so the spec
+    tree must consult ``param_structs`` to know which leaves carry
+    factored (vr, vc) vs full (v) statistics."""
+    if opt_name == "adamw":
+        return {"m": param_specs, "v": param_specs,
+                "step": P()}
+    if opt_name == "sgd":
+        return {"m": param_specs, "step": P()}
+    if opt_name == "adafactor":
+        assert param_structs is not None, \
+            "adafactor specs need param shapes (pass param_structs)"
+
+        def factored(spec, struct):
+            if not isinstance(spec, P):
+                spec = P()
+            parts = tuple(spec)
+            shape = struct.shape
+            parts = parts + (None,) * (len(shape) - len(parts))
+            if (len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128):
+                return {"vr": P(*parts[:-1]),
+                        "vc": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": P(*parts) if parts else P()}
+
+        v = jax.tree.map(factored, param_specs, param_structs,
+                         is_leaf=lambda x: isinstance(x, P) or x is None)
+        return {"v": v, "step": P()}
+    raise ValueError(opt_name)
+
+
+# ---------------------------------------------------------------------------
+# GIN
+# ---------------------------------------------------------------------------
+
+def gin_param_specs(params: Any) -> Any:
+    """GIN params are tiny (≈100k): replicate everything."""
+    return jax.tree.map(lambda _: P(), params)
+
+
+def gin_batch_specs(ax: Axes, *, full_graph: bool, batched: bool = False
+                    ) -> Dict[str, Any]:
+    flat = ax.data + (ax.model,)
+    if batched:                      # molecule: batch over everything
+        return {"x": P(ax.dp), "edge_src": P(ax.dp), "edge_dst": P(ax.dp),
+                "node_mask": P(ax.dp), "edge_mask": P(ax.dp),
+                "labels": P(ax.dp)}
+    if full_graph:                   # edges sharded over the whole mesh
+        return {"x": P(), "edge_src": P(flat), "edge_dst": P(flat),
+                "labels": P(), "train_mask": P(), "edge_mask": P(flat)}
+    # sampled minibatch: node/edge sets sharded over data axes
+    return {"x": P(ax.dp), "edge_src": P(ax.dp), "edge_dst": P(ax.dp),
+            "labels": P(ax.dp), "seed_mask": P(ax.dp),
+            "edge_mask": P(ax.dp)}
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def _mlp_specs(n_layers: int, dp, tp, alt: bool = True) -> Dict[str, Any]:
+    """Tower MLP: alternate hidden dim over tp (megatron 2-layer pattern)."""
+    layers = []
+    for i in range(n_layers):
+        w = P(None, tp) if (i % 2 == 0 and alt) else P(tp, None)
+        b = P(tp) if (i % 2 == 0 and alt) else P(None)
+        layers.append({"w": w, "b": b})
+    return {"layers": layers}
+
+
+def two_tower_param_specs(cfg, ax: Axes) -> Any:
+    dp, tp = ax.dp, ax.model
+    nt = len(cfg.tower_mlp)
+    return {
+        "emb": {"table": P(tp, None)},
+        "user_mlp": _mlp_specs(nt, dp, tp),
+        "item_mlp": _mlp_specs(nt, dp, tp),
+    }
+
+
+def dcnv2_param_specs(cfg, ax: Axes) -> Any:
+    dp, tp = ax.dp, ax.model
+    return {
+        "emb": {"table": P(tp, None)},
+        # cross layers are (d_input, d_input) with d_input = 13 + 26·16 =
+        # 429 — not divisible by the model axis and tiny (~184k params):
+        # replicate them
+        "cross": [{"w": P(None, None), "b": P(None)}
+                  for _ in range(cfg.n_cross_layers)],
+        "deep": _mlp_specs(len(cfg.mlp), dp, tp),
+        "head": P(None, None),
+    }
+
+
+def bst_param_specs(cfg, ax: Axes) -> Any:
+    dp, tp = ax.dp, ax.model
+    blocks = [{
+        "attn": {"wq": P(None, tp), "wk": P(None, tp), "wv": P(None, tp),
+                 "wo": P(tp, None)},
+        "norm1": {"scale": P(None), "bias": P(None)},
+        "norm2": {"scale": P(None), "bias": P(None)},
+        "ff": {"layers": [{"w": P(None, tp), "b": P(tp)},
+                          {"w": P(tp, None), "b": P(None)}]},
+    } for _ in range(cfg.n_blocks)]
+    return {
+        "emb": {"table": P(tp, None)},
+        "other_emb": {"table": P(tp, None)},
+        "pos": P(None, None),
+        "blocks": blocks,
+        "deep": _mlp_specs(len(cfg.mlp), dp, tp),
+        "head": P(None, None),
+    }
+
+
+def autoint_param_specs(cfg, ax: Axes) -> Any:
+    tp = ax.model
+    layers = [{"wq": P(None, tp), "wk": P(None, tp), "wv": P(None, tp),
+               "wres": P(None, tp)} for _ in range(cfg.n_attn_layers)]
+    return {
+        "emb": {"table": P(tp, None)},
+        "attn": layers,
+        "head": P(None, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# bi-encoder (paper's Dragon/Snowflake)
+# ---------------------------------------------------------------------------
+
+def encoder_param_specs(cfg, ax: Axes) -> Any:
+    dp, tp = ax.dp, ax.model
+    tower = {
+        "embed": P(tp, dp),
+        "pos": P(None, None),
+        "layers": {
+            "attn": {"wq": P(None, dp, tp), "wk": P(None, dp, tp),
+                     "wv": P(None, dp, tp), "wo": P(None, tp, dp)},
+            "norm1": {"scale": P(None, None)},
+            "norm2": {"scale": P(None, None)},
+            "mlp": {"w_gate": P(None, dp, tp), "w_up": P(None, dp, tp),
+                    "w_down": P(None, tp, dp)},
+        },
+        "final_norm": {"scale": P(None)},
+        "proj": P(dp, None),
+    }
+    return {"query": tower, "doc": tower}
+
+
+# ---------------------------------------------------------------------------
+# retrieval index (core.ivf.IVFIndex as a distributed structure)
+# ---------------------------------------------------------------------------
+
+def ivf_index_specs(ax: Axes) -> Any:
+    """Centroids replicated; posting lists sharded by partition over the
+    model axis (each shard scans its own lists; top-k merge is one
+    all-gather of k entries — core.topk.distributed_topk)."""
+    tp = ax.model
+    from repro.core.ivf import IVFIndex
+    return IVFIndex(
+        centroids=P(None, None),
+        list_vecs=P(tp, None, None),
+        list_ids=P(tp, None),
+        list_sizes=P(tp),
+    )

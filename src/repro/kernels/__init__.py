@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  centroid_topk   fused QxC matmul + streaming exact top-k   [TopLoc #1]
+  ivf_scan        fused list gather + dot + masked top-k     [TopLoc #2]
+  flash_attention prefill/train flash attn + flash decode    [LM archs]
+  embedding_bag   fused gather + weighted bag reduction      [recsys]
+
+Call through ``repro.kernels.ops`` — it owns padding contracts and the
+TPU-kernel / CPU-reference dispatch. ``repro.kernels.ref`` holds the
+pure-jnp oracles; ``sorting`` the bitonic top-k networks the kernels use.
+"""
+from repro.kernels import ops, ref, sorting  # noqa: F401

@@ -1,0 +1,210 @@
+"""jit'd dispatch wrappers for every kernel in this package.
+
+Each public op has three execution paths, selected by ``mode``:
+
+  * ``"ref"``       — pure-jnp oracle (``ref.py``): the CPU-container
+                      default and the path lowered in the dry-run (Pallas
+                      TPU kernels do not lower on the CPU backend).
+  * ``"kernel"``    — the Pallas TPU kernel (real hardware).
+  * ``"interpret"`` — the Pallas kernel body executed in Python
+                      (correctness validation on CPU; used by tests).
+
+``default_mode()`` picks ``kernel`` on TPU and ``ref`` elsewhere, so
+call-sites never branch by hand.  Wrappers also own the padding
+contracts (power-of-two k, block-aligned lengths) so kernels stay
+assert-clean and callers stay shape-ignorant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import centroid_topk as _ck
+from repro.kernels import ivf_scan as _iv
+from repro.kernels import flash_attention as _fa
+from repro.kernels import embedding_bag as _eb
+
+
+def default_mode() -> str:
+    plat = jax.default_backend()
+    return "kernel" if plat == "tpu" else "ref"
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int, value) -> jax.Array:
+    n = x.shape[axis]
+    if n == to:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, to - n)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# centroid_topk
+# ---------------------------------------------------------------------------
+
+def centroid_topk(queries: jax.Array, centroids: jax.Array, k: int, *,
+                  mode: Optional[str] = None, blk_p: int = 512
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k centroid ids/scores for a query batch. See kernel docstring."""
+    mode = mode or default_mode()
+    if mode == "ref":
+        return ref.centroid_topk(queries, centroids, k)
+    p = centroids.shape[0]
+    kp = _next_pow2(k)
+    blk = min(blk_p, _next_pow2(p))
+    blk = max(blk, kp)
+    p_pad = ((p + blk - 1) // blk) * blk
+    c = _pad_axis(centroids, 0, p_pad, 0.0)
+    # guard: padded centroids must never win — push them to -inf via a
+    # sentinel row of -inf scores (zero vectors tie at 0 for zero queries,
+    # so mask by id instead inside merge: ids >= p are dropped post-hoc)
+    v, i = _ck.centroid_topk(queries, c, kp, blk_p=blk,
+                             interpret=(mode == "interpret"))
+    v = jnp.where(i < p, v, -jnp.inf)
+    v2, pos = jax.lax.top_k(v, k)
+    return v2, jnp.take_along_axis(i, pos, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# ivf_scan
+# ---------------------------------------------------------------------------
+
+def ivf_scan(queries: jax.Array, list_vecs: jax.Array, list_ids: jax.Array,
+             sel: jax.Array, k: int, *, mode: Optional[str] = None,
+             max_tile: int = 2048) -> Tuple[jax.Array, jax.Array]:
+    """Fused scan of the selected posting lists. sel (B, nprobe)."""
+    mode = mode or default_mode()
+    if mode == "ref":
+        return ref.ivf_scan_batch(queries, list_vecs, list_ids, sel, k)
+    p, lmax, d = list_vecs.shape
+    kp = _next_pow2(k)
+    lpad = _next_pow2(lmax)
+    blk_l = min(lpad, max_tile)
+    blk_l = max(blk_l, kp)
+    lpad = ((lpad + blk_l - 1) // blk_l) * blk_l
+    lv = _pad_axis(list_vecs, 1, lpad, 0.0)
+    li = _pad_axis(list_ids, 1, lpad, -1)
+    v, i = _iv.ivf_scan(queries, lv, li, sel, kp, blk_l=blk_l,
+                        interpret=(mode == "interpret"))
+    return v[:, :k], i[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (custom_vjp: kernel fwd, reference-math bwd)
+# ---------------------------------------------------------------------------
+
+# threshold above which the jnp path switches to the chunked
+# (flash-style) formulation — keeps the lowered graph free of (S, Skv)
+# score tensors so dry-run memory reflects the streaming TPU kernel
+_CHUNK_THRESHOLD = 2048
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fa_core(q, k, v, causal: bool, mode: str):
+    if mode == "ref":
+        return _ref_attention(q, k, v, causal)
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               interpret=(mode == "interpret"))
+
+
+def _ref_attention(q, k, v, causal):
+    if q.shape[2] * k.shape[2] > _CHUNK_THRESHOLD ** 2:
+        return ref.chunked_attention(q, k, v, causal=causal)
+    return ref.mha_attention(q, k, v, causal=causal)
+
+
+def _fa_fwd(q, k, v, causal, mode):
+    return _fa_core(q, k, v, causal, mode), (q, k, v)
+
+
+def _fa_bwd(causal, mode, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_attention(
+        q_, k_, v_, causal), q, k, v)
+    return vjp(g)
+
+
+_fa_core.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, mode: Optional[str] = None
+                    ) -> jax.Array:
+    """Differentiable attention: Pallas fwd on TPU, jnp-math bwd."""
+    mode = mode or default_mode()
+    if mode != "ref":
+        s, skv = q.shape[2], k.shape[2]
+        if s % 128 or skv % 128:   # padding contract
+            mode = "ref"
+    return _fa_core(q, k, v, causal, mode)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 cache_len: jax.Array, *, mode: Optional[str] = None
+                 ) -> jax.Array:
+    """Decode attention (no grad path — serving only)."""
+    mode = mode or default_mode()
+    if mode == "ref":
+        return ref.decode_attention(q, k, v, cache_len)
+    s = k.shape[2]
+    blk = 512 if s % 512 == 0 else (128 if s % 128 == 0 else 0)
+    if blk == 0:
+        return ref.decode_attention(q, k, v, cache_len)
+    return _fa.flash_decode(q, k, v, cache_len, blk_kv=blk,
+                            interpret=(mode == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag (custom_vjp: kernel fwd, gather-scatter bwd)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _eb_core(table, ids, weights, mode: str):
+    if mode == "ref":
+        return ref.embedding_bag(table, ids, weights, mode="sum")
+    return _eb.embedding_bag(table, ids, weights,
+                             interpret=(mode == "interpret"))
+
+
+def _eb_fwd(table, ids, weights, mode):
+    return _eb_core(table, ids, weights, mode), (table, ids, weights)
+
+
+def _eb_bwd(mode, res, g):
+    table, ids, weights = res
+    _, vjp = jax.vjp(lambda t, w: ref.embedding_bag(t, ids, w, mode="sum"),
+                     table, weights if weights is not None else
+                     jnp.ones(ids.shape, jnp.float32))
+    dt, dw = vjp(g)
+    return dt, None, (dw if weights is not None else None)
+
+
+_eb_core.defvjp(_eb_fwd, _eb_bwd)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  weights: Optional[jax.Array] = None,
+                  agg: str = "sum", *, mode: Optional[str] = None
+                  ) -> jax.Array:
+    """EmbeddingBag: (V,d) table, (B,L) bags (-1 pad) → (B,d)."""
+    mode = mode or default_mode()
+    out = _eb_core(table, ids, weights, mode)
+    if agg == "mean":
+        w = (ids >= 0).astype(jnp.float32)
+        if weights is not None:
+            w = w * weights
+        denom = jnp.maximum(w.sum(-1, keepdims=True), 1.0)
+        out = (out.astype(jnp.float32) / denom).astype(table.dtype)
+    return out

@@ -1,0 +1,206 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels_*.py`` sweeps shapes/dtypes with
+``np.testing.assert_allclose``), and the CPU execution path used whenever
+the TPU kernels are unavailable (``ops.py`` dispatch).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# centroid_topk — fused (B,d)x(d,p) matmul + top-k   [TopLoc hot spot 1]
+# ---------------------------------------------------------------------------
+
+def centroid_topk(queries: jax.Array, centroids: jax.Array, k: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k centroids by dot product. queries (B,d), centroids (p,d).
+
+    Returns (values (B,k) f32, ids (B,k) int32), sorted descending.
+    """
+    scores = jnp.einsum("bd,pd->bp", queries.astype(jnp.float32),
+                        centroids.astype(jnp.float32))
+    v, i = jax.lax.top_k(scores, k)
+    return v, i.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# ivf_scan — fused posting-list gather + dot + masked top-k  [hot spot 2]
+# ---------------------------------------------------------------------------
+
+def ivf_scan(query: jax.Array, list_vecs: jax.Array, list_ids: jax.Array,
+             sel: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Scan the selected posting lists for one query.
+
+    query (d,); list_vecs (p, Lmax, d); list_ids (p, Lmax) (-1 pad);
+    sel (np,) int32 — selected partitions.
+    Returns (values (k,), doc_ids (k,)) sorted descending.
+    """
+    lv = list_vecs[sel]                             # (np, Lmax, d)
+    li = list_ids[sel]                              # (np, Lmax)
+    scores = jnp.einsum("nld,d->nl", lv.astype(jnp.float32),
+                        query.astype(jnp.float32))
+    scores = jnp.where(li >= 0, scores, -jnp.inf)
+    flat_v, flat_i = scores.reshape(-1), li.reshape(-1)
+    v, pos = jax.lax.top_k(flat_v, k)
+    return v, flat_i[pos].astype(jnp.int32)
+
+
+def ivf_scan_batch(queries: jax.Array, list_vecs: jax.Array,
+                   list_ids: jax.Array, sel: jax.Array, k: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """vmap of ivf_scan over a query batch; sel (B, np)."""
+    return jax.vmap(lambda q, s: ivf_scan(q, list_vecs, list_ids, s, k)
+                    )(queries, sel)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — causal/full softmax attention with GQA
+# ---------------------------------------------------------------------------
+
+def mha_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  logit_soft_cap: Optional[float] = None) -> jax.Array:
+    """Reference attention. q (B,H,S,D), k/v (B,Hkv,Skv,D); Hkv divides H.
+
+    f32 softmax accumulation regardless of input dtype (matches kernel).
+    Value head dim may differ from qk head dim (MLA).
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    group = h // hkv
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, group, s, d)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, kf) / jnp.sqrt(d).astype(jnp.float32)
+    if logit_soft_cap is not None:
+        logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+    if causal:
+        skv = k.shape[2]
+        # queries occupy the last `s` positions of the kv timeline
+        qpos = jnp.arange(s) + (skv - s)
+        kpos = jnp.arange(skv)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, vf)
+    return out.reshape(b, h, s, dv).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: Optional[jax.Array] = None) -> jax.Array:
+    """Single-token decode attention. q (B,H,D), k/v (B,Hkv,S,D).
+
+    ``cache_len`` (B,) masks positions >= cache_len (ragged cache fill).
+    """
+    b, h, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qg, k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    if cache_len is not None:
+        mask = jnp.arange(s)[None] < cache_len[:, None]      # (B, S)
+        logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, dv).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, blk_kv: int = 1024) -> jax.Array:
+    """Flash-style chunked attention in pure jnp (lax.scan over KV tiles,
+    online softmax).  Numerically equivalent to ``mha_attention`` but
+    never materialises the (S, Skv) score matrix — this is the path the
+    dry-run lowers (so the compiled memory analysis reflects the
+    streaming TPU kernel, not an S² artefact of the plain reference) and
+    the grad path of ``ops.flash_attention`` (scan of jnp ops —
+    differentiable as-is, recompute-friendly).
+    """
+    b, h, s, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    nblk = -(-skv // blk_kv)
+    pad = nblk * blk_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    scale = 1.0 / (d ** 0.5)
+    qg = (q.reshape(b, hkv, group, s, d).astype(jnp.float32) * scale)
+    kb = k.reshape(b, hkv, nblk, blk_kv, d).astype(jnp.float32)
+    vb = v.reshape(b, hkv, nblk, blk_kv, dv).astype(jnp.float32)
+    kb = jnp.moveaxis(kb, 2, 0)              # (nblk, B, Hkv, blk, d)
+    vb = jnp.moveaxis(vb, 2, 0)
+    qpos = jnp.arange(s) + (skv - s)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # rematerialised: without checkpoint, differentiating the scan
+        # saves every chunk's (S, blk) score matrix — the S x Skv memory
+        # this formulation exists to avoid. Recompute-per-chunk is the
+        # flash-attention backward strategy.
+        m, l, acc, j = carry[0], carry[1], carry[2], carry[3]
+        kj, vj = xs
+        sco = jnp.einsum("bhgsd,bhtd->bhgst", qg, kj)   # (B,Hkv,g,S,blk)
+        kpos = j * blk_kv + jnp.arange(blk_kv)
+        valid = (kpos[None, :] < skv) if pad else jnp.ones(
+            (1, blk_kv), bool)
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        sco = jnp.where(valid[None, None, None], sco, -jnp.inf)
+        m_cur = jnp.max(sco, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sco - m_safe[..., None])
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = alpha * l + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bhtd->bhgsd", p, vj)
+        return (m_new, l_new, acc_new, j + 1), None
+
+    m0 = jnp.full((b, hkv, group, s), -jnp.inf)
+    l0 = jnp.zeros((b, hkv, group, s))
+    a0 = jnp.zeros((b, hkv, group, s, dv))
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (m0, l0, a0, jnp.asarray(0, jnp.int32)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, s, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag — fused gather + segment-sum   [recsys hot path]
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  weights: Optional[jax.Array] = None,
+                  mode: str = "sum") -> jax.Array:
+    """EmbeddingBag over fixed-width bags. table (V,d), ids (B,L) int32
+    (-1 = pad). Returns (B,d). mode: 'sum' | 'mean'.
+
+    JAX has no native EmbeddingBag — this gather+mask+reduce IS the
+    substrate (see kernel_taxonomy §RecSys), and the Pallas kernel fuses
+    the row gather with the reduction so rows stream HBM→VMEM once.
+    """
+    mask = (ids >= 0)
+    safe = jnp.maximum(ids, 0)
+    rows = table[safe]                               # (B, L, d)
+    w = mask.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    out = jnp.einsum("bld,bl->bd", rows.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    if mode == "mean":
+        denom = jnp.maximum(jnp.sum(w.astype(jnp.float32), -1, keepdims=True), 1.0)
+        out = out / denom
+    return out.astype(table.dtype)

@@ -1,0 +1,102 @@
+"""Bitonic sorting networks for exact in-kernel top-k.
+
+Mosaic (Pallas TPU) does not lower ``jax.lax.top_k`` / ``sort`` inside
+kernels, so the streaming top-k kernels keep their running (k,) register
+tile sorted with compare-exchange networks built from pure vector ops
+(roll + where + min/max) — every step is lane-parallel on the VPU and
+static-shaped.  Costs: full sort of n elements = log²n/2 stages; merge of
+two sorted k-tiles = log(2k) stages.
+
+These helpers are plain jnp functions: they run identically inside a
+Pallas kernel body, in interpret mode, and as host-side references (the
+tests cross-check them against ``jnp.sort``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def _compare_exchange(vals: jax.Array, ids: jax.Array, dist: int,
+                      keep_max: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One compare-exchange stage at distance ``dist`` on the last axis.
+
+    ``keep_max`` (bool, same shape): True where the position should keep
+    the pairwise max, False where it keeps the min.
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    is_lo = (iota % (2 * dist)) < dist
+    pv = jnp.where(is_lo, jnp.roll(vals, -dist, axis=-1),
+                   jnp.roll(vals, dist, axis=-1))
+    pi = jnp.where(is_lo, jnp.roll(ids, -dist, axis=-1),
+                   jnp.roll(ids, dist, axis=-1))
+    take_partner = jnp.where(keep_max, pv > vals, pv < vals)
+    new_v = jnp.where(take_partner, pv, vals)
+    new_i = jnp.where(take_partner, pi, ids)
+    return new_v, new_i
+
+
+def bitonic_sort_desc(vals: jax.Array, ids: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Full descending sort along the last axis (power-of-two length)."""
+    n = vals.shape[-1]
+    assert _is_pow2(n), f"bitonic sort needs power-of-two length, got {n}"
+    iota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    stage = 2
+    while stage <= n:
+        desc = (iota & stage) == 0          # per-block direction
+        if stage == n:
+            desc = jnp.ones_like(desc)      # final merge: fully descending
+        dist = stage // 2
+        while dist >= 1:
+            is_lo = (iota % (2 * dist)) < dist
+            keep_max = is_lo == desc
+            vals, ids = _compare_exchange(vals, ids, dist, keep_max)
+            dist //= 2
+        stage *= 2
+    return vals, ids
+
+
+def bitonic_merge_desc(vals: jax.Array, ids: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Descending merge of a *bitonic* sequence along the last axis.
+
+    Input convention: first half sorted descending, second half sorted
+    ascending (i.e. ``concat(run_desc, flip(block_desc))``).
+    """
+    n = vals.shape[-1]
+    assert _is_pow2(n), f"bitonic merge needs power-of-two length, got {n}"
+    iota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    dist = n // 2
+    while dist >= 1:
+        is_lo = (iota % (2 * dist)) < dist
+        vals, ids = _compare_exchange(vals, ids, dist, is_lo)
+        dist //= 2
+    return vals, ids
+
+
+def merge_topk_desc(run_v: jax.Array, run_i: jax.Array,
+                    blk_v: jax.Array, blk_i: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Merge two descending-sorted k-tiles; return the descending top-k.
+
+    Shapes: (..., k) each; k power of two.
+    """
+    v = jnp.concatenate([run_v, jnp.flip(blk_v, axis=-1)], axis=-1)
+    i = jnp.concatenate([run_i, jnp.flip(blk_i, axis=-1)], axis=-1)
+    v, i = bitonic_merge_desc(v, i)
+    k = run_v.shape[-1]
+    return v[..., :k], i[..., :k]
+
+
+def block_topk_desc(scores: jax.Array, ids: jax.Array, k: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k (descending) of a block via full bitonic sort."""
+    v, i = bitonic_sort_desc(scores, ids)
+    return v[..., :k], i[..., :k]

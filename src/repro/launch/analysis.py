@@ -1,0 +1,245 @@
+"""Compiled-artifact analysis: cost extraction + roofline terms.
+
+Import-safe (no device-count side effects) — the dry-run CLI and tests
+both use it.
+
+Sources (ROOFLINE ANALYSIS spec):
+  * ``compiled.cost_analysis()``    → HLO FLOPs / bytes accessed
+  * ``compiled.memory_analysis()``  → per-device argument/output/temp bytes
+  * post-SPMD HLO text              → collective payload bytes (parsed
+    here; shapes in partitioned HLO are per-device)
+
+Scan adjustment: XLA cost analysis counts a ``while`` body ONCE.  For
+layer-scanned LMs we *calibrate*: lower the same cell with unrolled 1-
+and 2-layer variants; per-layer deltas give exact linear coefficients
+(flops(L) = fixed + L·per_layer), applied to flops, bytes and collective
+bytes.  Non-scanned archs pass trip_count=1 (no adjustment).
+
+Collective cost model (ring, group size g parsed from replica_groups):
+  all-gather       bytes·(g-1)/g     (result is the gathered tensor)
+  reduce-scatter   bytes·(g-1)       (operand = g × result)
+  all-reduce       bytes·2(g-1)/g    (reduce-scatter + all-gather)
+  all-to-all       bytes·(g-1)/g
+  collective-permute  bytes
+where ``bytes`` is the op's *result* buffer size in the per-device HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9\[\],{}() ]*?)"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(typestr: str) -> int:
+    """Bytes of the leading shape in e.g. ``bf16[16,384]{1,0}``; tuples
+    sum their elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _coll_cost(kind: str, rbytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return rbytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return rbytes * (g - 1)
+    if kind == "all-reduce":
+        return rbytes * 2 * (g - 1) / g
+    if kind == "all-to-all":
+        return rbytes * (g - 1) / g
+    return float(rbytes)        # collective-permute
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """computation name → body text (brace-balanced blocks).
+
+    Header lines look like ``%name (args) -> type {`` — args/types can
+    contain nested parens (tuples), so match only the name and the
+    trailing open-brace."""
+    comps: Dict[str, str] = {}
+    lines = hlo.splitlines()
+    i = 0
+    name_re = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)")
+    while i < len(lines):
+        line = lines[i]
+        is_header = (line.rstrip().endswith("{")
+                     and ("->" in line or line.lstrip().startswith(
+                         ("ENTRY", "%"))) and "=" not in line.split("(")[0])
+        m = name_re.match(line) if is_header else None
+        if m:
+            name = m.group(1)
+            depth = lines[i].count("{") - lines[i].count("}")
+            body = [lines[i]]
+            i += 1
+            while i < len(lines) and depth > 0:
+                depth += lines[i].count("{") - lines[i].count("}")
+                body.append(lines[i])
+                i += 1
+            comps[name] = "\n".join(body)
+        else:
+            i += 1
+    return comps
+
+
+def while_body_names(hlo: str) -> List[str]:
+    return [m.group(1).lstrip("%")
+            for m in re.finditer(r"body=%?([\w.\-]+)", hlo)]
+
+
+def collective_bytes_in(text: str, default_group: int) -> Tuple[float, Dict[str, float]]:
+    """Per-device collective payload bytes in a block of HLO text."""
+    total = 0.0
+    by_kind: Dict[str, float] = {}
+    for line in text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:          # async pair: count only the start
+            continue
+        kind = m.group(3)
+        rbytes = _shape_bytes(line.split("=", 1)[1].split("(", 1)[0])
+        g = _group_size(line, default_group)
+        c = _coll_cost(kind, rbytes, g)
+        total += c
+        by_kind[kind] = by_kind.get(kind, 0.0) + c
+    return total, by_kind
+
+
+@dataclasses.dataclass
+class CellCost:
+    """Per-device cost record for one (arch, shape, mesh) cell."""
+    flops: float                 # per-device, scan-adjusted
+    hbm_bytes: float             # per-device, scan-adjusted
+    coll_bytes: float            # per-device payload, scan-adjusted
+    coll_by_kind: Dict[str, float]
+    mem_args: float
+    mem_temp: float
+    mem_output: float
+    peak_memory: float
+    raw_flops: float             # unadjusted (body counted once)
+    adjust_note: str = ""
+
+
+def analyze_compiled(compiled, *, trip_count: int = 1,
+                     default_group: int = 16,
+                     calibration: Optional[Tuple[float, float, float]] = None
+                     ) -> CellCost:
+    """Extract per-device costs from a compiled executable.
+
+    ``calibration``: optional (per_layer_flops, per_layer_bytes,
+    per_layer_coll) per-device linear coefficients from the unrolled 1/2
+    layer lowers; when given they OVERRIDE the crude while-body×trip
+    adjustment.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    comps = split_computations(hlo)
+    bodies = while_body_names(hlo)
+    total_coll, by_kind = collective_bytes_in(hlo, default_group)
+
+    body_coll = 0.0
+    for b in bodies:
+        if b in comps:
+            c, _ = collective_bytes_in(comps[b], default_group)
+            body_coll += c
+
+    note = ""
+    if calibration is not None:
+        per_flops, per_bytes, per_coll = calibration
+        # fixed costs = once-counted totals minus one body instance
+        flops_adj = flops + (trip_count - 1) * per_flops
+        hbm_adj = hbm + (trip_count - 1) * per_bytes
+        coll_adj = total_coll + (trip_count - 1) * per_coll
+        note = f"calibrated per-layer x{trip_count}"
+    elif trip_count > 1:
+        # crude: replicate every while-body collective trip_count times;
+        # flops/bytes cannot be split without calibration → scale bodies
+        coll_adj = total_coll + (trip_count - 1) * body_coll
+        flops_adj = flops * trip_count   # upper bound note
+        hbm_adj = hbm * trip_count
+        note = "crude while-bodyxtrip scaling (use calibration)"
+    else:
+        flops_adj, hbm_adj, coll_adj = flops, hbm, total_coll
+
+    ma = compiled.memory_analysis()
+    args = float(getattr(ma, "argument_size_in_bytes", 0))
+    temp = float(getattr(ma, "temp_size_in_bytes", 0))
+    outp = float(getattr(ma, "output_size_in_bytes", 0))
+    code = float(getattr(ma, "generated_code_size_in_bytes", 0))
+    # donated steps (train: params/opt, decode: cache) alias outputs onto
+    # inputs, so args+temp+code is the honest peak there; the strict sum
+    # is the no-donation upper bound. Both are recorded.
+    peak = args + temp + outp + code
+    return CellCost(flops_adj, hbm_adj, coll_adj, by_kind,
+                    args, temp, outp, peak, flops, note)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_ratio: float      # MODEL_FLOPS / (chips·HLO_FLOPs)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost: CellCost, *, chips: int, model_flops: float,
+                   links: int = 1) -> Roofline:
+    """cost fields are per-device; the brief's formulas divide GLOBAL
+    totals by chips — identical numbers either way."""
+    compute = cost.flops / PEAK_FLOPS
+    memory = cost.hbm_bytes / HBM_BW
+    coll = cost.coll_bytes / (LINK_BW * links)
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dom = max(terms, key=terms.get)
+    ratio = model_flops / max(chips * cost.flops, 1.0)
+    return Roofline(compute, memory, coll, dom, ratio)

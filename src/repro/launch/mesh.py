@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import and only then builds meshes.
+
+Production target: TPU v5e pods.
+  single-pod:  (16, 16)      = 256 chips, axes ("data", "model")
+  multi-pod:   (2, 16, 16)   = 512 chips, axes ("pod", "data", "model")
+The ``pod`` axis composes with ``data`` for gradient reductions and
+batch sharding (DCN-crossing collectives live only on that axis).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for {axes} mesh, found {len(devices)} — "
+            "run under launch/dryrun.py (it forces 512 host devices)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for sharding tests (uses however many devices exist)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

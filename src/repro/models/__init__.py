@@ -1,0 +1,2 @@
+"""Model zoo: LM transformers (dense/MoE/MLA), GIN, recsys, bi-encoders."""
+from repro.models import encoder, gnn, layers, recsys, transformer  # noqa: F401

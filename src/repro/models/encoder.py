@@ -1,0 +1,141 @@
+"""Bi-encoder dense retrieval models (the paper's Dragon / Snowflake).
+
+Dragon (arXiv:2305.xxxx / facebook/dragon-plus): BERT-style dual encoder,
+separate query/context towers, 768-d, inner-product similarity (embeddings
+L2-normalised before HNSW indexing per the paper's methodology [2]).
+Snowflake arctic-embed-l-v2 (arXiv:2412.04506): XLM-R-large-style single
+shared encoder, 1024-d, cosine similarity (normalised).
+
+We cannot ship pretrained weights in this offline container, so these
+encoders are *trained here* (examples/train_encoder.py: InfoNCE over the
+synthetic topic corpus) — giving real learned embedding geometry for the
+TopLoc reproduction instead of raw gaussians.
+
+Bidirectional transformer built from the shared layer blocks
+(AttnConfig(causal=False)); CLS pooling + optional normalisation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    name: str = "dragon"
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    d_ff: int = 3072
+    vocab: int = 32768
+    max_len: int = 256
+    out_dim: int = 0              # 0 → d_model
+    normalize: bool = True        # L2-normalise pooled embedding
+    shared_towers: bool = False   # Snowflake: one tower; Dragon: two
+    dtype: Any = jnp.float32
+
+    @property
+    def d_out(self) -> int:
+        return self.out_dim or self.d_model
+
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_heads,
+                            self.d_model // self.n_heads, causal=False)
+
+    def param_count(self) -> int:
+        d = self.d_model
+        per = 4 * d * d + 3 * d * self.d_ff + 4 * d
+        emb = self.vocab * d + self.max_len * d
+        towers = 1 if self.shared_towers else 2
+        return towers * (emb + self.n_layers * per + d * self.d_out)
+
+
+def _tower_init(cfg: EncoderConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+
+    def one_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn": L.attn_init(k1, cfg.attn_cfg(), cfg.dtype),
+            "norm1": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "norm2": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+
+    return {
+        "embed": L.dense_init(ks[1], cfg.vocab, cfg.d_model, cfg.dtype,
+                              scale=1.0),
+        "pos": (jax.random.normal(ks[2], (cfg.max_len, cfg.d_model),
+                                  jnp.float32) * 0.02).astype(cfg.dtype),
+        "layers": jax.vmap(one_layer)(layer_keys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "proj": L.dense_init(ks[3], cfg.d_model, cfg.d_out, cfg.dtype),
+    }
+
+
+def init_params(cfg: EncoderConfig, key) -> Params:
+    kq, kd = jax.random.split(key)
+    if cfg.shared_towers:
+        tower = _tower_init(cfg, kq)
+        return {"query": tower, "doc": tower}
+    return {"query": _tower_init(cfg, kq), "doc": _tower_init(cfg, kd)}
+
+
+def encode(tower: Params, cfg: EncoderConfig, tokens: jax.Array,
+           mask: jax.Array) -> jax.Array:
+    """tokens (B, S) int32, mask (B, S) bool → embeddings (B, d_out).
+
+    CLS pooling: position 0 (the tokenizer prepends a CLS id).
+    """
+    b, s = tokens.shape
+    x = jnp.take(tower["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = x + tower["pos"][None, :s]
+    x = x * mask[..., None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    acfg = cfg.attn_cfg()
+
+    def body(x, lp):
+        h = L.attn_apply(lp["attn"], acfg, L.rmsnorm(lp["norm1"], x),
+                         positions)
+        x = x + h * mask[..., None].astype(h.dtype)
+        h = L.swiglu(lp["mlp"], L.rmsnorm(lp["norm2"], x))
+        return x + h * mask[..., None].astype(h.dtype), None
+
+    x, _ = jax.lax.scan(body, x, tower["layers"])
+    pooled = L.rmsnorm(tower["final_norm"], x)[:, 0]       # CLS
+    out = pooled @ tower["proj"]
+    if cfg.normalize:
+        out = out / jnp.maximum(
+            jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+    return out
+
+
+def encode_queries(params: Params, cfg: EncoderConfig, tokens, mask):
+    return encode(params["query"], cfg, tokens, mask)
+
+
+def encode_docs(params: Params, cfg: EncoderConfig, tokens, mask):
+    return encode(params["doc"], cfg, tokens, mask)
+
+
+def contrastive_loss(params: Params, cfg: EncoderConfig, batch: Params,
+                     temperature: float = 0.05
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """InfoNCE with in-batch negatives (standard dense-retrieval recipe)."""
+    q = encode_queries(params, cfg, batch["q_tokens"], batch["q_mask"])
+    d = encode_docs(params, cfg, batch["d_tokens"], batch["d_mask"])
+    logits = (q @ d.T) / temperature
+    labels = jnp.arange(q.shape[0])
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"acc": acc}

@@ -1,0 +1,462 @@
+"""Shared neural building blocks (pure JAX, pytree params).
+
+Everything is a pair of functions — ``*_init(key, ...) -> params`` and
+``*_apply(params, x, ...) -> y`` — over plain dict pytrees, so models
+compose without a framework dependency and sharding specs can mirror the
+param tree exactly (distributed/sharding.py).
+
+Covers every feature the assigned architectures need: RMS/LayerNorm,
+RoPE, GQA attention with optional QKV bias (qwen1.5) and qk-norm
+(qwen3), SwiGLU/GELU MLPs, group-local top-k MoE with shared experts
+(grok-1, deepseek-v2-lite), and MLA (deepseek's multi-head latent
+attention, kv_lora compression + decoupled RoPE keys).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialisers / norms
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x (..., S, d_head); positions (..., S) int32 (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (covers MHA; optional qkv bias / qk-norm)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p: Params = {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, dtype)
+        p["k_norm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _project_qkv(params: Params, cfg: AttnConfig, x: jax.Array,
+                 positions: jax.Array):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None], cfg.rope_theta)
+    k = apply_rope(k.swapaxes(1, 2), positions[:, None], cfg.rope_theta)
+    return q, k, v.swapaxes(1, 2)   # (B,H,S,dh), (B,Hkv,S,dh), (B,Hkv,S,dh)
+
+
+def attn_apply(params: Params, cfg: AttnConfig, x: jax.Array,
+               positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill). x (B, S, d)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = ops.flash_attention(q, k, v, causal=cfg.causal)   # (B,H,S,dh)
+    out = out.swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.d_head)
+    return out @ params["wo"]
+
+
+def attn_decode(params: Params, cfg: AttnConfig, x: jax.Array,
+                k_cache: jax.Array, v_cache: jax.Array,
+                cache_len: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x (B, 1, d); caches (B, Hkv, S, dh);
+    cache_len (B,) = current fill. Returns (out (B,1,d), k_cache, v_cache)."""
+    b = x.shape[0]
+    positions = cache_len[:, None].astype(jnp.int32)          # (B,1)
+    q, k, v = _project_qkv(params, cfg, x, positions)         # S==1
+    # scatter the new kv at position cache_len: writes B·Hkv·dh elements
+    # (the earlier one-hot formulation read+wrote the ENTIRE cache every
+    # step — O(S) HBM traffic per token; §Perf decode iteration)
+    hkv = k_cache.shape[1]
+    b_ix = jnp.arange(b)[:, None]
+    h_ix = jnp.arange(hkv)[None, :]
+    k_cache = k_cache.at[b_ix, h_ix, cache_len[:, None], :].set(
+        k[:, :, 0].astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[b_ix, h_ix, cache_len[:, None], :].set(
+        v[:, :, 0].astype(v_cache.dtype), mode="drop")
+    out = ops.flash_decode(q[:, :, 0], k_cache, v_cache, cache_len + 1)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    return out @ params["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"w_gate": dense_init(ks[0], d, d_ff, dtype),
+            "w_up": dense_init(ks[1], d, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d, dtype)}
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+            ) @ params["w_down"]
+
+
+def mlp_init(key, dims, dtype=jnp.float32, bias: bool = True) -> Params:
+    """Plain MLP tower (recsys): dims = [in, h1, ..., out]."""
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i in range(len(dims) - 1):
+        lp = {"w": dense_init(ks[i], dims[i], dims[i + 1], dtype)}
+        if bias:
+            lp["b"] = jnp.zeros((dims[i + 1],), dtype)
+        layers.append(lp)
+    return {"layers": layers}
+
+
+def mlp_apply(params: Params, x: jax.Array, act=jax.nn.relu,
+              final_act: bool = False) -> jax.Array:
+    n = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        x = x @ lp["w"]
+        if "b" in lp:
+            x = x + lp["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# MoE — group-local top-k routing (sort-based dispatch, static shapes)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    n_shared: int = 0            # shared (always-on) experts, deepseek-style
+    capacity_factor: float = 1.25
+    n_groups: int = 1            # routing groups == data shards at scale;
+                                 # each group routes locally (static shapes,
+                                 # no cross-shard sort under SPMD)
+    group_axes: Any = None       # mesh axis name(s) the group dim shards
+                                 # over (vmap spmd_axis_name) — without it
+                                 # XLA replicates every group's dispatch
+                                 # buffers on every device
+    tp_axis: Any = None          # mesh axis of the expert ff dim; used for
+                                 # in-vmap sharding constraints on the
+                                 # (E, C, ff) expert activations (vmap
+                                 # prepends group_axes via spmd_axis_name)
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale = (1.0 / d) ** 0.5
+
+    def bank(k, n, din, dout):
+        return (jax.random.normal(k, (n, din, dout), jnp.float32) * scale
+                ).astype(dtype)
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": bank(ks[1], e, d, f),
+        "w_up": bank(ks[2], e, d, f),
+        "w_down": bank(ks[3], e, f, d),
+    }
+    if cfg.n_shared:
+        p["shared"] = swiglu_init(ks[4], d, f * cfg.n_shared, dtype)
+    return p
+
+
+def _dispatch_group(x: jax.Array, logits: jax.Array, top_k: int,
+                    capacity: int):
+    """Sort-based dispatch for one routing group.
+
+    x (T, d), logits (T, E) → (dispatched (E, C, d), gather_tok (E*C,),
+    weights (E*C,), aux_loss ()).
+    """
+    t, d = x.shape
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top_w, top_e = jax.lax.top_k(probs, top_k)                 # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): e * sum(frac_tokens * frac_probs)
+    me = jnp.mean(jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), 0)
+    ce = jnp.mean(probs, 0)
+    aux = e * jnp.sum(me * ce)
+
+    s = t * top_k
+    flat_e = top_e.reshape(-1)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    order = jnp.argsort(flat_e)                                # stable
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    counts = jax.ops.segment_sum(jnp.ones((s,), jnp.int32), se, e)
+    start = jnp.cumsum(counts) - counts                        # (E,)
+    pos = jnp.arange(s, dtype=jnp.int32) - start[se]
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)  # OOB → drop
+    gather_tok = jnp.full((e * capacity,), t, jnp.int32
+                          ).at[slot].set(stok, mode="drop")
+    weights = jnp.zeros((e * capacity,), jnp.float32
+                        ).at[slot].set(sw, mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], 0)
+    dispatched = x_pad[gather_tok].reshape(e, capacity, d)
+    return dispatched, gather_tok, weights, aux
+
+
+def moe_apply(params: Params, cfg: MoEConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) → (out (B, S, d), aux_loss ()).
+
+    Tokens are reshaped into ``n_groups`` routing groups (set n_groups to
+    the data-shard count at scale); each group dispatches locally so the
+    sort/scatter stays shard-resident under SPMD (DESIGN.md §5).
+    """
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    t_total = tokens.shape[0]
+    g = cfg.n_groups
+    assert t_total % g == 0, (t_total, g)
+    t_local = t_total // g
+    capacity = max(cfg.top_k, int(cfg.capacity_factor * t_local *
+                                  cfg.top_k / cfg.n_experts + 0.9999))
+    xg = tokens.reshape(g, t_local, d)
+    if cfg.group_axes is not None:
+        # the (B@dp, S@tp) → (G, T_local) reshape merges two sharded dims
+        # and XLA drops the sharding; re-pin groups to the data axes
+        from jax.sharding import PartitionSpec as _P
+        xg = jax.lax.with_sharding_constraint(
+            xg, _P(tuple(cfg.group_axes), None, None))
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+
+    def _pin(t, spec):
+        # inside the vmap, spmd_axis_name prepends the group axes to the
+        # constraint — this is what actually shards the expert tensors
+        # (propagation alone drops them inside the layer-scan body)
+        if cfg.group_axes is None:
+            return t
+        from jax.sharding import PartitionSpec as _P
+        return jax.lax.with_sharding_constraint(t, _P(*spec))
+
+    def group_fn(xl, ll):
+        dispatched, gather_tok, weights, aux = _dispatch_group(
+            xl, ll, cfg.top_k, capacity)
+        dispatched = _pin(dispatched, (None, None, None))
+        h = jnp.einsum("ecd,edf->ecf", dispatched, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", dispatched, params["w_up"])
+        h = _pin(h, (None, None, cfg.tp_axis))
+        u = _pin(u, (None, None, cfg.tp_axis))
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["w_down"])
+        y = _pin(y, (None, None, None))
+        y_flat = y.reshape(-1, d) * weights[:, None].astype(y.dtype)
+        out = jnp.zeros((t_local + 1, d), y.dtype
+                        ).at[gather_tok].add(y_flat)[:t_local]
+        return _pin(out, (None, None)), aux
+
+    spmd = cfg.group_axes
+    if spmd is not None and not isinstance(spmd, str):
+        spmd = tuple(spmd)
+    out, aux = jax.vmap(group_fn, spmd_axis_name=spmd)(xg, logits)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if cfg.n_shared:
+        out = out + swiglu(params["shared"], x)
+    return out, jnp.mean(aux)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    d_head: int = 128            # nope part of qk, and v
+    d_rope: int = 64             # decoupled rope key dim (shared per head)
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    d, h, r = cfg.d_model, cfg.n_heads, cfg.kv_lora_rank
+    dh, dr = cfg.d_head, cfg.d_rope
+    return {
+        "wq": dense_init(ks[0], d, h * (dh + dr), dtype),
+        "w_dkv": dense_init(ks[1], d, r, dtype),          # down: x → c_kv
+        "w_krope": dense_init(ks[2], d, dr, dtype),       # decoupled k
+        "w_uk": dense_init(ks[3], r, h * dh, dtype),      # up: c_kv → k_nope
+        "w_uv": dense_init(ks[4], r, h * dh, dtype),      # up: c_kv → v
+        "kv_norm": rmsnorm_init(r, dtype),
+        "wo": dense_init(ks[5], h * dh, d, dtype),
+    }
+
+
+def mla_apply(params: Params, cfg: MLAConfig, x: jax.Array,
+              positions: Optional[jax.Array] = None) -> jax.Array:
+    """Train/prefill MLA (materialised K/V). x (B, S, d)."""
+    b, s, _ = x.shape
+    h, dh, dr, r = cfg.n_heads, cfg.d_head, cfg.d_rope, cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    q = (x @ params["wq"]).reshape(b, s, h, dh + dr)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[:, None],
+                        cfg.rope_theta)                   # (B,H,S,dr)
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"])   # (B,S,r)
+    k_rope = apply_rope((x @ params["w_krope"])[:, None],    # shared head
+                        positions[:, None], cfg.rope_theta)  # (B,1,S,dr)
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, dh).swapaxes(1, 2)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, h, dh).swapaxes(1, 2)
+
+    q_full = jnp.concatenate([q_nope.swapaxes(1, 2), q_rope], -1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, h, s, dr))], -1)
+    # flash kernel handles GQA-style head mapping; here Hkv == H
+    out = ops.flash_attention(q_full, k_full, v, causal=True)
+    out = out.swapaxes(1, 2).reshape(b, s, h * dh)
+    return out @ params["wo"]
+
+
+def mla_decode(params: Params, cfg: MLAConfig, x: jax.Array,
+               ckv_cache: jax.Array, krope_cache: jax.Array,
+               cache_len: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-form MLA decode — attends in the compressed latent space.
+
+    Caches only (B, S, r) latents + (B, S, dr) rope keys (the MLA memory
+    win). q·k = (q_nope W_uk^T)·c_kv + q_rope·k_rope;  out = attn·c_kv
+    then expanded through W_uv ("weight absorption", DeepSeek-V2 §2.1).
+    x (B, 1, d); cache_len (B,).
+    """
+    b = x.shape[0]
+    h, dh, dr, r = cfg.n_heads, cfg.d_head, cfg.d_rope, cfg.kv_lora_rank
+    s_max = ckv_cache.shape[1]
+    positions = cache_len[:, None].astype(jnp.int32)
+
+    q = (x @ params["wq"]).reshape(b, 1, h, dh + dr)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[:, None],
+                        cfg.rope_theta)[:, :, 0]          # (B,H,dr)
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"])[:, 0]   # (B,r)
+    k_rope = apply_rope((x @ params["w_krope"])[:, None],
+                        positions[:, None], cfg.rope_theta)[:, 0, 0]  # (B,dr)
+
+    # scatter-write the new latent at cache_len (O(r) traffic per row,
+    # not O(S·r) — see attn_decode)
+    b_ix = jnp.arange(b)
+    ckv_cache = ckv_cache.at[b_ix, cache_len, :].set(
+        c_kv.astype(ckv_cache.dtype), mode="drop")
+    krope_cache = krope_cache.at[b_ix, cache_len, :].set(
+        k_rope.astype(krope_cache.dtype), mode="drop")
+
+    # absorb W_uk into q:  q_lat (B,H,r)
+    w_uk = params["w_uk"].reshape(r, h, dh)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                         ckv_cache.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                           krope_cache.astype(jnp.float32)))
+    logits = logits / jnp.asarray((dh + dr) ** 0.5, jnp.float32)
+    mask = jnp.arange(s_max)[None] < (cache_len + 1)[:, None]
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, -1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs,
+                       ckv_cache.astype(jnp.float32))     # (B,H,r)
+    w_uv = params["w_uv"].reshape(r, h, dh)
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dh).astype(x.dtype)
+    return out @ params["wo"], ckv_cache, krope_cache

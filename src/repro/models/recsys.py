@@ -1,0 +1,368 @@
+"""RecSys architectures: two-tower retrieval, DCN-v2, BST, AutoInt.
+
+Shared substrate: a concatenated sparse-feature embedding table (one
+(Σvocab, dim) tensor + per-field offsets) row-sharded over the ``model``
+mesh axis, looked up with plain gathers (single-valent fields) or the
+fused ``ops.embedding_bag`` (multi-hot bags / user history).  JAX has no
+native EmbeddingBag — this module IS that substrate (taxonomy §B.6).
+
+The two-tower arch is where the paper's technique plugs in: its
+``retrieval_cand`` serving shape (1 query vs 10⁶ candidates) is exactly
+the ANN problem TopLoc accelerates — ``retrieval_topk`` exposes brute
+force, and serving/engine.py swaps in TopLoc_IVF over the item corpus.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sparse embedding substrate
+# ---------------------------------------------------------------------------
+
+def field_offsets(vocab_sizes: Sequence[int]) -> Tuple[int, ...]:
+    """Static per-field row offsets into the concatenated table.
+
+    A plain python tuple (NOT a param-tree leaf): offsets are integers and
+    must stay out of the differentiable param pytree — jax.grad rejects
+    int-dtype inputs."""
+    out, acc = [], 0
+    for v in vocab_sizes:
+        out.append(acc)
+        acc += int(v)
+    return tuple(out)
+
+
+def embed_table_init(key, vocab_sizes: Sequence[int], dim: int,
+                     dtype=jnp.float32) -> Params:
+    total = int(sum(vocab_sizes))
+    scale = dim ** -0.5
+    table = (jax.random.normal(key, (total, dim), jnp.float32) * scale
+             ).astype(dtype)
+    return {"table": table}
+
+
+def embed_fields(emb: Params, offsets: Sequence[int],
+                 ids: jax.Array) -> jax.Array:
+    """Single-valent lookup: ids (B, F) per-field → (B, F, dim)."""
+    flat = ids + jnp.asarray(offsets, jnp.int32)[None, :]
+    return jnp.take(emb["table"], flat, axis=0)
+
+
+def embed_bag(emb: Params, offset: int, ids: jax.Array,
+              agg: str = "mean") -> jax.Array:
+    """Multi-hot bag for one field: ids (B, L) (-1 pad) → (B, dim)."""
+    shifted = jnp.where(ids >= 0, ids + offset, -1)
+    return ops.embedding_bag(emb["table"], shifted, agg=agg)
+
+
+# ---------------------------------------------------------------------------
+# two-tower retrieval (Yi et al., RecSys'19)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    user_vocab: int = 1_000_000
+    item_vocab: int = 2_097_152
+    history_len: int = 50
+    temperature: float = 0.05
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        e = self.embed_dim
+        emb = (self.user_vocab + self.item_vocab) * e
+        def tower(d_in):
+            n, dims = 0, (d_in,) + self.tower_mlp
+            for a, b in zip(dims[:-1], dims[1:]):
+                n += a * b + b
+            return n
+        return emb + tower(2 * e) + tower(e)
+
+
+def two_tower_init(cfg: TwoTowerConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    e = cfg.embed_dim
+    return {
+        "emb": embed_table_init(ks[0], (cfg.user_vocab, cfg.item_vocab), e,
+                                cfg.dtype),
+        "user_mlp": L.mlp_init(ks[1], (2 * e,) + cfg.tower_mlp, cfg.dtype),
+        "item_mlp": L.mlp_init(ks[2], (e,) + cfg.tower_mlp, cfg.dtype),
+    }
+
+
+def user_tower(params: Params, cfg: TwoTowerConfig, user_id: jax.Array,
+               history: jax.Array) -> jax.Array:
+    """user_id (B,), history (B, L) item ids (-1 pad) → (B, out)."""
+    offs = field_offsets((cfg.user_vocab, cfg.item_vocab))
+    ue = embed_fields(params["emb"], offs[:1], user_id[:, None])[:, 0]
+    he = embed_bag(params["emb"], offs[1], history, agg="mean")
+    x = jnp.concatenate([ue, he], -1)
+    out = L.mlp_apply(params["user_mlp"], x)
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True),
+                             1e-6)
+
+
+def item_tower(params: Params, cfg: TwoTowerConfig,
+               item_id: jax.Array) -> jax.Array:
+    offs = field_offsets((cfg.user_vocab, cfg.item_vocab))
+    ie = embed_fields(params["emb"], offs[1:], item_id[:, None])[:, 0]
+    out = L.mlp_apply(params["item_mlp"], ie)
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True),
+                             1e-6)
+
+
+def two_tower_loss(params: Params, cfg: TwoTowerConfig, batch: Params
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """In-batch sampled softmax (every other row is a negative)."""
+    u = user_tower(params, cfg, batch["user_id"], batch["history"])
+    i = item_tower(params, cfg, batch["item_id"])
+    logits = (u @ i.T) / cfg.temperature
+    labels = jnp.arange(u.shape[0])
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"acc": acc}
+
+
+def retrieval_topk(user_vec: jax.Array, item_corpus: jax.Array, k: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Brute-force candidate scoring: (B, e) x (N, e) → top-k.
+
+    The TopLoc-accelerated path replaces this with core.ivf search over a
+    clustered item corpus (see serving/engine.py and benchmarks).
+    """
+    scores = user_vec @ item_corpus.T
+    return jax.lax.top_k(scores, k)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 (arXiv:2008.13535)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DCNv2Config:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp: Tuple[int, ...] = (1024, 1024, 512)
+    vocab_sizes: Tuple[int, ...] = ()   # len == n_sparse
+    dtype: Any = jnp.float32
+
+    @property
+    def d_input(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    def param_count(self) -> int:
+        d = self.d_input
+        emb = sum(self.vocab_sizes) * self.embed_dim
+        cross = self.n_cross_layers * (d * d + d)
+        deep, dims = 0, (d,) + self.mlp
+        for a, b in zip(dims[:-1], dims[1:]):
+            deep += a * b + b
+        return emb + cross + deep + (d + self.mlp[-1]) + 1
+
+
+def dcnv2_init(cfg: DCNv2Config, key) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_cross_layers)
+    d = cfg.d_input
+    cross = [{"w": L.dense_init(ks[i], d, d, cfg.dtype),
+              "b": jnp.zeros((d,), cfg.dtype)}
+             for i in range(cfg.n_cross_layers)]
+    return {
+        "emb": embed_table_init(ks[-3], cfg.vocab_sizes, cfg.embed_dim,
+                                cfg.dtype),
+        "cross": cross,
+        "deep": L.mlp_init(ks[-2], (d,) + cfg.mlp, cfg.dtype),
+        "head": L.dense_init(ks[-1], d + cfg.mlp[-1], 1, cfg.dtype),
+    }
+
+
+def dcnv2_forward(params: Params, cfg: DCNv2Config, dense: jax.Array,
+                  sparse_ids: jax.Array) -> jax.Array:
+    """dense (B, 13) f32, sparse_ids (B, 26) int32 → logit (B,)."""
+    se = embed_fields(params["emb"], field_offsets(cfg.vocab_sizes),
+                      sparse_ids)                      # (B, 26, e)
+    x0 = jnp.concatenate(
+        [dense.astype(cfg.dtype), se.reshape(se.shape[0], -1)], -1)
+    x = x0
+    for cp in params["cross"]:                         # x ← x0 ⊙ (Wx+b) + x
+        x = x0 * (x @ cp["w"] + cp["b"]) + x
+    deep = L.mlp_apply(params["deep"], x0, final_act=True)
+    both = jnp.concatenate([x, deep], -1)
+    return (both @ params["head"])[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# BST — Behaviour Sequence Transformer (arXiv:1905.06874)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: Tuple[int, ...] = (1024, 512, 256)
+    item_vocab: int = 5_000_000
+    n_other: int = 8                 # other categorical profile features
+    other_vocab: int = 100_000
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        e = self.embed_dim
+        emb = self.item_vocab * e + self.n_other * self.other_vocab * e
+        attn = self.n_blocks * (4 * e * e + 2 * e * 4 * e + 4 * e)
+        d_in = (self.seq_len + 1) * e + self.n_other * e
+        deep, dims = 0, (d_in,) + self.mlp
+        for a, b in zip(dims[:-1], dims[1:]):
+            deep += a * b + b
+        return emb + attn + deep + self.mlp[-1] + 1
+
+
+def bst_init(cfg: BSTConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    e = cfg.embed_dim
+    blocks = []
+    for k in jax.random.split(ks[0], cfg.n_blocks):
+        k1, k2 = jax.random.split(k)
+        blocks.append({
+            "attn": L.attn_init(k1, L.AttnConfig(e, cfg.n_heads,
+                                                 cfg.n_heads,
+                                                 e // cfg.n_heads,
+                                                 causal=False), cfg.dtype),
+            "norm1": L.layernorm_init(e, cfg.dtype),
+            "norm2": L.layernorm_init(e, cfg.dtype),
+            "ff": L.mlp_init(k2, (e, 4 * e, e), cfg.dtype),
+        })
+    d_in = (cfg.seq_len + 1) * e + cfg.n_other * e
+    return {
+        "emb": embed_table_init(ks[1], (cfg.item_vocab,), e, cfg.dtype),
+        "other_emb": embed_table_init(
+            ks[2], (cfg.other_vocab,) * cfg.n_other, e, cfg.dtype),
+        "pos": (jax.random.normal(ks[3], (cfg.seq_len + 1, e), jnp.float32)
+                * 0.02).astype(cfg.dtype),
+        "blocks": blocks,
+        "deep": L.mlp_init(ks[4], (d_in,) + cfg.mlp, cfg.dtype),
+        "head": L.dense_init(ks[5], cfg.mlp[-1], 1, cfg.dtype),
+    }
+
+
+def bst_forward(params: Params, cfg: BSTConfig, history: jax.Array,
+                target: jax.Array, other_ids: jax.Array) -> jax.Array:
+    """history (B, seq), target (B,), other_ids (B, n_other) → logit (B,)."""
+    b = history.shape[0]
+    seq_ids = jnp.concatenate([history, target[:, None]], 1)   # (B, S+1)
+    x = embed_fields(params["emb"], (0,),
+                     seq_ids.reshape(b * (cfg.seq_len + 1), 1)
+                     ).reshape(b, cfg.seq_len + 1, cfg.embed_dim)
+    x = x + params["pos"][None]
+    acfg = L.AttnConfig(cfg.embed_dim, cfg.n_heads, cfg.n_heads,
+                        cfg.embed_dim // cfg.n_heads, causal=False)
+    for blk in params["blocks"]:
+        h = L.attn_apply(blk["attn"], acfg, L.layernorm(blk["norm1"], x))
+        x = x + h
+        h = L.mlp_apply(blk["ff"], L.layernorm(blk["norm2"], x),
+                        act=jax.nn.gelu)
+        x = x + h
+    oe = embed_fields(params["other_emb"],
+                      field_offsets((cfg.other_vocab,) * cfg.n_other),
+                      other_ids)                                # (B, F, e)
+    feat = jnp.concatenate([x.reshape(b, -1), oe.reshape(b, -1)], -1)
+    out = L.mlp_apply(params["deep"], feat, act=jax.nn.leaky_relu)
+    return (out @ params["head"])[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AutoInt (arXiv:1810.11921)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    vocab_sizes: Tuple[int, ...] = ()
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        emb = sum(self.vocab_sizes) * self.embed_dim
+        d0, da, h = self.embed_dim, self.d_attn, self.n_heads
+        n, d_in = 0, d0
+        for _ in range(self.n_attn_layers):
+            n += d_in * da * h * 3 + d_in * da * h   # qkv + residual proj
+            d_in = da * h
+        return emb + n + self.n_sparse * d_in + 1
+
+
+def autoint_init(cfg: AutoIntConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_attn_layers + 2)
+    layers, d_in = [], cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        k1, k2, k3, k4 = jax.random.split(ks[i], 4)
+        d_out = cfg.d_attn * cfg.n_heads
+        layers.append({
+            "wq": L.dense_init(k1, d_in, d_out, cfg.dtype),
+            "wk": L.dense_init(k2, d_in, d_out, cfg.dtype),
+            "wv": L.dense_init(k3, d_in, d_out, cfg.dtype),
+            "wres": L.dense_init(k4, d_in, d_out, cfg.dtype),
+        })
+        d_in = d_out
+    return {
+        "emb": embed_table_init(ks[-2], cfg.vocab_sizes, cfg.embed_dim,
+                                cfg.dtype),
+        "attn": layers,
+        "head": L.dense_init(ks[-1], cfg.n_sparse * d_in, 1, cfg.dtype),
+    }
+
+
+def autoint_forward(params: Params, cfg: AutoIntConfig,
+                    sparse_ids: jax.Array) -> jax.Array:
+    """sparse_ids (B, 39) → logit (B,). Self-attention over fields."""
+    x = embed_fields(params["emb"], field_offsets(cfg.vocab_sizes),
+                      sparse_ids)                          # (B, F, e)
+    b, f, _ = x.shape
+    h, da = cfg.n_heads, cfg.d_attn
+    for lp in params["attn"]:
+        q = (x @ lp["wq"]).reshape(b, f, h, da).swapaxes(1, 2)
+        k = (x @ lp["wk"]).reshape(b, f, h, da).swapaxes(1, 2)
+        v = (x @ lp["wv"]).reshape(b, f, h, da).swapaxes(1, 2)
+        logits = jnp.einsum("bhfd,bhgd->bhfg", q, k) / (da ** 0.5)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1
+                               ).astype(x.dtype)
+        o = jnp.einsum("bhfg,bhgd->bhfd", probs, v)
+        o = o.swapaxes(1, 2).reshape(b, f, h * da)
+        x = jax.nn.relu(o + x @ lp["wres"])
+    return (x.reshape(b, -1) @ params["head"])[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# shared losses
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits: jax.Array, labels: jax.Array
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Binary cross-entropy on click labels (CTR models)."""
+    lf = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(lf, 0) - lf * y + jnp.log1p(jnp.exp(-jnp.abs(lf))))
+    acc = jnp.mean((lf > 0) == (y > 0.5))
+    return loss, {"acc": acc}

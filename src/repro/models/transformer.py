@@ -1,0 +1,449 @@
+"""Decoder-only LM covering all assigned transformer architectures.
+
+One config dataclass spans the five LM archs: dense SwiGLU (qwen1.5 w/
+QKV bias, qwen3 w/ qk-norm, yi) and MoE (grok-1 top-2, deepseek-v2-lite
+MLA + shared/routed top-6).  Layer parameters are *stacked* on a leading
+``layers`` axis and the forward pass is a ``jax.lax.scan`` — small HLO,
+fast multi-pod compiles, and the FSDP all-gather of layer l overlaps
+layer l−1's compute (DESIGN.md §7).
+
+Entry points:
+  init_params        — stacked pytree (vmapped per-layer init)
+  forward            — logits for training (optionally remat per layer)
+  loss_fn            — chunked cross-entropy (never materialises the full
+                       (B,S,V) logits — V is 100k+ here)
+  prefill / decode_step — serving path with per-layer KV (or MLA latent)
+                       caches stacked on the layer axis
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # attention flavour
+    attn_kind: str = "gqa"            # "gqa" | "mla"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    logit_soft_cap: Optional[float] = None
+    # MLA
+    kv_lora_rank: int = 512
+    d_rope: int = 64
+    # MoE (None → dense)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    moe_d_ff: int = 0                 # per-expert hidden (if != d_ff)
+    capacity_factor: float = 1.25
+    moe_groups: int = 1               # routing groups == data shards
+    moe_group_axes: Any = None        # mesh axes the group dim shards over
+    moe_tp_axis: Any = None           # mesh axis of the expert ff dim
+    # numerics
+    param_dtype: Any = jnp.float32
+    dtype: Any = jnp.float32
+    remat: bool = True
+    loss_chunk: int = 512             # seq chunk for the CE loss
+    unroll: bool = False              # python-loop layers instead of scan
+                                      # (roofline calibration lowers only:
+                                      # XLA cost analysis counts a while
+                                      # body once — launch/analysis.py)
+    act_spec: Any = None              # PartitionSpec for (B, S, d)
+                                      # activations; set by the launcher
+                                      # (requires an ambient mesh). Without
+                                      # it XLA's propagation lets the
+                                      # embed gather steal the data axis
+                                      # for d and un-shards the batch.
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                            self.d_head, self.qkv_bias, self.qk_norm,
+                            self.rope_theta, causal=True)
+
+    def mla_cfg(self) -> L.MLAConfig:
+        return L.MLAConfig(self.d_model, self.n_heads, self.kv_lora_rank,
+                           self.d_head, self.d_rope, self.rope_theta)
+
+    def moe_cfg(self) -> L.MoEConfig:
+        return L.MoEConfig(self.n_experts, self.top_k, self.d_model,
+                           self.expert_ff, self.n_shared,
+                           self.capacity_factor, self.moe_groups,
+                           self.moe_group_axes, self.moe_tp_axis)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline terms)."""
+        d, dh = self.d_model, self.d_head
+        if self.attn_kind == "mla":
+            attn = (d * self.n_heads * (dh + self.d_rope)          # wq
+                    + d * self.kv_lora_rank + d * self.d_rope       # down
+                    + self.kv_lora_rank * self.n_heads * dh * 2     # up k,v
+                    + self.n_heads * dh * d)                        # wo
+        else:
+            attn = d * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.is_moe:
+            ff = 3 * d * self.expert_ff * (self.n_experts + self.n_shared)
+            ff += d * self.n_experts                                # router
+        else:
+            ff = 3 * d * self.d_ff
+        per_layer = attn + ff + 2 * d
+        return (self.n_layers * per_layer + 2 * self.vocab * d + d)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: routed top-k + shared only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        full_ff = 3 * d * self.expert_ff * (self.n_experts + self.n_shared)
+        act_ff = 3 * d * self.expert_ff * (self.top_k + self.n_shared)
+        return self.param_count() - self.n_layers * (full_ff - act_ff)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm_attn": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+                 "norm_mlp": L.rmsnorm_init(cfg.d_model, cfg.param_dtype)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = L.mla_init(ks[0], cfg.mla_cfg(), cfg.param_dtype)
+    else:
+        p["attn"] = L.attn_init(ks[0], cfg.attn_cfg(), cfg.param_dtype)
+    if cfg.is_moe:
+        p["moe"] = L.moe_init(ks[1], cfg.moe_cfg(), cfg.param_dtype)
+    else:
+        p["mlp"] = L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff,
+                                 cfg.param_dtype)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": L.dense_init(k_emb, cfg.vocab, cfg.d_model,
+                              cfg.param_dtype, scale=1.0),
+        "layers": stacked,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "lm_head": L.dense_init(k_head, cfg.d_model, cfg.vocab,
+                                cfg.param_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: LMConfig, x: jax.Array, lp: Params,
+               positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    h = L.rmsnorm(lp["norm_attn"], x)
+    if cfg.attn_kind == "mla":
+        h = L.mla_apply(lp["attn"], cfg.mla_cfg(), h, positions)
+    else:
+        h = L.attn_apply(lp["attn"], cfg.attn_cfg(), h, positions)
+    x = x + h
+    h = L.rmsnorm(lp["norm_mlp"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        h, aux = L.moe_apply(lp["moe"], cfg.moe_cfg(), h)
+    else:
+        h = L.swiglu(lp["mlp"], h)
+    return x + h, aux
+
+
+def _constrain(x: jax.Array, cfg: LMConfig) -> jax.Array:
+    if cfg.act_spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, cfg.act_spec)
+
+
+def trunk(params: Params, cfg: LMConfig, tokens: jax.Array
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Embed + all layers + final norm. Returns (hidden (B,S,d), aux)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = _constrain(x, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        x, aux = _layer_fwd(cfg, x, lp, positions)
+        return _constrain(x, cfg), aux
+
+    if cfg.unroll:
+        auxs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux = body(x, lp)
+            auxs.append(aux)
+        aux_mean = jnp.mean(jnp.stack(auxs))
+    else:
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        aux_mean = jnp.mean(auxs)
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, aux_mean
+
+
+def forward(params: Params, cfg: LMConfig, tokens: jax.Array) -> jax.Array:
+    """Full logits (B, S, V) — use only for small vocab / tests."""
+    x, _ = trunk(params, cfg, tokens)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits
+
+
+def loss_fn(params: Params, cfg: LMConfig, tokens: jax.Array,
+            labels: jax.Array, aux_weight: float = 0.01
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked next-token cross-entropy.
+
+    The (B,S,V) logits tensor never fully materialises: the sequence axis
+    is processed in ``cfg.loss_chunk`` slices inside a scan (peak memory
+    B·chunk·V instead of B·S·V — at vocab 151k / seq 4k that is an 8×
+    activation saving, and XLA overlaps the head matmul chunks).
+    """
+    x, aux = trunk(params, cfg, tokens)               # (B, S, d)
+    b, s, d = x.shape
+    chunk = min(cfg.loss_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    head = params["lm_head"].astype(cfg.dtype)
+    xc = x.reshape(b, s // chunk, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, s // chunk, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        # rematerialised: without checkpoint the scan saves every chunk's
+        # (B, chunk, V) f32 logits for the backward — at V≈150k that is
+        # the largest buffer in the whole step. Recompute costs one extra
+        # head matmul per chunk.
+        xi, li = xs
+        logits = (xi @ head).astype(jnp.float32)
+        if cfg.logit_soft_cap:
+            logits = cfg.logit_soft_cap * jnp.tanh(
+                logits / cfg.logit_soft_cap)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, li[..., None], -1)[..., 0]
+        nll = logz - gold
+        mask = (li >= 0).astype(jnp.float32)
+        return (carry[0] + jnp.sum(nll * mask), carry[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with stacked per-layer caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    """Per-layer cache pytree, layer-stacked (leading axis L)."""
+    ln = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": jnp.zeros((ln, batch, max_len, cfg.kv_lora_rank),
+                             cfg.dtype),
+            "krope": jnp.zeros((ln, batch, max_len, cfg.d_rope), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros((ln, batch, cfg.n_kv_heads, max_len, cfg.d_head),
+                       cfg.dtype),
+        "v": jnp.zeros((ln, batch, cfg.n_kv_heads, max_len, cfg.d_head),
+                       cfg.dtype),
+    }
+
+
+def decode_step(params: Params, cfg: LMConfig, cache: Params,
+                tokens: jax.Array, cache_len: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step. tokens (B,) int32; cache_len (B,) current fill.
+
+    Returns (logits (B, V), updated cache). The layer scan carries the
+    hidden state and threads each layer's cache slice through as
+    scanned-over xs/ys.
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.dtype)
+    x = _constrain(x, cfg)
+
+    if cfg.attn_kind == "mla":
+        def body(x, xs):
+            lp, ckv, krope = xs
+            h = L.rmsnorm(lp["norm_attn"], x)
+            h, ckv, krope = L.mla_decode(lp["attn"], cfg.mla_cfg(), h,
+                                         ckv, krope, cache_len)
+            x = x + h
+            h = L.rmsnorm(lp["norm_mlp"], x)
+            if cfg.is_moe:
+                h, _ = L.moe_apply(lp["moe"],
+                                   dataclasses.replace(cfg, moe_groups=1
+                                                       ).moe_cfg(), h)
+            else:
+                h = L.swiglu(lp["mlp"], h)
+            return _constrain(x + h, cfg), (ckv, krope)
+
+        if cfg.unroll:
+            ckvs, kropes = [], []
+            for i in range(cfg.n_layers):
+                xs_i = jax.tree.map(lambda a: a[i],
+                                    (params["layers"], cache["ckv"],
+                                     cache["krope"]))
+                x, (c1, c2) = body(x, xs_i)
+                ckvs.append(c1)
+                kropes.append(c2)
+            new_cache = {"ckv": jnp.stack(ckvs),
+                         "krope": jnp.stack(kropes)}
+        else:
+            x, (ckv, krope) = jax.lax.scan(
+                body, x, (params["layers"], cache["ckv"], cache["krope"]))
+            new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        def body(x, xs):
+            lp, kc, vc = xs
+            h = L.rmsnorm(lp["norm_attn"], x)
+            h, kc, vc = L.attn_decode(lp["attn"], cfg.attn_cfg(), h,
+                                      kc, vc, cache_len)
+            x = x + h
+            h = L.rmsnorm(lp["norm_mlp"], x)
+            if cfg.is_moe:
+                h, _ = L.moe_apply(lp["moe"],
+                                   dataclasses.replace(cfg, moe_groups=1
+                                                       ).moe_cfg(), h)
+            else:
+                h = L.swiglu(lp["mlp"], h)
+            return _constrain(x + h, cfg), (kc, vc)
+
+        if cfg.unroll:
+            kcs, vcs = [], []
+            for i in range(cfg.n_layers):
+                xs_i = jax.tree.map(lambda a: a[i],
+                                    (params["layers"], cache["k"],
+                                     cache["v"]))
+                x, (c1, c2) = body(x, xs_i)
+                kcs.append(c1)
+                vcs.append(c2)
+            new_cache = {"k": jnp.stack(kcs), "v": jnp.stack(vcs)}
+        else:
+            x, (kc, vc) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            new_cache = {"k": kc, "v": vc}
+
+    x = L.rmsnorm(params["final_norm"], x)[:, 0]       # (B, d)
+    logits = (x @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: LMConfig, tokens: jax.Array,
+            max_len: int) -> Tuple[jax.Array, Params, jax.Array]:
+    """Prefill the cache from a full prompt. tokens (B, S).
+
+    Returns (last-token logits (B, V), cache sized max_len, cache_len).
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = _constrain(x, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    pad = max_len - s
+
+    if cfg.attn_kind == "mla":
+        def body(x, lp):
+            h = L.rmsnorm(lp["norm_attn"], x)
+            mcfg = cfg.mla_cfg()
+            c_kv = L.rmsnorm(lp["attn"]["kv_norm"], h @ lp["attn"]["w_dkv"])
+            k_rope = L.apply_rope((h @ lp["attn"]["w_krope"])[:, None],
+                                  positions[:, None], cfg.rope_theta)[:, 0]
+            h = L.mla_apply(lp["attn"], mcfg, h, positions)
+            x = x + h
+            h = L.rmsnorm(lp["norm_mlp"], x)
+            if cfg.is_moe:
+                h, _ = L.moe_apply(lp["moe"], cfg.moe_cfg(), h)
+            else:
+                h = L.swiglu(lp["mlp"], h)
+            return (_constrain(x + h, cfg),
+                    (jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                     jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))))
+
+        if cfg.unroll:
+            c1s, c2s = [], []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, (c1, c2) = body(x, lp)
+                c1s.append(c1)
+                c2s.append(c2)
+            cache = {"ckv": jnp.stack(c1s), "krope": jnp.stack(c2s)}
+        else:
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, (ckv, krope) = jax.lax.scan(body, x, params["layers"])
+            cache = {"ckv": ckv, "krope": krope}
+    else:
+        acfg = cfg.attn_cfg()
+
+        def body(x, lp):
+            h = L.rmsnorm(lp["norm_attn"], x)
+            q, k, v = L._project_qkv(lp["attn"], acfg, h, positions)
+            from repro.kernels import ops as _ops
+            o = _ops.flash_attention(q, k, v, causal=True)
+            o = o.swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.d_head)
+            x = x + o @ lp["attn"]["wo"]
+            h = L.rmsnorm(lp["norm_mlp"], x)
+            if cfg.is_moe:
+                h, _ = L.moe_apply(lp["moe"], cfg.moe_cfg(), h)
+            else:
+                h = L.swiglu(lp["mlp"], h)
+            return (_constrain(x + h, cfg),
+                    (jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                     jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))))
+
+        if cfg.unroll:
+            c1s, c2s = [], []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, (c1, c2) = body(x, lp)
+                c1s.append(c1)
+                c2s.append(c2)
+            cache = {"k": jnp.stack(c1s), "v": jnp.stack(c2s)}
+        else:
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, (kc, vc) = jax.lax.scan(body, x, params["layers"])
+            cache = {"k": kc, "v": vc}
+
+    x = L.rmsnorm(params["final_norm"], x)[:, -1]
+    logits = (x @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    cache_len = jnp.full((b,), s, jnp.int32)
+    return logits, cache, cache_len

@@ -1,0 +1,2 @@
+"""Optimizers, schedules, gradient utilities (clip/accum/compression)."""
+from repro.optim import grad, optimizers, schedules  # noqa: F401

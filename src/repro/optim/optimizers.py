@@ -1,0 +1,182 @@
+"""Optimizers (pure JAX, no optax): AdamW, Adafactor, SGD+momentum.
+
+Interface (optax-like but self-contained):
+    opt = adamw(lr_schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+State pytrees mirror the param tree, so the distributed sharding rules
+for params apply verbatim to optimizer state (FSDP shards moments the
+same way it shards weights — DESIGN.md §5).
+
+Adafactor (factored second moment, arXiv:1804.04235) is the default for
+the 314B-class MoE configs: it keeps per-matrix row/col statistics
+instead of full fp32 moments, cutting optimizer HBM by ~4x — the
+difference between grok-1 fitting a 256-chip pod or not (EXPERIMENTS.md
+§Dry-run memory table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _to_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory-lean for huge models)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(st, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(g, v):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, -1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, -2)
+                denom = (vr[..., None] / jnp.mean(vr, -1, keepdims=True
+                                                  )[..., None]) * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(denom + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(vv + eps)
+                nv = {"v": vv}
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, nv
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        pairs = [upd(g, v) for g, v in zip(flat_g, flat_v)]
+        updates = tdef.unflatten([p[0] for p in pairs])
+        new_v = tdef.unflatten([p[1] for p in pairs])
+        return updates, {"v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum == 0.0:
+            return (jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32),
+                                 grads), {"step": step})
+        m = jax.tree.map(lambda mm, g: momentum * mm + g.astype(jnp.float32),
+                         state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda mm, g: -lr_t * (momentum * mm + g.astype(jnp.float32)),
+                m, grads)
+        else:
+            upd = jax.tree.map(lambda mm: -lr_t * mm, m)
+        return upd, {"m": m, "step": step}
+
+    return Optimizer(init, update)
+
+
+REGISTRY = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}
+
+
+def make(name: str, lr, **kw) -> Optimizer:
+    return REGISTRY[name](lr, **kw)

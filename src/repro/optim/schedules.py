@@ -1,0 +1,29 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return sched
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def sched(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        warm = peak * s / max(warmup_steps, 1)
+        decay = peak * (warmup_steps ** 0.5) / jnp.sqrt(s)
+        return jnp.where(s < warmup_steps, warm, decay)
+    return sched
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)

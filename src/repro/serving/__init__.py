@@ -1,0 +1,2 @@
+"""Conversational serving runtime: session engine + scheduler."""
+from repro.serving import engine, scheduler  # noqa: F401

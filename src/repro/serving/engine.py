@@ -1,0 +1,174 @@
+"""Conversational serving engine — TopLoc as a first-class feature.
+
+Python-side session orchestration around the jitted core:
+  * per-conversation TopLoc state (IVF centroid cache / HNSW entry
+    point) held device-resident between turns;
+  * strategy selected per deployment config (plain / toploc / exact,
+    IVF / HNSW backend);
+  * work + latency accounting per turn (feeds benchmarks/table1.py);
+  * optional query encoder in front (full paper pipeline), and an item
+    corpus front-end for the two-tower ``retrieval_cand`` serving shape.
+
+Sessions are sticky: at multi-host scale the router pins a conversation
+to one data-parallel group so its cache stays local (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw as _hnsw
+from repro.core import ivf as _ivf
+from repro.core import toploc
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    backend: str = "ivf"          # "ivf" | "hnsw" | "exact"
+    strategy: str = "toploc"      # "toploc" | "toploc+" | "plain"
+    k: int = 10
+    # IVF
+    nprobe: int = 64
+    h: int = 1024                 # cached centroids (TopLoc_IVF)
+    alpha: float = 0.1            # refresh threshold (TopLoc_IVF+)
+    # HNSW
+    ef_search: int = 64
+    up: int = 2                   # first-turn ef upscaling
+
+
+@dataclasses.dataclass
+class TurnRecord:
+    conv_id: str
+    turn: int
+    latency_s: float
+    centroid_dists: int
+    list_dists: int
+    graph_dists: int
+    refreshed: bool
+    i0: int
+
+
+class ConversationalSearchEngine:
+    def __init__(self, config: ServingConfig, *,
+                 ivf_index: Optional[_ivf.IVFIndex] = None,
+                 hnsw_index: Optional[_hnsw.HNSWIndex] = None,
+                 doc_vecs: Optional[jax.Array] = None):
+        self.cfg = config
+        self.ivf = ivf_index
+        self.hnsw = hnsw_index
+        self.doc_vecs = doc_vecs
+        if config.backend == "ivf" and ivf_index is None:
+            raise ValueError("ivf backend needs ivf_index")
+        if config.backend == "hnsw" and hnsw_index is None:
+            raise ValueError("hnsw backend needs hnsw_index")
+        if config.backend == "exact" and doc_vecs is None:
+            raise ValueError("exact backend needs doc_vecs")
+        self.sessions: Dict[str, Any] = {}
+        self.turn_count: Dict[str, int] = {}
+        self.records: list[TurnRecord] = []
+
+    # -- public API ---------------------------------------------------
+
+    def query(self, conv_id: str, qvec: jax.Array
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """One conversational turn. qvec (d,). Returns (scores, doc_ids)."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        turn = self.turn_count.get(conv_id, 0)
+
+        if cfg.backend == "exact":
+            v, i = _ivf.exact_search(self.doc_vecs, qvec[None], cfg.k)
+            v, i = v[0], i[0]
+            stats = None
+        elif cfg.backend == "ivf":
+            v, i, stats = self._ivf_turn(conv_id, qvec, turn)
+        else:
+            v, i, stats = self._hnsw_turn(conv_id, qvec, turn)
+
+        v = np.asarray(jax.device_get(v))
+        i = np.asarray(jax.device_get(i))
+        dt = time.perf_counter() - t0
+        self.turn_count[conv_id] = turn + 1
+        if stats is not None:
+            self.records.append(TurnRecord(
+                conv_id, turn, dt,
+                int(stats.centroid_dists), int(stats.list_dists),
+                int(stats.graph_dists), bool(stats.refreshed),
+                int(stats.i0)))
+        else:
+            self.records.append(TurnRecord(conv_id, turn, dt,
+                                           0, 0, 0, False, -1))
+        return v, i
+
+    def end_conversation(self, conv_id: str) -> None:
+        self.sessions.pop(conv_id, None)
+        self.turn_count.pop(conv_id, None)
+
+    # -- strategy paths -------------------------------------------------
+
+    def _ivf_turn(self, conv_id, qvec, turn):
+        cfg = self.cfg
+        if cfg.strategy == "plain":
+            v, i, st = _ivf.search(self.ivf, qvec[None],
+                                   nprobe=cfg.nprobe, k=cfg.k)
+            stats = toploc.TurnStats(
+                jnp.asarray(self.ivf.p, jnp.int32), st.list_dists[0],
+                jnp.asarray(0, jnp.int32), jnp.asarray(-1, jnp.int32),
+                jnp.asarray(False))
+            return v[0], i[0], stats
+        if turn == 0 or conv_id not in self.sessions:
+            v, i, sess, stats = toploc.ivf_start(
+                self.ivf, qvec, h=cfg.h, nprobe=cfg.nprobe, k=cfg.k)
+            self.sessions[conv_id] = sess
+            return v, i, stats
+        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
+        v, i, sess, stats = toploc.ivf_step(
+            self.ivf, self.sessions[conv_id], qvec,
+            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha)
+        self.sessions[conv_id] = sess
+        return v, i, stats
+
+    def _hnsw_turn(self, conv_id, qvec, turn):
+        cfg = self.cfg
+        if cfg.strategy == "plain":
+            v, i, nd = _hnsw.search(self.hnsw, qvec[None],
+                                    ef=cfg.ef_search, k=cfg.k)
+            stats = toploc.TurnStats(
+                jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+                nd[0], jnp.asarray(-1, jnp.int32), jnp.asarray(False))
+            return v[0], i[0], stats
+        if turn == 0 or conv_id not in self.sessions:
+            v, i, sess, stats = toploc.hnsw_start(
+                self.hnsw, qvec, ef=cfg.ef_search, k=cfg.k, up=cfg.up)
+            self.sessions[conv_id] = sess
+            return v, i, stats
+        v, i, sess, stats = toploc.hnsw_step(
+            self.hnsw, self.sessions[conv_id], qvec,
+            ef=cfg.ef_search, k=cfg.k)
+        self.sessions[conv_id] = sess
+        return v, i, stats
+
+    # -- accounting ------------------------------------------------------
+
+    def summary(self) -> Dict[str, float]:
+        if not self.records:
+            return {}
+        lat = np.asarray([r.latency_s for r in self.records])
+        return {
+            "turns": len(self.records),
+            "mean_latency_ms": float(lat.mean() * 1e3),
+            "p95_latency_ms": float(np.percentile(lat, 95) * 1e3),
+            "mean_centroid_dists": float(np.mean(
+                [r.centroid_dists for r in self.records])),
+            "mean_list_dists": float(np.mean(
+                [r.list_dists for r in self.records])),
+            "mean_graph_dists": float(np.mean(
+                [r.graph_dists for r in self.records])),
+            "refresh_rate": float(np.mean(
+                [r.refreshed for r in self.records[1:]] or [0.0])),
+        }

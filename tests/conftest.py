@@ -1,0 +1,35 @@
+"""Shared fixtures. NOTE: device count stays 1 here — only
+launch/dryrun.py forces 512 host devices (per the brief)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    """Topic-clustered unit-norm corpus shared across ANN tests."""
+    from repro.data import synthetic as SY
+    cfg = SY.WorkloadConfig(n_docs=2000, d=32, n_topics=16,
+                            n_conversations=4, turns_per_conversation=6,
+                            seed=0)
+    return SY.make_workload(cfg)
+
+
+@pytest.fixture(scope="session")
+def ivf_index(small_corpus):
+    from repro.core import ivf
+    return ivf.build(jnp.asarray(small_corpus.doc_vecs), p=32, iters=5,
+                     key=jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def hnsw_index(small_corpus):
+    from repro.core import hnsw
+    return hnsw.build(small_corpus.doc_vecs[:1200], m=8,
+                      ef_construction=32, seed=0)

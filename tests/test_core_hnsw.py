@@ -1,0 +1,67 @@
+"""HNSW build + TPU-native beam query."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hnsw, ivf
+
+
+def test_graph_structure(hnsw_index):
+    adj = np.asarray(hnsw_index.adj0)
+    n = hnsw_index.n
+    assert adj.shape[0] == n
+    real = adj[adj >= 0]
+    assert real.size > 0 and real.max() < n
+    # no self loops in level-0 adjacency
+    rows = np.arange(n)[:, None].repeat(adj.shape[1], 1)
+    assert not np.any((adj == rows) & (adj >= 0))
+
+
+def test_high_ef_high_recall(hnsw_index, small_corpus):
+    docs = jnp.asarray(small_corpus.doc_vecs[:hnsw_index.n])
+    q = jnp.asarray(small_corpus.conversations.reshape(-1, 32)[:12])
+    ev, ei = ivf.exact_search(docs, q, 10)
+    v, i, nd = hnsw.search(hnsw_index, q, ef=64, k=10)
+    rec = np.mean([len(set(np.asarray(i[b]).tolist())
+                       & set(np.asarray(ei[b]).tolist())) / 10
+                   for b in range(q.shape[0])])
+    assert rec >= 0.9, rec
+    assert np.all(np.asarray(nd) < hnsw_index.n)   # sub-linear work
+
+
+def test_recall_grows_with_ef(hnsw_index, small_corpus):
+    docs = jnp.asarray(small_corpus.doc_vecs[:hnsw_index.n])
+    q = jnp.asarray(small_corpus.conversations.reshape(-1, 32)[:8])
+    ev, ei = ivf.exact_search(docs, q, 10)
+    recalls, works = [], []
+    for ef in (4, 16, 64):
+        _, i, nd = hnsw.search(hnsw_index, q, ef=ef, k=min(ef, 10))
+        k = min(ef, 10)
+        rec = np.mean([len(set(np.asarray(i[b]).tolist())
+                           & set(np.asarray(ei[b][:k]).tolist())) / k
+                       for b in range(q.shape[0])])
+        recalls.append(rec)
+        works.append(float(np.asarray(nd).mean()))
+    assert recalls[-1] >= recalls[0]
+    assert works[0] < works[-1]     # ef controls the work knob
+
+
+def test_entry_override_skips_descent(hnsw_index, small_corpus):
+    q = jnp.asarray(small_corpus.conversations[1, :1])
+    _, i_full, nd_full = hnsw.search(hnsw_index, q, ef=16, k=5)
+    entry = i_full[:, 0].astype(jnp.int32)
+    _, i_ov, nd_ov = hnsw.search(hnsw_index, q, ef=16, k=5,
+                                 entry_override=entry,
+                                 use_entry_override=True)
+    # starting at the answer costs less and still finds it
+    assert int(nd_ov[0]) < int(nd_full[0])
+    assert int(i_ov[0, 0]) == int(i_full[0, 0])
+
+
+def test_save_load_roundtrip(tmp_path, hnsw_index, small_corpus):
+    p = str(tmp_path / "hnsw.npz")
+    hnsw.save(hnsw_index, p)
+    back = hnsw.load(p)
+    q = jnp.asarray(small_corpus.conversations[0, :2])
+    v1, i1, _ = hnsw.search(hnsw_index, q, ef=16, k=5)
+    v2, i2, _ = hnsw.search(back, q, ef=16, k=5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

@@ -1,0 +1,76 @@
+"""Core IVF + k-means invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ivf, kmeans
+
+
+def test_build_partitions_all_docs(ivf_index, small_corpus):
+    assert int(ivf_index.list_sizes.sum()) == small_corpus.doc_vecs.shape[0]
+    ids = np.asarray(ivf_index.list_ids)
+    real = ids[ids >= 0]
+    assert len(np.unique(real)) == small_corpus.doc_vecs.shape[0]
+
+
+def test_balanced_capacity(ivf_index, small_corpus):
+    n, p = small_corpus.doc_vecs.shape[0], ivf_index.p
+    cap = int(1.3 * n / p + 1)
+    assert int(ivf_index.list_sizes.max()) <= cap
+    assert ivf_index.lmax <= cap
+
+
+def test_full_probe_equals_exact(ivf_index, small_corpus):
+    """nprobe == p must reproduce exhaustive search (paper §2: np=p)."""
+    q = jnp.asarray(small_corpus.conversations[:2, 0])
+    ev, ei = ivf.exact_search(jnp.asarray(small_corpus.doc_vecs), q, 10)
+    sv, si, _ = ivf.search(ivf_index, q, nprobe=ivf_index.p, k=10)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ei))
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(ev), rtol=1e-5)
+
+
+def test_recall_monotone_in_nprobe(ivf_index, small_corpus):
+    q = jnp.asarray(small_corpus.conversations.reshape(-1, 32)[:16])
+    ev, ei = ivf.exact_search(jnp.asarray(small_corpus.doc_vecs), q, 10)
+    recalls = []
+    for npb in (1, 4, 16, 32):
+        _, si, _ = ivf.search(ivf_index, q, nprobe=npb, k=10)
+        r = np.mean([len(set(np.asarray(si[i]).tolist())
+                         & set(np.asarray(ei[i]).tolist())) / 10
+                     for i in range(q.shape[0])])
+        recalls.append(r)
+    assert all(b >= a - 1e-9 for a, b in zip(recalls, recalls[1:]))
+    assert recalls[-1] == 1.0
+
+
+def test_search_stats_counts(ivf_index):
+    q = jnp.ones((3, ivf_index.d)) / np.sqrt(ivf_index.d)
+    _, _, st = ivf.search(ivf_index, q, nprobe=4, k=5)
+    assert st.centroid_dists.shape == (3,)
+    assert int(st.centroid_dists[0]) == ivf_index.p
+    sizes = np.asarray(ivf_index.list_sizes)
+    assert np.all(np.asarray(st.list_dists) <= 4 * sizes.max())
+    assert np.all(np.asarray(st.list_dists) > 0)
+
+
+def test_cached_search_matches_full_when_cache_is_all(ivf_index,
+                                                      small_corpus):
+    """h == p: cached search must equal plain search exactly."""
+    q = jnp.asarray(small_corpus.conversations[0, :3])
+    cache_ids, cache_vecs = ivf.make_cache(ivf_index, q[0], h=ivf_index.p)
+    v1, i1, _ = ivf.search(ivf_index, q, nprobe=8, k=10)
+    v2, i2, sel, _ = ivf.search_cached(ivf_index, cache_ids, cache_vecs,
+                                       q, nprobe=8, k=10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_kmeans_balance_respects_capacity(rng):
+    x = jnp.asarray(rng.normal(size=(500, 16)).astype(np.float32))
+    res = kmeans.fit_balanced(x, 8, iters=4, capacity_factor=1.2)
+    cap = int(1.2 * 500 / 8 + 1)
+    assert int(res.sizes.max()) <= cap
+    assert int(res.sizes.sum()) == 500
+    # every point assigned to a real cluster
+    assert np.all(np.asarray(res.assignment) >= 0)
+    assert np.all(np.asarray(res.assignment) < 8)

@@ -1,0 +1,122 @@
+"""TopLoc behaviour: the paper's mechanisms (§2) as testable invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hnsw, ivf, toploc
+from repro.core.topk import intersect_count
+
+
+def test_ivf_start_builds_top_h_cache(ivf_index, small_corpus):
+    q0 = jnp.asarray(small_corpus.conversations[0, 0])
+    _, _, sess, stats = toploc.ivf_start(ivf_index, q0, h=8, nprobe=4, k=10)
+    csims = np.asarray(ivf_index.centroids @ q0)
+    expect = set(np.argsort(-csims)[:8].tolist())
+    assert set(np.asarray(sess.cache_ids).tolist()) == expect
+    assert int(stats.centroid_dists) == ivf_index.p     # full scan on turn 0
+
+
+def test_ivf_step_cached_work(ivf_index, small_corpus):
+    conv = jnp.asarray(small_corpus.conversations[0])
+    _, _, sess, _ = toploc.ivf_start(ivf_index, conv[0], h=8, nprobe=4,
+                                     k=10)
+    _, _, sess, stats = toploc.ivf_step(ivf_index, sess, conv[1],
+                                        nprobe=4, k=10, alpha=-1.0)
+    assert int(stats.centroid_dists) == 8               # h, not p
+    assert not bool(stats.refreshed)
+
+
+def test_ivf_static_cache_never_refreshes(ivf_index, small_corpus):
+    conv = jnp.asarray(small_corpus.conversations[1])
+    _, _, stats = toploc.ivf_conversation(ivf_index, conv, h=8, nprobe=4,
+                                          k=10, alpha=-1.0)
+    assert not np.any(np.asarray(stats.refreshed)[1:])
+
+
+def test_ivf_plus_refreshes_on_topic_shift(ivf_index, small_corpus):
+    """A hard topic shift must push |I0| below α·np and trigger refresh."""
+    d = small_corpus.doc_vecs.shape[1]
+    c0 = small_corpus.topic_centers[0]
+    c1 = small_corpus.topic_centers[
+        np.argmin(small_corpus.topic_centers @ c0)]      # farthest topic
+    conv = np.stack([c0, c0, c1, c1]).astype(np.float32)
+    _, _, stats = toploc.ivf_conversation(
+        ivf_index, jnp.asarray(conv), h=8, nprobe=4, k=10, alpha=0.5)
+    refreshed = np.asarray(stats.refreshed)
+    assert refreshed[2] or refreshed[3], (
+        f"i0={np.asarray(stats.i0)}, refreshed={refreshed}")
+    # and the refresh pays the extra full centroid scan
+    cd = np.asarray(stats.centroid_dists)
+    ref_turn = 2 if refreshed[2] else 3
+    assert cd[ref_turn] == 8 + ivf_index.p
+
+
+def test_i0_definition_matches_eq1(ivf_index, small_corpus):
+    """|I0| = |top_np(qj, C0) ∩ top_np(q0, C0)| computed independently."""
+    conv = jnp.asarray(small_corpus.conversations[2])
+    h, npb = 8, 4
+    _, _, sess, _ = toploc.ivf_start(ivf_index, conv[0], h=h, nprobe=npb,
+                                     k=10)
+    _, _, _, stats = toploc.ivf_step(ivf_index, sess, conv[1],
+                                     nprobe=npb, k=10, alpha=-1.0)
+    cache = np.asarray(sess.cache_ids)
+    cvecs = np.asarray(ivf_index.centroids)[cache]
+    top_qj = cache[np.argsort(-(cvecs @ np.asarray(conv[1])))[:npb]]
+    top_q0 = cache[np.argsort(-(cvecs @ np.asarray(conv[0])))[:npb]]
+    expect = len(set(top_qj.tolist()) & set(top_q0.tolist()))
+    assert int(stats.i0) == expect
+
+
+def test_toploc_reduces_work_and_holds_recall(ivf_index, small_corpus):
+    """The paper's core claim, miniature: much less centroid work at
+    comparable effectiveness on topically-local conversations."""
+    docs = jnp.asarray(small_corpus.doc_vecs)
+    tot_plain, tot_cached, rec_plain, rec_cached = 0, 0, [], []
+    for c in range(small_corpus.conversations.shape[0]):
+        conv = jnp.asarray(small_corpus.conversations[c])
+        ev, ei = ivf.exact_search(docs, conv, 10)
+        v, i, st = toploc.ivf_conversation(ivf_index, conv, h=8, nprobe=4,
+                                           k=10, alpha=0.1)
+        vp, ip, stp = toploc.ivf_conversation(ivf_index, conv, h=8,
+                                              nprobe=4, k=10, mode="plain")
+        tot_cached += int(np.asarray(st.centroid_dists).sum())
+        tot_plain += int(np.asarray(stp.centroid_dists).sum())
+        for t in range(conv.shape[0]):
+            gold = set(np.asarray(ei[t]).tolist())
+            rec_cached.append(len(set(np.asarray(i[t]).tolist()) & gold))
+            rec_plain.append(len(set(np.asarray(ip[t]).tolist()) & gold))
+    assert tot_cached < 0.5 * tot_plain          # ≥2x less centroid work
+    assert np.mean(rec_cached) >= np.mean(rec_plain) - 1.0
+
+
+def test_hnsw_entry_point_session(hnsw_index, small_corpus):
+    q0 = jnp.asarray(small_corpus.conversations[0, 0])
+    v, i, sess, stats = toploc.hnsw_start(hnsw_index, q0, ef=16, k=5, up=2)
+    assert int(sess.entry_point) == int(i[0])
+    q1 = jnp.asarray(small_corpus.conversations[0, 1])
+    v2, i2, sess2, stats2 = toploc.hnsw_step(hnsw_index, sess, q1,
+                                             ef=16, k=5)
+    assert int(sess2.entry_point) == int(sess.entry_point)  # static anchor
+    assert int(stats2.graph_dists) > 0
+
+
+def test_hnsw_conversation_work_reduction(hnsw_index, small_corpus):
+    conv = jnp.asarray(small_corpus.conversations[0][:, :])
+    _, i_t, st = toploc.hnsw_conversation(hnsw_index, conv, ef=16, k=5,
+                                          up=2)
+    _, i_p, st_p = toploc.hnsw_conversation(hnsw_index, conv, ef=16, k=5,
+                                            mode="plain")
+    # follow-up turns must do less graph work than plain (no descent)
+    t_work = np.asarray(st.graph_dists)[1:].mean()
+    p_work = np.asarray(st_p.graph_dists)[1:].mean()
+    assert t_work < p_work
+
+
+def test_intersect_count_basic():
+    a = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    b = jnp.asarray([3, 4, 5, 6], jnp.int32)
+    assert int(intersect_count(a, b)) == 2
+    assert int(intersect_count(a, a)) == 4
+    pad = jnp.asarray([-1, -1, 1, 2], jnp.int32)
+    assert int(intersect_count(pad, a)) == 2

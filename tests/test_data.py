@@ -1,0 +1,123 @@
+"""Data substrate: synthetic workload properties, tokenizer, pipeline."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.data import pipeline as PL
+from repro.data import synthetic as SY
+from repro.data import tokenizer as TK
+
+
+def test_workload_structure(small_corpus):
+    wl = small_corpus
+    n = wl.doc_vecs.shape[0]
+    # unit norm corpus
+    np.testing.assert_allclose(np.linalg.norm(wl.doc_vecs, axis=1), 1.0,
+                               rtol=1e-5)
+    # qrels exist for every (conv, turn) with grades in 1..3
+    for (c, t), g in wl.qrels.items():
+        assert len(g) == 20
+        assert set(g.values()) <= {1, 2, 3}
+    # conversations stay near their topic centre
+    sims = np.einsum("ctd,ctd->ct", wl.conversations,
+                     wl.topic_centers[wl.conv_topics])
+    assert sims.mean() > 0.6
+
+
+def test_exact_search_is_metric_upper_bound(small_corpus):
+    """Exact search gets (near-)perfect metrics by construction of qrels."""
+    wl = small_corpus
+    scores = wl.conversations.reshape(-1, 32) @ wl.doc_vecs.T
+    top10 = np.argsort(-scores, -1)[:, :10].reshape(
+        wl.conversations.shape[0], -1, 10)
+    m = SY.evaluate_run(top10, wl)
+    assert m["mrr@10"] == 1.0
+    assert m["ndcg@10"] > 0.95
+
+
+def test_hard_set_is_harder():
+    easy = SY.make_workload(SY.WorkloadConfig(
+        n_docs=1000, d=32, n_topics=8, n_conversations=4,
+        turns_per_conversation=6, shift_prob=0.0, seed=1))
+    hard = SY.make_workload(SY.WorkloadConfig(
+        n_docs=1000, d=32, n_topics=8, n_conversations=4,
+        turns_per_conversation=6, shift_prob=0.4, seed=1))
+    # topic shifts: in the hard set consecutive turns change topic more
+    easy_changes = (np.diff(easy.conv_topics, axis=1) != 0).mean()
+    hard_changes = (np.diff(hard.conv_topics, axis=1) != 0).mean()
+    assert hard_changes > easy_changes
+
+
+def test_tokenizer_deterministic_and_padded():
+    ids1, m1 = TK.encode("hello world of retrieval", 1000, 12)
+    ids2, m2 = TK.encode("hello world of retrieval", 1000, 12)
+    np.testing.assert_array_equal(ids1, ids2)
+    assert ids1[0] == TK.CLS
+    assert m1[:5].all() and not m1[5:].any()
+    assert (ids1[m1] >= 0).all() and (ids1 < 1000).all()
+    batch, masks = TK.encode_batch(["a b", "c d e"], 1000, 8)
+    assert batch.shape == (2, 8)
+
+
+def test_text_corpus_topic_signal(small_corpus):
+    docs, queries = SY.make_text_corpus(small_corpus, vocab=1024,
+                                        doc_len=32, query_len=8)
+    assert docs.shape == (small_corpus.doc_vecs.shape[0], 32)
+    assert (docs[:, 0] == 1).all()          # CLS
+    # same-topic docs share vocabulary band
+    t0 = np.where(small_corpus.doc_topic == 0)[0][:2]
+    t1 = np.where(small_corpus.doc_topic == 1)[0][:2]
+    if len(t0) == 2 and len(t1) == 2:
+        def band(x):
+            toks = x[x >= 512]
+            return set(toks.tolist())
+        same = len(band(docs[t0[0]]) & band(docs[t0[1]]))
+        diff = len(band(docs[t0[0]]) & band(docs[t1[0]]))
+        assert same >= diff
+
+
+def test_batch_iterator_epochs():
+    data = {"x": np.arange(10), "y": np.arange(10) * 2}
+    it = PL.batch_iterator(data, 4, shuffle=False)
+    b1 = next(it)
+    assert b1["x"].shape == (4,)
+    np.testing.assert_array_equal(b1["y"], b1["x"] * 2)
+    # drop_remainder: two batches per epoch, then wraps
+    batches = [next(it) for _ in range(3)]
+    assert all(b["x"].shape == (4,) for b in batches)
+
+
+def test_prefetcher():
+    it = iter(range(20))
+    pf = PL.Prefetcher(it, depth=2)
+    got = [next(pf) for _ in range(20)]
+    assert got == list(range(20))
+    pf.close()
+
+
+def test_sample_trees_format():
+    from repro.data import graph as GR
+    src, dst, feats, labels = GR.sbm_graph(300, 2000, 4, d_feat=8, seed=0)
+    csr = GR.edges_to_csr(src, dst, 300)
+    samp = GR.NeighborSampler(csr, feats, labels, fanouts=(3, 2), seed=0)
+    batch = samp.sample_trees(np.arange(8))
+    tn = 1 + 3 + 6
+    assert batch["x"].shape == (8, tn, 8)
+    assert batch["edge_src"].shape == (8, tn - 1)
+    # every valid edge points child -> ancestor (dst index < src index)
+    em = batch["edge_mask"]
+    assert (batch["edge_dst"][em] < batch["edge_src"][em]).all()
+    # root features match the seeds
+    np.testing.assert_allclose(batch["x"][:, 0], feats[np.arange(8)])
+    # and it feeds the gin tree loss
+    import jax, jax.numpy as jnp
+    from repro.models import gnn
+    cfg = gnn.GINConfig(n_layers=2, d_hidden=8, d_in=8, n_classes=4)
+    params = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    def tree_logits(x, es, ed, em):
+        return gnn.forward_node(params, cfg, x, es, ed, em)[0]
+    logits = jax.vmap(tree_logits)(
+        jnp.asarray(batch["x"]), jnp.asarray(batch["edge_src"]),
+        jnp.asarray(batch["edge_dst"]), jnp.asarray(batch["edge_mask"]))
+    assert logits.shape == (8, 4)
+    assert bool(jnp.isfinite(logits).all())

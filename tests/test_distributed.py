@@ -1,0 +1,129 @@
+"""Distributed building blocks on a single host: shard_map collectives
+run on a 1-device mesh (semantics identical; production meshes are
+exercised by launch/dryrun.py)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ivf
+from repro.core.topk import distributed_topk
+from repro.distributed import collectives as COL
+from repro.distributed import sharding as SH
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("model",))
+
+
+def test_sharded_corpus_topk_matches_exact(mesh1, rng):
+    corpus = jnp.asarray(rng.normal(size=(256, 16)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    v, i = COL.sharded_corpus_topk(mesh1, corpus, q, 10)
+    ev, ei = ivf.exact_search(corpus, q, 10)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ei))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(ev), rtol=1e-5)
+
+
+def test_sharded_ivf_probe_matches_local(mesh1, rng):
+    from repro.kernels import ref
+    p, lmax, d, b, npb, k = 16, 32, 8, 3, 4, 5
+    lv = jnp.asarray(rng.normal(size=(p, lmax, d)).astype(np.float32))
+    li = jnp.asarray(rng.integers(0, 10_000, (p, lmax)).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    sel = jnp.asarray(np.stack([rng.permutation(p)[:npb]
+                                for _ in range(b)]).astype(np.int32))
+    v, i = COL.sharded_ivf_probe(mesh1, lv, li, q, sel, k)
+    rv, ri = ref.ivf_scan_batch(q, lv, li, sel, k)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_distributed_topk_single_axis(mesh1, rng):
+    v = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 100, (2, 8)).astype(np.int32))
+
+    def f(v, ids):
+        return distributed_topk(v, ids, 4, "model")
+
+    out_v, out_i = jax.shard_map(f, mesh=mesh1,
+                                 in_specs=(P(), P()),
+                                 out_specs=(P(), P()),
+                                 check_vma=False)(v, ids)
+    ev, pos = jax.lax.top_k(v, 4)
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ev),
+                               rtol=1e-6)
+
+
+def test_lm_param_specs_match_param_tree():
+    """Spec pytrees must mirror the param pytrees structurally for every
+    LM arch (a mismatch kills the dry-run)."""
+    from repro.configs import get
+    from repro.models import transformer as TF
+    ax = SH.Axes(data=("data",), model="model")
+    for arch_id in ("grok-1-314b", "deepseek-v2-lite-16b", "qwen1.5-4b",
+                    "qwen3-14b", "yi-9b"):
+        cfg = get(arch_id).make_smoke_config()
+        structs = jax.eval_shape(
+            lambda: TF.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = SH.lm_param_specs(cfg, ax)
+        # structural zip: raises on mismatch
+        jax.tree.map(lambda sp, st: None, specs, structs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+
+def test_opt_specs_match_opt_tree():
+    from repro.configs import get
+    from repro.models import transformer as TF
+    from repro.optim import optimizers as O
+    ax = SH.Axes(data=("data",), model="model")
+    cfg = get("grok-1-314b").make_smoke_config()
+    structs = jax.eval_shape(
+        lambda: TF.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = SH.lm_param_specs(cfg, ax)
+    for name, opt in (("adamw", O.adamw(1e-3)),
+                      ("adafactor", O.adafactor(1e-3))):
+        ostructs = jax.eval_shape(opt.init, structs)
+        ospecs = SH.lm_opt_specs(name, pspecs, structs)
+        jax.tree.map(lambda sp, st: None, ospecs, ostructs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+
+def test_axes_from_mesh():
+    m1 = jax.make_mesh((1, 1), ("data", "model"))
+    ax = SH.from_mesh(m1)
+    assert ax.data == ("data",) and ax.model == "model"
+
+
+def test_compressed_psum_under_shard_map(mesh1, rng):
+    """int8 error-feedback all-reduce compiles + matches fp32 mean on a
+    1-shard mesh (numerics identical path to multi-shard)."""
+    from repro.optim import grad as G
+    g = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32))}
+    e = {"w": jnp.zeros((32,))}
+
+    def f(gw, ew):
+        deq, new_e = G.compressed_mean({"w": gw}, {"w": ew},
+                                       axis_name="model")
+        return deq["w"], new_e["w"]
+
+    deq, new_e = jax.shard_map(f, mesh=mesh1, in_specs=(P(), P()),
+                               out_specs=(P(), P()),
+                               check_vma=False)(g["w"], e["w"])
+    # 1 shard: compressed mean == dequantised value; error bounded
+    q_err = np.abs(np.asarray(deq) - np.asarray(g["w"]))
+    scale = np.abs(np.asarray(g["w"])).max() / 127
+    assert q_err.max() <= scale * 0.51
+    np.testing.assert_allclose(np.asarray(new_e),
+                               np.asarray(g["w"]) - np.asarray(deq),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_adaptive_entry_point_mode(hnsw_index, small_corpus):
+    from repro.core import toploc
+    conv = jnp.asarray(small_corpus.conversations[0])
+    v, i, st = toploc.hnsw_conversation(hnsw_index, conv, ef=16, k=5,
+                                        mode="adaptive")
+    assert bool(jnp.isfinite(v).all())
+    assert np.asarray(st.graph_dists)[1:].min() > 0

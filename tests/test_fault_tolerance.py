@@ -1,0 +1,122 @@
+"""Checkpoint/restart + failure injection: resumed run == continuous run."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as C
+from repro.distributed import elastic, fault
+from repro.optim import optimizers as O
+
+
+def _make_step():
+    opt = O.adamw(1e-2)
+
+    @jax.jit
+    def step(params, opt_state, x):
+        def loss(p):
+            return jnp.sum((x @ p["w"]) ** 2)
+        grads = jax.grad(loss)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return O.apply_updates(params, updates), opt_state
+
+    return opt, step
+
+
+def _train(ckpt_dir, n_steps, resume, fail: fault.FailureInjector,
+           every=2):
+    opt, step = _make_step()
+    params = {"w": jnp.ones((8, 8))}
+    opt_state = opt.init(params)
+    start = 0
+    if resume:
+        latest = C.latest_step(ckpt_dir)
+        if latest is not None:
+            state = C.restore(ckpt_dir, latest,
+                              {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = latest
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)
+                                                    ).astype(np.float32))
+    for s in range(start, n_steps):
+        fail.check(s)
+        params, opt_state = step(params, opt_state, x)
+        if (s + 1) % every == 0 or s + 1 == n_steps:
+            C.save(ckpt_dir, s + 1, {"params": params, "opt": opt_state})
+    return params
+
+
+def test_restart_bitexact(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    # continuous run
+    p_ref = _train(d1, 10, False, fault.FailureInjector([]))
+    # crash at steps 3 and 7, restart from checkpoints
+    inj = fault.FailureInjector([3, 7])
+    p_rec = fault.run_with_restarts(
+        lambda resume: _train(d2, 10, resume, inj))
+    np.testing.assert_array_equal(np.asarray(p_ref["w"]),
+                                  np.asarray(p_rec["w"]))
+
+
+def test_injector_fires_once():
+    inj = fault.FailureInjector([5])
+    with pytest.raises(fault.SimulatedFailure):
+        inj.check(5)
+    inj.check(5)   # second pass: no raise
+
+
+def test_supervisor_gives_up():
+    inj = fault.FailureInjector(list(range(100)))
+
+    calls = []
+
+    def run(resume):
+        calls.append(resume)
+        inj.check(len(calls) - 1)
+        return 0
+
+    with pytest.raises(fault.SimulatedFailure):
+        fault.run_with_restarts(run, max_restarts=3)
+    assert len(calls) == 4   # initial + 3 restarts, 4th failure surfaces
+
+
+def test_atomic_save_leaves_no_partial(tmp_path):
+    d = str(tmp_path)
+    C.save(d, 1, {"w": jnp.ones((4,))})
+    files = os.listdir(d)
+    assert files == ["ckpt_0000000001.npz"]
+    assert not any(f.endswith(".tmp.npz") for f in files)
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    C.save(d, 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        C.restore(d, 1, {"w": jnp.ones((5,))})
+    with pytest.raises(KeyError):
+        C.restore(d, 1, {"other": jnp.ones((4,))})
+
+
+def test_elastic_mesh_shapes():
+    assert elastic.choose_mesh_shape(256)[0] == (16, 16)
+    assert elastic.choose_mesh_shape(512, multi_pod=True)[0] == (2, 16, 16)
+    assert elastic.choose_mesh_shape(24)[0] == (2, 12)
+    assert elastic.choose_mesh_shape(7)[0] == (1, 7)
+    shape, axes = elastic.choose_mesh_shape(1)
+    assert shape == (1, 1)
+
+
+def test_elastic_restore_across_mesh_sizes(tmp_path):
+    """Save from one layout, restore + re-place on another (1-device CPU
+    host stands in; the specs path is identical)."""
+    from jax.sharding import PartitionSpec as P
+    d = str(tmp_path)
+    params = {"w": jnp.arange(16.0).reshape(4, 4)}
+    C.save(d, 1, params)
+    mesh = elastic.make_elastic_mesh(1, preferred_model=1)
+    restored = C.restore(d, 1, params)
+    placed = elastic.replace_on_mesh(restored, {"w": P()}, mesh)
+    np.testing.assert_array_equal(np.asarray(placed["w"]),
+                                  np.asarray(params["w"]))

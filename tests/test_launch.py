@@ -1,0 +1,99 @@
+"""Launch-layer units that don't need 512 devices: analysis parsing,
+roofline math, mesh helpers, serve driver plumbing."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.launch import analysis as AN
+
+
+SAMPLE_HLO = """
+HloModule jit_step
+
+%while_body_1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[64,512]{1,0} all-gather(%y), replica_groups=[8,32]<=[256], dimensions={1}
+}
+
+ENTRY %main () -> f32[] {
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond, body=%while_body_1
+  %rs = f32[32,64]{1,0} reduce-scatter(%z), replica_groups=[16,16]<=[256]
+  %cp = f32[16,16]{1,0} collective-permute(%q), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_parsing():
+    total, by_kind = AN.collective_bytes_in(SAMPLE_HLO, 16)
+    # all-reduce: 128*256*4 * 2*(16-1)/16
+    ar = 128 * 256 * 4 * 2 * 15 / 16
+    # all-gather: 64*512*2 * (32-1)/32
+    ag = 64 * 512 * 2 * 31 / 32
+    # reduce-scatter: 32*64*4 * (16-1)
+    rs = 32 * 64 * 4 * 15
+    cp = 16 * 16 * 4
+    assert by_kind["all-reduce"] == pytest.approx(ar)
+    assert by_kind["all-gather"] == pytest.approx(ag)
+    assert by_kind["reduce-scatter"] == pytest.approx(rs)
+    assert by_kind["collective-permute"] == pytest.approx(cp)
+    assert total == pytest.approx(ar + ag + rs + cp)
+
+
+def test_while_body_detection():
+    bodies = AN.while_body_names(SAMPLE_HLO)
+    assert "while_body_1" in bodies
+    comps = AN.split_computations(SAMPLE_HLO)
+    assert any("while_body_1" in k for k in comps)
+
+
+def test_shape_bytes():
+    assert AN._shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert AN._shape_bytes("bf16[8]") == 16
+    assert AN._shape_bytes("pred[4,4]") == 16
+    # tuple shapes sum elements
+    assert AN._shape_bytes("(f32[2], s32[2])") == 16
+
+
+def test_roofline_terms_math():
+    cost = AN.CellCost(
+        flops=197e12,          # exactly 1 second of one chip
+        hbm_bytes=819e9,       # exactly 1 second of HBM
+        coll_bytes=25e9,       # 0.5 s at 50 GB/s
+        coll_by_kind={}, mem_args=0, mem_temp=0, mem_output=0,
+        peak_memory=0, raw_flops=197e12)
+    roof = AN.roofline_terms(cost, chips=256, model_flops=256 * 197e12)
+    assert roof.compute_s == pytest.approx(1.0)
+    assert roof.memory_s == pytest.approx(1.0)
+    assert roof.collective_s == pytest.approx(0.5)
+    assert roof.model_flops_ratio == pytest.approx(1.0)
+    assert roof.dominant in ("compute", "memory")
+
+
+def test_calibration_adjustment():
+    # flops(L) = fixed + L·per_layer ⇒ analyze with calibration matches
+    cost = AN.CellCost
+    import types
+    class FakeCompiled:
+        def cost_analysis(self):
+            return {"flops": 100.0, "bytes accessed": 1000.0}
+        def as_text(self):
+            return "ENTRY %main () -> f32[] { %r = f32[1]{0} add(%a,%b) }"
+        def memory_analysis(self):
+            return types.SimpleNamespace(argument_size_in_bytes=1,
+                                         temp_size_in_bytes=2,
+                                         output_size_in_bytes=3,
+                                         generated_code_size_in_bytes=0)
+    c = AN.analyze_compiled(FakeCompiled(), trip_count=48,
+                            calibration=(10.0, 100.0, 5.0))
+    assert c.flops == pytest.approx(100.0 + 47 * 10.0)
+    assert c.hbm_bytes == pytest.approx(1000.0 + 47 * 100.0)
+    assert "calibrated" in c.adjust_note
+
+
+def test_elastic_and_debug_mesh():
+    from repro.launch import mesh as ML
+    m = ML.make_debug_mesh((1, 1), ("data", "model"))
+    assert m.shape == {"data": 1, "model": 1}
+    with pytest.raises(RuntimeError):
+        ML.make_production_mesh()      # only 1 CPU device in tests

@@ -1,0 +1,117 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ivf, topk
+from repro.kernels import ops, ref, sorting
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(st.integers(1, 6).map(lambda e: 2 ** e),
+       st.integers(0, 2 ** 31 - 1))
+def test_bitonic_equals_sort(n, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    i = jnp.arange(n, dtype=jnp.int32)
+    sv, _ = sorting.bitonic_sort_desc(v, i)
+    np.testing.assert_allclose(np.asarray(sv),
+                               -np.sort(-np.asarray(v)))
+
+
+@SET
+@given(st.integers(2, 64), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+def test_topk_subset_dominance(n, k, seed):
+    """Scores of top-k over a superset dominate those over a subset."""
+    k = min(k, n // 2) or 1
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    v_full, _ = topk.topk(scores, k)
+    v_half, _ = topk.topk(scores[: n // 2], min(k, n // 2))
+    m = min(k, n // 2)
+    assert np.all(np.asarray(v_full[:m]) >= np.asarray(v_half[:m]) - 1e-6)
+
+
+@SET
+@given(st.integers(1, 10), st.integers(1, 10), st.integers(0, 2 ** 31 - 1))
+def test_merge_topk_equals_concat_topk(ka, kb, seed):
+    rng = np.random.default_rng(seed)
+    k = min(ka + kb, 8)
+    va = -np.sort(-rng.normal(size=ka).astype(np.float32))
+    vb = -np.sort(-rng.normal(size=kb).astype(np.float32))
+    ia = np.arange(ka, dtype=np.int32)
+    ib = np.arange(100, 100 + kb, dtype=np.int32)
+    mv, mi = topk.merge_topk(jnp.asarray(va), jnp.asarray(ia),
+                             jnp.asarray(vb), jnp.asarray(ib), k)
+    expect = -np.sort(-np.concatenate([va, vb]))[:k]
+    np.testing.assert_allclose(np.asarray(mv), expect, rtol=1e-6)
+
+
+@SET
+@given(st.integers(4, 40), st.integers(4, 40), st.integers(0, 2 ** 31 - 1))
+def test_intersect_count_vs_python(na, nb, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.choice(100, na, replace=False).astype(np.int32)
+    b = rng.choice(100, nb, replace=False).astype(np.int32)
+    got = int(topk.intersect_count(jnp.asarray(a), jnp.asarray(b)))
+    assert got == len(set(a.tolist()) & set(b.tolist()))
+
+
+@SET
+@given(st.integers(20, 200), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_ivf_exactness_full_probe(n, p, seed):
+    """Property: IVF with nprobe == p is exhaustive search, any corpus."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    idx = ivf.build(jnp.asarray(x), p=p, iters=3,
+                    key=jax.random.PRNGKey(seed % 1000))
+    q = jnp.asarray(x[:2] + 0.01)
+    ev, ei = ivf.exact_search(jnp.asarray(x), q, 5)
+    _, si, _ = ivf.search(idx, q, nprobe=p, k=5)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ei))
+
+
+@SET
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_embedding_bag_linearity(bag, d, seed):
+    """bag(w1+w2) == bag(w1) + bag(w2) (linearity in weights)."""
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(50, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 50, (2, bag)).astype(np.int32))
+    w1 = jnp.asarray(rng.uniform(0, 1, (2, bag)).astype(np.float32))
+    w2 = jnp.asarray(rng.uniform(0, 1, (2, bag)).astype(np.float32))
+    lhs = ref.embedding_bag(table, ids, w1 + w2)
+    rhs = ref.embedding_bag(table, ids, w1) + ref.embedding_bag(table, ids,
+                                                                w2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4,
+                               atol=1e-5)
+
+
+@SET
+@given(st.integers(8, 64), st.integers(0, 2 ** 31 - 1))
+def test_streaming_topk_equals_topk(n, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    k = min(5, n)
+    v1, i1 = topk.streaming_topk(scores, k, block=8)
+    v2, i2 = jax.lax.top_k(scores, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+@SET
+@given(st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+def test_softmax_attention_rowstochastic(frac, seed):
+    """Attention output is a convex combination of values: bounded by
+    min/max of v along the sequence."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 1, 8, 4)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 8, 4)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, 8, 4)).astype(np.float32))
+    o = np.asarray(ref.mha_attention(q, k, v, causal=False))
+    vmin, vmax = np.asarray(v).min(axis=2), np.asarray(v).max(axis=2)
+    assert np.all(o <= vmax[:, :, None] + 1e-5)
+    assert np.all(o >= vmin[:, :, None] - 1e-5)

@@ -1,0 +1,117 @@
+"""Serving engine + scheduler behaviour."""
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import ivf
+from repro.serving.engine import ConversationalSearchEngine, ServingConfig
+from repro.serving.scheduler import (HedgedExecutor, MicroBatcher, Request)
+
+
+@pytest.fixture(scope="module")
+def engine_setup(small_corpus_mod):
+    wl = small_corpus_mod
+    idx = ivf.build(jnp.asarray(wl.doc_vecs), p=32, iters=4,
+                    key=jax.random.PRNGKey(0))
+    return wl, idx
+
+
+@pytest.fixture(scope="module")
+def small_corpus_mod():
+    from repro.data import synthetic as SY
+    return SY.make_workload(SY.WorkloadConfig(
+        n_docs=2000, d=32, n_topics=16, n_conversations=3,
+        turns_per_conversation=5, seed=1))
+
+
+def test_session_lifecycle(engine_setup):
+    wl, idx = engine_setup
+    eng = ConversationalSearchEngine(
+        ServingConfig(backend="ivf", strategy="toploc", nprobe=4, h=8,
+                      k=10), ivf_index=idx)
+    for t in range(3):
+        v, i = eng.query("c0", jnp.asarray(wl.conversations[0, t]))
+        assert v.shape == (10,) and i.shape == (10,)
+    assert "c0" in eng.sessions
+    # turn 0 pays the full scan; later turns pay h
+    assert eng.records[0].centroid_dists == idx.p
+    assert eng.records[1].centroid_dists == 8
+    eng.end_conversation("c0")
+    assert "c0" not in eng.sessions
+
+
+def test_strategies_work_ordering(engine_setup):
+    """plain pays p per turn; toploc pays h << p after turn 0."""
+    wl, idx = engine_setup
+    work = {}
+    for strat in ("plain", "toploc", "toploc+"):
+        eng = ConversationalSearchEngine(
+            ServingConfig(backend="ivf", strategy=strat, nprobe=4, h=8,
+                          alpha=0.1, k=10), ivf_index=idx)
+        for c in range(2):
+            for t in range(5):
+                eng.query(f"c{c}", jnp.asarray(wl.conversations[c, t]))
+        work[strat] = eng.summary()["mean_centroid_dists"]
+    assert work["toploc"] < work["plain"]
+    assert work["toploc+"] < work["plain"]
+
+
+def test_exact_backend(engine_setup):
+    wl, idx = engine_setup
+    eng = ConversationalSearchEngine(
+        ServingConfig(backend="exact", k=5),
+        doc_vecs=jnp.asarray(wl.doc_vecs))
+    v, i = eng.query("c", jnp.asarray(wl.conversations[0, 0]))
+    ev, ei = ivf.exact_search(jnp.asarray(wl.doc_vecs),
+                              jnp.asarray(wl.conversations[0, :1]), 5)
+    np.testing.assert_array_equal(i, np.asarray(ei[0]))
+
+
+def test_micro_batcher_flushes():
+    seen = []
+
+    def process(reqs):
+        seen.append(len(reqs))
+        return [r.payload * 2 for r in reqs]
+
+    mb = MicroBatcher(process, max_batch=4, max_wait_s=0.01)
+    futs = [mb.submit(Request("c", i)) for i in range(6)]
+    mb.flush_loop_once()
+    mb.flush_loop_once()
+    assert [f.result(timeout=1) for f in futs] == [0, 2, 4, 6, 8, 10]
+    assert seen[0] == 4 and seen[1] == 2
+
+
+def test_micro_batcher_propagates_errors():
+    def process(reqs):
+        raise RuntimeError("boom")
+
+    mb = MicroBatcher(process, max_batch=2, max_wait_s=0.001)
+    fut = mb.submit(Request("c", 1))
+    mb.flush_loop_once()
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=1)
+
+
+def test_hedged_executor_mitigates_straggler():
+    def fast(x):
+        return ("fast", x)
+
+    def slow(x):
+        time.sleep(0.25)
+        return ("slow", x)
+
+    # round-robin alternates; hedging should rescue calls landing on slow
+    ex = HedgedExecutor([fast, slow], hedge_quantile=0.5, min_history=4,
+                        hedge_floor_s=0.02)
+    results = [ex.call(i) for i in range(12)]
+    st = ex.stats()
+    assert st["hedges_issued"] > 0
+    assert st["hedges_won"] > 0
+    # every call returned a correct payload
+    assert all(r[1] == i for i, r in enumerate(results))
+    # p99 stays well under the slow replica's latency x2
+    assert st["p99_ms"] < 600

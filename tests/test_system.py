@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full loop on a reduced workload: synthetic conversational corpus →
+index build → conversational serving with TopLoc sessions → IR metrics.
+Asserts the paper's qualitative claims hold end to end:
+  (a) effectiveness of TopLoc ≈ plain ANN (within tolerance),
+  (b) work strictly decreases,
+  (c) the refresh mechanism fires on the topic-shifted (hard) set and
+      recovers effectiveness vs the static cache.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw, ivf, toploc
+from repro.data import synthetic as SY
+
+
+@pytest.fixture(scope="module")
+def system():
+    wl = SY.make_workload(SY.WorkloadConfig(
+        n_docs=4000, d=32, n_topics=24, n_conversations=6,
+        turns_per_conversation=6, query_drift=0.15, shift_prob=0.2,
+        seed=5))
+    # h << p is the regime where the |I0| proxy discriminates (paper
+    # uses h ∈ {512..8192} against p ∈ {2^15..2^18})
+    index = ivf.build(jnp.asarray(wl.doc_vecs), p=128, iters=6,
+                      key=jax.random.PRNGKey(0))
+    return wl, index
+
+
+def _run_all(index, wl, mode, alpha, h=16, nprobe=4):
+    ids_all, work = [], 0
+    refreshes = 0
+    for c in range(wl.conversations.shape[0]):
+        conv = jnp.asarray(wl.conversations[c])
+        _, ids, st = toploc.ivf_conversation(
+            index, conv, h=h, nprobe=nprobe, k=10, alpha=alpha, mode=mode)
+        ids_all.append(np.asarray(ids))
+        work += int(np.asarray(st.centroid_dists).sum())
+        refreshes += int(np.asarray(st.refreshed)[1:].sum())
+    metrics = SY.evaluate_run(np.stack(ids_all), wl)
+    return metrics, work, refreshes
+
+
+def test_end_to_end_effectiveness_and_work(system):
+    wl, index = system
+    m_plain, w_plain, _ = _run_all(index, wl, "plain", -1.0)
+    m_tl, w_tl, _ = _run_all(index, wl, "toploc", -1.0)
+    m_tlp, w_tlp, r_tlp = _run_all(index, wl, "toploc", 0.3)
+
+    # (a) effectiveness within tolerance of plain (paper: little loss)
+    assert m_tlp["ndcg@10"] >= m_plain["ndcg@10"] - 0.08, (m_tlp, m_plain)
+    # (b) work strictly decreases (h=16 vs p=128 per turn)
+    assert w_tl < 0.5 * w_plain
+    assert w_tlp < 0.5 * w_plain
+    # (c) refresh fires on the shifted set and closes the static-cache gap
+    assert r_tlp > 0
+    assert m_tlp["ndcg@10"] >= m_tl["ndcg@10"] - 1e-9
+
+
+def test_end_to_end_hnsw(system):
+    wl, _ = system
+    index = hnsw.build(wl.doc_vecs, m=8, ef_construction=32, seed=0)
+    ids_t, ids_p = [], []
+    work_t = work_p = 0
+    for c in range(3):
+        conv = jnp.asarray(wl.conversations[c])
+        _, it, st = toploc.hnsw_conversation(index, conv, ef=24, k=10,
+                                             up=2)
+        _, ip, sp = toploc.hnsw_conversation(index, conv, ef=24, k=10,
+                                             mode="plain")
+        ids_t.append(np.asarray(it))
+        ids_p.append(np.asarray(ip))
+        work_t += int(np.asarray(st.graph_dists)[1:].sum())
+        work_p += int(np.asarray(sp.graph_dists)[1:].sum())
+    wl3 = wl._replace(conversations=wl.conversations[:3])
+    m_t = SY.evaluate_run(np.stack(ids_t), wl3)
+    m_p = SY.evaluate_run(np.stack(ids_p), wl3)
+    assert work_t < work_p                       # entry point saves work
+    assert m_t["ndcg@10"] >= m_p["ndcg@10"] - 0.1
+
+
+def test_serving_engine_matches_library_path(system):
+    """The engine (session orchestration) must agree with the pure
+    library conversation scan."""
+    from repro.serving.engine import (ConversationalSearchEngine,
+                                      ServingConfig)
+    wl, index = system
+    conv = jnp.asarray(wl.conversations[0])
+    _, ids_lib, _ = toploc.ivf_conversation(index, conv, h=16, nprobe=8,
+                                            k=10, alpha=-1.0)
+    eng = ConversationalSearchEngine(
+        ServingConfig(backend="ivf", strategy="toploc", nprobe=8, h=16,
+                      k=10), ivf_index=index)
+    for t in range(conv.shape[0]):
+        _, ids_eng = eng.query("c", conv[t])
+        np.testing.assert_array_equal(ids_eng, np.asarray(ids_lib[t]))
