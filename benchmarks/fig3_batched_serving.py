@@ -1,0 +1,121 @@
+"""Fig 3 (ours): batched multi-conversation serving throughput sweep.
+
+Measures the tentpole claim of the batched serving path: draining the
+MicroBatcher into one padded device batch per flush amortises dispatch
+overhead across concurrent conversations, so turns/sec scales with the
+micro-batch size while per-turn results stay bit-identical to the
+sequential engine (tests/test_serving_batched.py pins the equivalence;
+this file measures the speedup rather than asserting it).
+
+Protocol: CONVS concurrent conversations × TURNS turns are replayed
+through ``BatchedConversationalSearchEngine`` with ``max_batch`` ∈
+BATCH_SIZES.  For each turn round every conversation submits one
+request, then the engine drains — so a batch size of 1 is the
+one-dispatch-per-turn baseline (the sequential engine's dispatch
+pattern) and larger sizes serve whole cohorts per dispatch.  Reported:
+turns/sec (wall), p95 request latency (enqueue → result, i.e. including
+queueing), and mean per-turn work counters as a sanity check that the
+strategy did not change under batching.
+
+  PYTHONPATH=src python benchmarks/fig3_batched_serving.py
+  BENCH_DOCS=20000 BENCH_CONVS=64 PYTHONPATH=src python benchmarks/fig3_batched_serving.py
+"""
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from repro.core import hnsw as HN
+from repro.core import ivf as IV
+from repro.data import synthetic as SY
+from repro.serving.engine import (BatchedConversationalSearchEngine,
+                                  ServingConfig)
+
+N_DOCS = int(os.environ.get("BENCH_DOCS", 6000))
+DIM = int(os.environ.get("BENCH_DIM", 64))
+CONVS = int(os.environ.get("BENCH_CONVS", 32))
+TURNS = int(os.environ.get("BENCH_TURNS", 6))
+PARTITIONS = int(os.environ.get("BENCH_PARTITIONS", 256))
+BATCH_SIZES = (1, 8, 32)
+REPEAT = int(os.environ.get("BENCH_REPEAT", 2))
+
+STRATEGIES = {
+    "ivf_plain": ServingConfig(backend="ivf", strategy="plain", nprobe=8,
+                               k=10),
+    "ivf_toploc+": ServingConfig(backend="ivf", strategy="toploc+",
+                                 nprobe=8, h=64, alpha=0.25, k=10),
+    "hnsw_toploc": ServingConfig(backend="hnsw", strategy="toploc",
+                                 ef_search=24, up=2, k=10),
+}
+
+
+def replay(cfg, ivf_idx, hnsw_idx, wl, batch_size):
+    """One full traffic replay; returns (wall_s, p95_ms, mean_work)."""
+    eng = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_idx if cfg.backend == "ivf" else None,
+        hnsw_index=hnsw_idx if cfg.backend == "hnsw" else None,
+        n_slots=max(CONVS, batch_size), max_batch=batch_size,
+        max_wait_s=0.0,
+        buckets=(1, 2, 4, 8, 16, 32))
+    t0 = time.perf_counter()
+    for t in range(TURNS):
+        futs = [eng.submit(f"c{c}", jnp.asarray(wl.conversations[c, t]))
+                for c in range(CONVS)]
+        eng.drain()
+        for f in futs:
+            f.result()
+    wall = time.perf_counter() - t0
+    s = eng.summary()
+    work = (s["mean_centroid_dists"] + s["mean_list_dists"]
+            + s["mean_graph_dists"])
+    return wall, s["p95_latency_ms"], work
+
+
+def main():
+    print(f"corpus: {N_DOCS} docs, d={DIM}, p={PARTITIONS}; traffic: "
+          f"{CONVS} conversations x {TURNS} turns")
+    wl = SY.make_workload(SY.WorkloadConfig(
+        n_docs=N_DOCS, d=DIM, n_topics=48, n_conversations=CONVS,
+        turns_per_conversation=TURNS, query_drift=0.15, shift_prob=0.1,
+        seed=3))
+    print("building IVF index ...")
+    ivf_idx = IV.build(jnp.asarray(wl.doc_vecs), p=PARTITIONS, iters=6,
+                       key=jax.random.PRNGKey(0))
+    print("building HNSW index ...")
+    hnsw_idx = HN.build(wl.doc_vecs, m=12, ef_construction=32)
+
+    turns = CONVS * TURNS
+    print(f"\n{'strategy':12s} {'batch':>6s} {'turns/s':>9s} "
+          f"{'p95 ms':>8s} {'work/turn':>10s}")
+    speedups = {}
+    for name, cfg in STRATEGIES.items():
+        tps_by_bs = {}
+        for bs in BATCH_SIZES:
+            # warmup replay compiles every bucket this size uses, then
+            # the timed replays measure steady-state serving
+            replay(cfg, ivf_idx, hnsw_idx, wl, bs)
+            walls, p95s, works = zip(*[
+                replay(cfg, ivf_idx, hnsw_idx, wl, bs)
+                for _ in range(REPEAT)])
+            wall = float(np.median(walls))
+            tps = turns / wall
+            tps_by_bs[bs] = tps
+            print(f"{name:12s} {bs:6d} {tps:9.1f} "
+                  f"{float(np.median(p95s)):8.2f} "
+                  f"{float(np.mean(works)):10.0f}")
+        speedups[name] = tps_by_bs[BATCH_SIZES[-1]] / tps_by_bs[1]
+        print(f"{name:12s}  batch={BATCH_SIZES[-1]} vs batch=1 speedup: "
+              f"{speedups[name]:.2f}x")
+
+    worst = min(speedups.values())
+    print(f"\nworst-case batching speedup across strategies: {worst:.2f}x "
+          f"({'OK: batch=32 beats batch=1' if worst > 1.0 else 'REGRESSION'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,17 +2,23 @@
 
 corpus → IVF + HNSW indexes → serving engine with per-conversation
 TopLoc sessions → multiple interleaved conversations → effectiveness +
-latency + work report, for all three strategies.
+latency + work report, for all three strategies — then the same traffic
+through the *batched* engine (one device dispatch per micro-batch of
+concurrent conversations, sessions resident in a SessionStore slab),
+which must return bit-identical rankings at higher throughput.
 
   PYTHONPATH=src python examples/conversational_serving.py
 """
+import time
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import hnsw, ivf
 from repro.data import synthetic as SY
-from repro.serving.engine import ConversationalSearchEngine, ServingConfig
+from repro.serving.engine import (BatchedConversationalSearchEngine,
+                                  ConversationalSearchEngine, ServingConfig)
 
 N_DOCS, D = 8000, 64
 wl = SY.make_workload(SY.WorkloadConfig(
@@ -58,3 +64,64 @@ for name, cfg in configs.items():
 
 print("\nTopLoc rows should match plain effectiveness at a fraction of "
       "the work — the paper's core claim.")
+
+# ---------------------------------------------------------------------------
+# Batched serving: N interleaved conversations per device dispatch
+# ---------------------------------------------------------------------------
+
+N_CONVS, N_TURNS = wl.conversations.shape[:2]
+print(f"\nbatched serving — {N_CONVS} interleaved conversations, one "
+      f"micro-batch per turn round:")
+print(f"{'strategy':14s} {'ms/turn seq':>12s} {'ms/turn batch':>14s} "
+      f"{'speedup':>8s} {'identical':>10s}")
+for name, cfg in configs.items():
+    seq = ConversationalSearchEngine(
+        cfg, ivf_index=ivf_idx if cfg.backend == "ivf" else None,
+        hnsw_index=hnsw_idx if cfg.backend == "hnsw" else None)
+    def make_batched():
+        return BatchedConversationalSearchEngine(
+            cfg, ivf_index=ivf_idx if cfg.backend == "ivf" else None,
+            hnsw_index=hnsw_idx if cfg.backend == "hnsw" else None,
+            n_slots=N_CONVS, max_batch=N_CONVS, max_wait_s=0.0)
+
+    # untimed warmup replay compiles the batched programs (jit cache is
+    # process-global, so the timed engine below starts warm but clean)
+    warm = make_batched()
+    for t in range(N_TURNS):
+        for c in range(N_CONVS):
+            warm.submit(f"c{c}", jnp.asarray(wl.conversations[c, t]))
+        warm.drain()
+    bat = make_batched()
+
+    # sequential reference pass (also warms the sequential jit cache)
+    seq_ids = {}
+    t0 = time.perf_counter()
+    for t in range(N_TURNS):
+        for c in range(N_CONVS):
+            _, ids = seq.query(f"c{c}", jnp.asarray(wl.conversations[c, t]))
+            seq_ids[c, t] = ids
+    seq_s = time.perf_counter() - t0
+
+    # batched pass: submit a whole turn round, then one flush serves it
+    same = True
+    t0 = time.perf_counter()
+    for t in range(N_TURNS):
+        futs = [(c, bat.submit(f"c{c}", jnp.asarray(wl.conversations[c, t])))
+                for c in range(N_CONVS)]
+        bat.drain()
+        for c, fut in futs:
+            _, ids = fut.result()
+            same &= bool(np.array_equal(ids, seq_ids[c, t]))
+    bat_s = time.perf_counter() - t0
+
+    turns = N_CONVS * N_TURNS
+    print(f"{name:14s} {seq_s / turns * 1e3:12.2f} "
+          f"{bat_s / turns * 1e3:14.2f} {seq_s / bat_s:8.2f}x "
+          f"{'yes' if same else 'NO':>10s}")
+
+print("\nThe batched engine serves every conversation's turn in one "
+      "dispatch (SessionStore gather → jitted batched TopLoc step → "
+      "scatter) and must reproduce the sequential rankings exactly.\n"
+      "With only 6 conversations the dispatch savings are modest (TopLoc "
+      "turns are already tiny); benchmarks/fig3_batched_serving.py sweeps "
+      "batch sizes 1/8/32 where batching wins decisively.")

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import common
 from repro.distributed import sharding as SH
 from repro.models import recsys as R
@@ -154,7 +155,7 @@ def build_bundle(cfg: R.TwoTowerConfig, shape: str, axes: SH.Axes, *,
                                               axis=-1)
                     return distributed_topk(v, ids, k, axes.model)
 
-                return jax.shard_map(
+                return compat.shard_map(
                     local,
                     in_specs=(P(axes.model, None, None),
                               P(axes.model, None), P(None, None),
@@ -249,7 +250,7 @@ def build_bundle(cfg: R.TwoTowerConfig, shape: str, axes: SH.Axes, *,
                     gids = i.astype(jnp.int32) + idx * n_local
                     return distributed_topk(v, gids, k, axes.model)
 
-                return jax.shard_map(
+                return compat.shard_map(
                     local,
                     in_specs=(P(axes.model, None), P(None, None)),
                     out_specs=(P(None, None), P(None, None)),

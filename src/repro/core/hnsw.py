@@ -162,6 +162,20 @@ def load(path: str) -> HNSWIndex:
 # JAX query path
 # ---------------------------------------------------------------------------
 
+def _dots(vecs: jax.Array, q: jax.Array) -> jax.Array:
+    """Per-candidate dot products as an explicit multiply-reduce.
+
+    A ``vecs @ q`` matvec lowers to a dot_general whose reduction tiling
+    depends on the vmap batch size (XLA canonicalises unit batch dims
+    away), so the same query scored inside a B=1 and a B=32 ``search``
+    call could differ in the last ulp.  The elementwise-multiply +
+    trailing-axis reduce keeps one reduction order per row regardless of
+    batch size — this is what makes the batched serving path
+    (``toploc.hnsw_step_batch``) bit-identical to the sequential one.
+    """
+    return jnp.sum(vecs * q[None, :], axis=-1)
+
+
 def _greedy_level(vectors, adj, q, cur, cur_s, ndist):
     """Greedy hill-climb on one level (vectorised neighbour expansion)."""
     def cond(st):
@@ -173,7 +187,7 @@ def _greedy_level(vectors, adj, q, cur, cur_s, ndist):
         nbrs = adj[cur]                              # (deg,)
         valid = nbrs >= 0
         vecs = vectors[jnp.maximum(nbrs, 0)]
-        s = jnp.where(valid, vecs @ q, -jnp.inf)
+        s = jnp.where(valid, _dots(vecs, q), -jnp.inf)
         j = jnp.argmax(s)
         better = s[j] > cur_s
         ndist = ndist + jnp.sum(valid.astype(jnp.int32))
@@ -189,7 +203,7 @@ def _greedy_level(vectors, adj, q, cur, cur_s, ndist):
 def _search_layer0(vectors, adj0, q, entry, ef: int, max_steps: int):
     """Fixed-width beam realisation of the ef-search candidate loop."""
     n = vectors.shape[0]
-    entry_s = vectors[entry] @ q
+    entry_s = _dots(vectors[entry][None], q)[0]
     cand_v = jnp.full((ef,), -jnp.inf).at[0].set(entry_s)
     cand_i = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
     expanded = jnp.zeros((ef,), bool)
@@ -216,7 +230,7 @@ def _search_layer0(vectors, adj0, q, entry, ef: int, max_steps: int):
         nbrs = adj0[node]                            # (2M,)
         ok = (nbrs >= 0) & ~visited[jnp.maximum(nbrs, 0)]
         vecs = vectors[jnp.maximum(nbrs, 0)]
-        s = jnp.where(ok, vecs @ q, -jnp.inf)
+        s = jnp.where(ok, _dots(vecs, q), -jnp.inf)
         ndist = ndist + jnp.sum(ok.astype(jnp.int32))
         visited = visited.at[jnp.maximum(nbrs, 0)].max(ok)
         # merge new candidates into the beam (expanded flag rides along)
@@ -254,7 +268,7 @@ def search(index: HNSWIndex, queries: jax.Array, *, ef: int, k: int,
             start = override
         else:
             cur = index.entry_point
-            cur_s = index.vectors[cur] @ q
+            cur_s = _dots(index.vectors[cur][None], q)[0]
             ndist = ndist + 1
             L = index.top_level
             for lvl in range(L - 1, -1, -1):   # top level → level 1

@@ -50,23 +50,54 @@ def _respawn_empty(centroids: jax.Array, counts: jax.Array, points: jax.Array,
     return jnp.where(empty, repl, centroids)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "iters", "block"))
+def _plusplus_init(points: jax.Array, p: int, key: jax.Array) -> jax.Array:
+    """k-means++ seeding (Arthur & Vassilvitskii): each next seed is drawn
+    with probability proportional to its squared distance from the nearest
+    seed so far.  O(p·n) — used where codebook quality matters more than
+    init cost (PQ subspace codebooks)."""
+    n = points.shape[0]
+    sq = jnp.sum(points ** 2, -1)
+    k0, k_rest = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+
+    def pick(carry, k):
+        idx, d2 = carry
+        # squared distance to the newest seed, folded into the running min
+        c = points[idx]
+        d2 = jnp.minimum(d2, sq + jnp.sum(c ** 2) - 2.0 * (points @ c))
+        probs = jnp.maximum(d2, 0.0)
+        probs = probs / jnp.maximum(probs.sum(), 1e-30)
+        nxt = jax.random.choice(k, n, p=probs)
+        return (nxt, d2), idx
+
+    keys = jax.random.split(k_rest, p)
+    _, seeds = jax.lax.scan(pick, (first, jnp.full((n,), jnp.inf)), keys)
+    return points[seeds]
+
+
+@functools.partial(jax.jit, static_argnames=("p", "iters", "block", "init"))
 def kmeans_fit(points: jax.Array, p: int, *, iters: int = 10,
-               key: Optional[jax.Array] = None, block: int = 0) -> Tuple[jax.Array, jax.Array]:
+               key: Optional[jax.Array] = None, block: int = 0,
+               init: str = "random") -> Tuple[jax.Array, jax.Array]:
     """Lloyd iterations; returns (centroids (p,d), assignment (n,)).
 
     Pure jnp — shard ``points`` over the data axis under pjit and the
     segment_sum/argmax pattern partitions automatically (the centroid
     statistics become an all-reduce).  ``block`` is unused here (kept for
-    API parity with the kernelised assigner).
+    API parity with the kernelised assigner).  ``init``: 'random' (sample
+    p points) or '++' (k-means++ seeding — better local optima, O(p·n)
+    extra init work).
     """
     del block
     n = points.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
     k_init, k_iter = jax.random.split(key)
-    init_idx = jax.random.choice(k_init, n, (p,), replace=n < p)
-    centroids0 = points[init_idx]
+    if init == "++":
+        centroids0 = _plusplus_init(points, p, k_init)
+    else:
+        init_idx = jax.random.choice(k_init, n, (p,), replace=n < p)
+        centroids0 = points[init_idx]
 
     def body(carry, k):
         centroids, _ = carry

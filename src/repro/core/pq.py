@@ -51,8 +51,10 @@ def train(vectors: jax.Array, m: int, *, iters: int = 8,
     subs = vectors.reshape(n, m, d_sub)
     books = []
     for j in range(m):
+        # ++ seeding: random init leaves enough near-duplicate codewords
+        # in the low-dim subspaces to visibly hurt ADC fidelity
         c, _ = _kmeans.kmeans_fit(subs[:, j], n_codes, iters=iters,
-                                  key=keys[j])
+                                  key=keys[j], init="++")
         books.append(c)
     return PQCodebook(jnp.stack(books), m)
 

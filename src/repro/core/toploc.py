@@ -173,6 +173,232 @@ def hnsw_step(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Batched multi-conversation entry points (serving path)
+#
+# One device dispatch serves a whole micro-batch of concurrent
+# conversations: session pytrees carry a leading batch dim (gathered from
+# a ``serving.sessions.SessionStore`` slab), and mixed first-turn /
+# follow-up batches are handled with an ``is_first`` mask and pure
+# ``jnp.where`` selects — no ``lax.cond`` — so every row runs the same
+# program (TPU-friendly, no divergence).  The select logic means a batch
+# always *executes* the refresh scan when any row might need it; the
+# ``TurnStats`` counters keep reporting the paper's cost model (what a
+# scalar implementation would pay), which is the documented semantics of
+# the work accounting.
+#
+# Numerics: batched results are bit-identical to the sequential
+# ``ivf_start``/``ivf_step``/``hnsw_*`` paths.  The one subtlety is the
+# full centroid scan: ``(B, d) @ (d, p)`` lowers to a tiled matmul whose
+# reduction order differs from the sequential ``(p, d) @ (d,)`` matvec,
+# so ``_bcast_centroid_scores`` broadcasts the centroids into a batch
+# dim instead — a batched dot_general reduces each row exactly like the
+# matvec (tests/test_serving_batched.py pins this down).
+# ---------------------------------------------------------------------------
+
+
+def _bcast_centroid_scores(centroids: jax.Array, q: jax.Array) -> jax.Array:
+    """(B, p) centroid scores, bit-identical per row to ``centroids @ q``."""
+    b = q.shape[0]
+    return jnp.einsum("bpd,bd->bp",
+                      jnp.broadcast_to(centroids, (b,) + centroids.shape), q)
+
+
+@functools.partial(jax.jit, static_argnames=("h",))
+def make_cache_batch(index: _ivf.IVFIndex, q: jax.Array, *, h: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Batched ``ivf.make_cache``: C0 = top_h(q, C) per row. q: (B, d)."""
+    cscores = _bcast_centroid_scores(index.centroids, q)
+    _, ids = jax.lax.top_k(cscores, h)
+    ids = ids.astype(jnp.int32)
+    return ids, index.centroids[ids]
+
+
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k"))
+def ivf_start_batch(index: _ivf.IVFIndex, q0: jax.Array, *, h: int,
+                    nprobe: int, k: int
+                    ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
+    """Batched ``ivf_start``: B first utterances in one dispatch.
+
+    q0: (B, d).  Returns (scores (B,k), ids (B,k), session pytree with
+    leading batch dim, stats with leading batch dim).
+    """
+    b = q0.shape[0]
+    cache_ids, cache_vecs = make_cache_batch(index, q0, h=h)
+    anchor_sel = cache_ids[:, :nprobe]
+    top_v, top_i, real = _ivf._scan_lists(index, q0, anchor_sel, k)
+    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
+                      jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.int32))
+    stats = TurnStats(
+        centroid_dists=jnp.full((b,), index.p, jnp.int32),
+        list_dists=real,
+        graph_dists=jnp.zeros((b,), jnp.int32),
+        i0=jnp.full((b,), -1, jnp.int32),
+        refreshed=jnp.ones((b,), bool),
+    )
+    return top_v, top_i, sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha"))
+def ivf_step_batch(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
+                   nprobe: int, k: int, alpha: float = -1.0,
+                   is_first: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
+    """Batched ``ivf_step`` over B concurrent conversations.
+
+    sess fields carry a leading batch dim; q: (B, d).  ``is_first``
+    ((B,) bool) marks rows whose session slot is fresh (first utterance
+    of a conversation, or a rebuild after eviction): those rows ignore
+    the slot contents, pay a full centroid scan, and re-anchor — exactly
+    ``ivf_start`` semantics, realised as a forced refresh so the whole
+    batch stays one uniform program.
+    """
+    b, h = sess.cache_ids.shape
+    # 1. centroid selection against each row's cached set C0  (cost: h)
+    csims = jnp.einsum("bhd,bd->bh", sess.cache_vecs, q)
+    _, sel_local = jax.lax.top_k(csims, nprobe)
+    sel_cached = jnp.take_along_axis(sess.cache_ids, sel_local, axis=1)
+
+    # 2. drift proxy per row (Eq. 1)
+    i0 = jax.vmap(intersect_count)(sel_cached, sess.anchor_sel)
+    drift = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
+
+    first = (jnp.zeros((b,), bool) if is_first is None else is_first)
+    refresh = first | drift
+
+    # 3. refresh path.  Per-row logic is select-only (no per-row
+    # lax.cond — every row runs the same program), but the scan itself
+    # is gated on the *batch-wide* predicate: a flush with no first
+    # turns and no drift skips the full centroid scan entirely, which
+    # is what keeps steady-state follow-up flushes at O(B·h) instead of
+    # O(B·p).  When the trace can prove no row ever refreshes (pure
+    # follow-up batch, static cache) the branch is dropped altogether.
+    if is_first is not None or alpha >= 0.0:
+        fresh_ids, fresh_vecs = jax.lax.cond(
+            jnp.any(refresh),
+            lambda: make_cache_batch(index, q, h=h),
+            lambda: (jnp.zeros((b, h), jnp.int32),
+                     jnp.zeros((b, h) + index.centroids.shape[1:],
+                               index.centroids.dtype)))
+        r1 = refresh[:, None]
+        cache_ids = jnp.where(r1, fresh_ids, sess.cache_ids)
+        cache_vecs = jnp.where(r1[..., None], fresh_vecs, sess.cache_vecs)
+        anchor_sel = jnp.where(r1, fresh_ids[:, :nprobe], sess.anchor_sel)
+        sel = jnp.where(r1, fresh_ids[:, :nprobe], sel_cached)
+    else:
+        cache_ids, cache_vecs = sess.cache_ids, sess.cache_vecs
+        anchor_sel, sel = sess.anchor_sel, sel_cached
+
+    # 4. one posting-list scan for the whole batch
+    top_v, top_i, real = _ivf._scan_lists(index, q, sel, k)
+
+    step_refresh = drift & ~first      # first turns don't count as refreshes
+    new_sess = IVFSession(
+        cache_ids, cache_vecs, anchor_sel,
+        jnp.where(first, 0, sess.refreshes + step_refresh.astype(jnp.int32)),
+        jnp.where(first, 1, sess.turn + 1))
+    stats = TurnStats(
+        centroid_dists=jnp.where(
+            first, index.p,
+            h + step_refresh.astype(jnp.int32) * index.p).astype(jnp.int32),
+        list_dists=real,
+        graph_dists=jnp.zeros((b,), jnp.int32),
+        i0=jnp.where(first, -1, i0),
+        refreshed=refresh,
+    )
+    return top_v, top_i, new_sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
+def ivf_plain_batch(index: _ivf.IVFIndex, q: jax.Array, *, nprobe: int,
+                    k: int) -> Tuple[jax.Array, jax.Array, TurnStats]:
+    """Batched plain-IVF baseline turn (stateless; engine parity path)."""
+    b = q.shape[0]
+    cscores = _bcast_centroid_scores(index.centroids, q)
+    _, sel = jax.lax.top_k(cscores, nprobe)
+    top_v, top_i, real = _ivf._scan_lists(index, q, sel, k)
+    stats = TurnStats(
+        centroid_dists=jnp.full((b,), index.p, jnp.int32),
+        list_dists=real,
+        graph_dists=jnp.zeros((b,), jnp.int32),
+        i0=jnp.full((b,), -1, jnp.int32),
+        refreshed=jnp.zeros((b,), bool),
+    )
+    return top_v, top_i, stats
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up"))
+def hnsw_start_batch(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int,
+                     k: int, up: int = 2
+                     ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
+    """Batched ``hnsw_start``: B first utterances, upscaled ef, one dispatch."""
+    b = q0.shape[0]
+    v, i, nd = _hnsw.search(index, q0, ef=up * ef, k=k)
+    sess = HNSWSession(entry_point=i[:, 0].astype(jnp.int32),
+                       turn=jnp.ones((b,), jnp.int32))
+    z = jnp.zeros((b,), jnp.int32)
+    stats = TurnStats(z, z, nd, jnp.full((b,), -1, jnp.int32),
+                      jnp.ones((b,), bool))
+    return v, i, sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "adaptive"))
+def hnsw_step_batch(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array,
+                    *, ef: int, k: int, up: int = 2, adaptive: bool = False,
+                    is_first: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
+    """Batched ``hnsw_step`` over B concurrent conversations.
+
+    Follow-up rows start the level-0 beam at their privileged entry
+    point.  With ``is_first``, first-turn rows additionally run the
+    full-descent upscaled search (``up·ef``) and the per-row results are
+    selected with ``jnp.where`` — the two beam widths are different
+    static shapes, so a mixed batch executes both programs and selects,
+    rather than diverging per row.
+    """
+    b = q.shape[0]
+    v, i, nd = _hnsw.search(index, q, ef=ef, k=k,
+                            entry_override=sess.entry_point,
+                            use_entry_override=True)
+    if is_first is not None:
+        # batch-wide gate: steady-state flushes (no first turns) skip
+        # the full-descent upscaled search entirely
+        v0, i_0, nd0 = jax.lax.cond(
+            jnp.any(is_first),
+            lambda: _hnsw.search(index, q, ef=up * ef, k=k),
+            lambda: (jnp.zeros((b, k), index.vectors.dtype),
+                     jnp.zeros((b, k), jnp.int32),
+                     jnp.zeros((b,), jnp.int32)))
+        f1 = is_first[:, None]
+        v = jnp.where(f1, v0, v)
+        i = jnp.where(f1, i_0, i)
+        nd = jnp.where(is_first, nd0, nd)
+        first = is_first
+    else:
+        first = jnp.zeros((b,), bool)
+
+    top1 = i[:, 0].astype(jnp.int32)
+    new_entry = top1 if adaptive else jnp.where(first, top1,
+                                                sess.entry_point)
+    new_sess = HNSWSession(entry_point=new_entry,
+                           turn=jnp.where(first, 1, sess.turn + 1))
+    z = jnp.zeros((b,), jnp.int32)
+    stats = TurnStats(z, z, nd, jnp.full((b,), -1, jnp.int32), first)
+    return v, i, new_sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k"))
+def hnsw_plain_batch(index: _hnsw.HNSWIndex, q: jax.Array, *, ef: int,
+                     k: int) -> Tuple[jax.Array, jax.Array, TurnStats]:
+    """Batched plain-HNSW baseline turn (stateless; engine parity path)."""
+    b = q.shape[0]
+    v, i, nd = _hnsw.search(index, q, ef=ef, k=k)
+    z = jnp.zeros((b,), jnp.int32)
+    stats = TurnStats(z, z, nd, jnp.full((b,), -1, jnp.int32),
+                      jnp.zeros((b,), bool))
+    return v, i, stats
+
+
+# ---------------------------------------------------------------------------
 # Whole-conversation scan (benchmark path)
 # ---------------------------------------------------------------------------
 

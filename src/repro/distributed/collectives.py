@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from repro.core.topk import distributed_topk
 
 
@@ -36,7 +38,7 @@ def sharded_corpus_topk(mesh: Mesh, corpus: jax.Array, queries: jax.Array,
         gids = i.astype(jnp.int32) + idx * n_local
         return distributed_topk(v, gids, k, axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(data_axes, None)),
         out_specs=(P(data_axes, None), P(data_axes, None)),
@@ -76,7 +78,7 @@ def sharded_ivf_probe(mesh: Mesh, list_vecs: jax.Array, list_ids: jax.Array,
         ids = jnp.take_along_axis(flat_i, pos, axis=-1)
         return distributed_topk(v, ids, k, axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None),
                   P(data_axes, None), P(data_axes, None)),

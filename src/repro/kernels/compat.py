@@ -1,0 +1,13 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(jax >= 0.5); this container pins jax 0.4.37 which only has the old
+name.  Kernels import ``CompilerParams`` from here so both spellings
+work without touching every call site again on the next upgrade.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -33,7 +33,9 @@ from typing import Any, Dict, Optional
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import common as cc
+
 from repro.configs import get as get_arch, list_archs
 from repro.distributed import sharding as SH
 from repro.launch import analysis
@@ -61,7 +63,7 @@ def lower_and_compile(bundle: cc.StepBundle, mesh):
     # `with mesh:` backs PartitionSpec-based sharding constraints;
     # jax.set_mesh additionally backs shard_map with mesh=None (the
     # distributed top-k serving paths)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         with mesh:
             lowered = jitted.lower(*bundle.arg_structs)
             compiled = lowered.compile()

@@ -1,2 +1,15 @@
-"""Conversational serving runtime: session engine + scheduler."""
-from repro.serving import engine, scheduler  # noqa: F401
+"""Conversational serving runtime: session engines + scheduler.
+
+Sequential path: ``engine.ConversationalSearchEngine`` (one turn per
+dispatch).  Batched path: ``engine.BatchedConversationalSearchEngine``
+(micro-batched flushes over a device-resident ``sessions.SessionStore``
+slab).  ``scheduler`` supplies the batching/hedging front door.
+"""
+from repro.serving import engine, scheduler, sessions  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    BatchedConversationalSearchEngine, ConversationalSearchEngine,
+    ServingConfig, TurnRecord)
+from repro.serving.scheduler import (  # noqa: F401
+    HedgedExecutor, MicroBatcher, Request)
+from repro.serving.sessions import (  # noqa: F401
+    SessionStore, hnsw_session_store, ivf_session_store)

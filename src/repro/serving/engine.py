@@ -9,6 +9,25 @@ Python-side session orchestration around the jitted core:
   * optional query encoder in front (full paper pipeline), and an item
     corpus front-end for the two-tower ``retrieval_cand`` serving shape.
 
+Two engines share the accounting:
+
+``ConversationalSearchEngine`` — one turn per dispatch, sessions in a
+Python dict.  The reference implementation and the oracle the batched
+path is tested against.
+
+``BatchedConversationalSearchEngine`` — the serving-scale path: requests
+enter a ``scheduler.MicroBatcher``; each flush drains up to ``max_batch``
+requests, pads to the next shape bucket, gathers the sessions from a
+device-resident ``sessions.SessionStore`` slab, runs ONE jitted batched
+TopLoc step (``toploc.ivf_step_batch`` / ``hnsw_step_batch``) with an
+``is_first`` mask for rows whose conversation has no cached state, and
+scatters the updated sessions back.  A flush containing several turns of
+the same conversation is split into consecutive waves (a later turn must
+observe the earlier turn's updated cache), so one device batch never
+holds a conversation twice.  Per-turn ``TurnStats`` are recorded exactly
+as the sequential engine records them; batched results are bit-identical
+to the sequential path (tests/test_serving_batched.py).
+
 Sessions are sticky: at multi-host scale the router pins a conversation
 to one data-parallel group so its cache stays local (DESIGN.md §2).
 """
@@ -16,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -25,6 +44,8 @@ import jax.numpy as jnp
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import toploc
+from repro.serving import sessions as _sessions
+from repro.serving.scheduler import MicroBatcher, Request
 
 
 @dataclasses.dataclass
@@ -53,7 +74,40 @@ class TurnRecord:
     i0: int
 
 
-class ConversationalSearchEngine:
+class _EngineAccounting:
+    """Shared per-turn records + summary (sequential and batched engines)."""
+
+    records: List[TurnRecord]
+
+    def summary(self) -> Dict[str, float]:
+        if not self.records:
+            return {}
+        lat = np.asarray([r.latency_s for r in self.records])
+        return {
+            "turns": len(self.records),
+            "mean_latency_ms": float(lat.mean() * 1e3),
+            "p95_latency_ms": float(np.percentile(lat, 95) * 1e3),
+            "mean_centroid_dists": float(np.mean(
+                [r.centroid_dists for r in self.records])),
+            "mean_list_dists": float(np.mean(
+                [r.list_dists for r in self.records])),
+            "mean_graph_dists": float(np.mean(
+                [r.graph_dists for r in self.records])),
+            "refresh_rate": float(np.mean(
+                [r.refreshed for r in self.records[1:]] or [0.0])),
+        }
+
+
+def _check_indexes(config: ServingConfig, ivf_index, hnsw_index, doc_vecs):
+    if config.backend == "ivf" and ivf_index is None:
+        raise ValueError("ivf backend needs ivf_index")
+    if config.backend == "hnsw" and hnsw_index is None:
+        raise ValueError("hnsw backend needs hnsw_index")
+    if config.backend == "exact" and doc_vecs is None:
+        raise ValueError("exact backend needs doc_vecs")
+
+
+class ConversationalSearchEngine(_EngineAccounting):
     def __init__(self, config: ServingConfig, *,
                  ivf_index: Optional[_ivf.IVFIndex] = None,
                  hnsw_index: Optional[_hnsw.HNSWIndex] = None,
@@ -62,15 +116,10 @@ class ConversationalSearchEngine:
         self.ivf = ivf_index
         self.hnsw = hnsw_index
         self.doc_vecs = doc_vecs
-        if config.backend == "ivf" and ivf_index is None:
-            raise ValueError("ivf backend needs ivf_index")
-        if config.backend == "hnsw" and hnsw_index is None:
-            raise ValueError("hnsw backend needs hnsw_index")
-        if config.backend == "exact" and doc_vecs is None:
-            raise ValueError("exact backend needs doc_vecs")
+        _check_indexes(config, ivf_index, hnsw_index, doc_vecs)
         self.sessions: Dict[str, Any] = {}
         self.turn_count: Dict[str, int] = {}
-        self.records: list[TurnRecord] = []
+        self.records: List[TurnRecord] = []
 
     # -- public API ---------------------------------------------------
 
@@ -153,22 +202,181 @@ class ConversationalSearchEngine:
         self.sessions[conv_id] = sess
         return v, i, stats
 
-    # -- accounting ------------------------------------------------------
+class BatchedConversationalSearchEngine(_EngineAccounting):
+    """Micro-batched multi-conversation serving front door.
 
-    def summary(self) -> Dict[str, float]:
-        if not self.records:
-            return {}
-        lat = np.asarray([r.latency_s for r in self.records])
-        return {
-            "turns": len(self.records),
-            "mean_latency_ms": float(lat.mean() * 1e3),
-            "p95_latency_ms": float(np.percentile(lat, 95) * 1e3),
-            "mean_centroid_dists": float(np.mean(
-                [r.centroid_dists for r in self.records])),
-            "mean_list_dists": float(np.mean(
-                [r.list_dists for r in self.records])),
-            "mean_graph_dists": float(np.mean(
-                [r.graph_dists for r in self.records])),
-            "refresh_rate": float(np.mean(
-                [r.refreshed for r in self.records[1:]] or [0.0])),
-        }
+    Requests flow ``submit() → MicroBatcher queue → flush → one padded
+    device batch → scatter sessions → resolve futures``.  See the module
+    docstring for the flush/wave semantics.
+
+    ``n_slots`` bounds resident conversations; the LRU conversation is
+    evicted when a new one arrives at full occupancy and is rebuilt
+    (first-turn semantics) if it ever returns.
+    """
+
+    def __init__(self, config: ServingConfig, *,
+                 ivf_index: Optional[_ivf.IVFIndex] = None,
+                 hnsw_index: Optional[_hnsw.HNSWIndex] = None,
+                 doc_vecs: Optional[jax.Array] = None,
+                 n_slots: int = 256, max_batch: int = 32,
+                 max_wait_s: float = 0.002,
+                 buckets: Sequence[int] = (1, 2, 4, 8, 16, 32)):
+        self.cfg = config
+        self.ivf = ivf_index
+        self.hnsw = hnsw_index
+        self.doc_vecs = doc_vecs
+        _check_indexes(config, ivf_index, hnsw_index, doc_vecs)
+        # a wave holds up to max_batch distinct conversations, each
+        # needing its own live slot — fewer slots would make acquire()
+        # evict a conversation acquired earlier in the SAME wave and
+        # scatter two rows into one slot (silent session corruption)
+        if config.backend != "exact" and n_slots < max_batch:
+            raise ValueError(
+                f"n_slots ({n_slots}) must be >= max_batch ({max_batch})")
+        # ensure the bucket table covers max_batch so a full wave never
+        # pads to a bucket smaller than itself
+        buckets = tuple(sorted(set(buckets) | {max_batch}))
+        if config.backend == "ivf":
+            self.store = _sessions.ivf_session_store(
+                ivf_index, h=config.h, nprobe=config.nprobe, n_slots=n_slots)
+        elif config.backend == "hnsw":
+            self.store = _sessions.hnsw_session_store(
+                hnsw_index, n_slots=n_slots)
+        else:
+            self.store = None            # exact backend is stateless
+        self.batcher = MicroBatcher(self._process_batch,
+                                    max_batch=max_batch,
+                                    max_wait_s=max_wait_s, buckets=buckets)
+        self.turn_count: Dict[str, int] = {}
+        self.records: List[TurnRecord] = []
+
+    # -- public API ---------------------------------------------------
+
+    def submit(self, conv_id: str, qvec: jax.Array):
+        """Enqueue one conversational turn; resolves at the next flush.
+
+        Returns a ``concurrent.futures.Future`` of (scores, doc_ids).
+        """
+        return self.batcher.submit(Request(conv_id, qvec))
+
+    def flush(self) -> int:
+        """Drain one micro-batch from the queue (serving-loop tick)."""
+        return self.batcher.flush_loop_once()
+
+    def drain(self) -> int:
+        """Flush until the queue is empty; returns turns served."""
+        served = 0
+        while True:
+            n = self.batcher.flush_loop_once()
+            if n == 0:
+                return served
+            served += n
+
+    def query(self, conv_id: str, qvec: jax.Array
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Synchronous single-turn convenience (submit + flush)."""
+        fut = self.submit(conv_id, qvec)
+        while not fut.done():
+            self.batcher.flush_loop_once()
+        return fut.result()
+
+    def end_conversation(self, conv_id: str) -> None:
+        if self.store is not None:
+            self.store.release(conv_id)
+        self.turn_count.pop(conv_id, None)
+
+    # -- batch execution ----------------------------------------------
+
+    def _process_batch(self, reqs: List[Request]) -> List[Any]:
+        """MicroBatcher callback: serve a drained micro-batch.
+
+        Splits the batch into waves holding at most one turn per
+        conversation (turn t+1 must gather the session state turn t
+        scattered), each wave being one padded device dispatch.
+        """
+        results: List[Any] = [None] * len(reqs)
+        remaining = list(enumerate(reqs))
+        while remaining:
+            seen, wave, deferred = set(), [], []
+            for item in remaining:
+                if item[1].conv_id in seen:
+                    deferred.append(item)
+                else:
+                    seen.add(item[1].conv_id)
+                    wave.append(item)
+            self._process_wave(wave, results)
+            remaining = deferred
+        return results
+
+    def _process_wave(self, wave, results) -> None:
+        cfg = self.cfg
+        b = len(wave)
+        bb = self.batcher.bucket(b)          # padded (bucketed) batch size
+        qs = [np.asarray(r.payload, np.float32) for _, r in wave]
+        q = jnp.asarray(np.stack(qs + [np.zeros_like(qs[0])] * (bb - b)))
+
+        if cfg.backend == "exact":
+            v, i = _ivf.exact_search(self.doc_vecs, q, cfg.k)
+            stats = None
+        else:
+            # padded rows run against the trash slot with
+            # is_first=False: their zeroed trash session never trips the
+            # drift check, so the batch-wide refresh/first-turn gates
+            # stay closed on steady-state flushes (marking them first
+            # would force the full scan on every non-bucket-exact
+            # flush); the scatter writes them back to the trash row,
+            # never a live session
+            slots = np.full((bb,), self.store.trash_slot, np.int32)
+            is_first = np.zeros((bb,), bool)
+            for row, (_, r) in enumerate(wave):
+                slots[row], is_first[row] = self.store.acquire(r.conv_id)
+            if cfg.backend == "ivf":
+                v, i, stats = self._ivf_wave(q, slots, is_first)
+            else:
+                v, i, stats = self._hnsw_wave(q, slots, is_first)
+
+        v = np.asarray(jax.device_get(v))
+        i = np.asarray(jax.device_get(i))
+        stats = (None if stats is None else
+                 jax.tree.map(lambda a: np.asarray(jax.device_get(a)), stats))
+        now = time.perf_counter()
+        for row, (j, r) in enumerate(wave):
+            turn = self.turn_count.get(r.conv_id, 0)
+            self.turn_count[r.conv_id] = turn + 1
+            if stats is None:
+                rec = TurnRecord(r.conv_id, turn, now - r.enqueue_t,
+                                 0, 0, 0, False, -1)
+            else:
+                rec = TurnRecord(
+                    r.conv_id, turn, now - r.enqueue_t,
+                    int(stats.centroid_dists[row]),
+                    int(stats.list_dists[row]),
+                    int(stats.graph_dists[row]),
+                    bool(stats.refreshed[row]), int(stats.i0[row]))
+            self.records.append(rec)
+            results[j] = (v[row], i[row])
+
+    def _ivf_wave(self, q, slots, is_first):
+        cfg = self.cfg
+        if cfg.strategy == "plain":
+            return toploc.ivf_plain_batch(self.ivf, q, nprobe=cfg.nprobe,
+                                          k=cfg.k)
+        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
+        sess = self.store.gather(slots)
+        v, i, new_sess, stats = toploc.ivf_step_batch(
+            self.ivf, sess, q, nprobe=cfg.nprobe, k=cfg.k, alpha=alpha,
+            is_first=jnp.asarray(is_first))
+        self.store.scatter(slots, new_sess)
+        return v, i, stats
+
+    def _hnsw_wave(self, q, slots, is_first):
+        cfg = self.cfg
+        if cfg.strategy == "plain":
+            return toploc.hnsw_plain_batch(self.hnsw, q, ef=cfg.ef_search,
+                                           k=cfg.k)
+        sess = self.store.gather(slots)
+        v, i, new_sess, stats = toploc.hnsw_step_batch(
+            self.hnsw, sess, q, ef=cfg.ef_search, k=cfg.k, up=cfg.up,
+            is_first=jnp.asarray(is_first))
+        self.store.scatter(slots, new_sess)
+        return v, i, stats

@@ -1,0 +1,170 @@
+"""Device-resident session store for batched conversational serving.
+
+The sequential engine keeps one ``IVFSession`` / ``HNSWSession`` pytree
+per conversation in a Python dict — fine for one turn at a time, useless
+for batched dispatch (B separate pytrees would need B gathers anyway).
+``SessionStore`` instead keeps *one* struct-of-arrays slab per field with
+a fixed slot count:
+
+    cache_ids  (S+1, h)      int32      entry_point (S+1,) int32
+    cache_vecs (S+1, h, d)   float32    turn        (S+1,) int32
+    anchor_sel (S+1, np)     int32
+    refreshes  (S+1,)        int32
+    turn       (S+1,)        int32
+
+so serving a micro-batch is: gather B rows → one jitted batched step →
+scatter B rows back.  Slot bookkeeping (conv_id → slot, free list, LRU
+eviction) is host-side Python — it is O(B) dict work per flush and never
+touches device memory.
+
+Slot model
+  * ``n_slots`` live slots are allocated from a free list; slot ids are
+    stable for the lifetime of a conversation (sticky sessions).
+  * One extra **trash slot** (index ``n_slots``) absorbs the padded rows
+    of a partially-filled device batch: padded rows gather/scatter the
+    trash row, so they can run the full batched program without ever
+    corrupting a live session.
+  * When the store is full, the least-recently-served conversation is
+    evicted.  An evicted conversation that returns is treated as a first
+    turn again (its C0 cache / entry point is rebuilt from the current
+    utterance) — the same semantics as a TopLoc_IVF+ refresh, so
+    effectiveness degrades gracefully rather than failing.
+
+At multi-host scale one ``SessionStore`` lives per data-parallel group
+and the router pins conversations to groups (DESIGN.md §2); sharding the
+slab itself over hosts is the follow-up PR this layout enables.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw as _hnsw
+from repro.core import ivf as _ivf
+from repro.core import toploc
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_slab(slab: Any, idx: jax.Array, updates: Any) -> Any:
+    """Scatter batched session rows into the slab.
+
+    The old slab is donated: on TPU the row writes happen in place, so a
+    flush costs O(B · row) instead of an O(S · row) slab copy.  (CPU jax
+    ignores the donation and copies — correct either way.)
+    """
+    return jax.tree.map(lambda a, u: a.at[idx].set(u), slab, updates)
+
+
+class SessionStore:
+    """Fixed-capacity struct-of-arrays slab of per-conversation state."""
+
+    def __init__(self, template: Any, n_slots: int):
+        """``template``: a single-session pytree (no leading batch dim)
+        whose leaf shapes/dtypes define the slab layout."""
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.n_slots = n_slots
+        self._slab = jax.tree.map(
+            lambda a: jnp.zeros((n_slots + 1,) + jnp.shape(a),
+                                jnp.asarray(a).dtype), template)
+        self._free = list(range(n_slots - 1, -1, -1))   # pop() → slot 0 first
+        self._slot_of: "OrderedDict[str, int]" = OrderedDict()  # LRU order
+        self.allocs = 0
+        self.evictions = 0
+        self.hits = 0
+
+    # -- slot bookkeeping (host) --------------------------------------
+
+    @property
+    def trash_slot(self) -> int:
+        """Slot absorbing padded batch rows; never mapped to a conv."""
+        return self.n_slots
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._slot_of)
+
+    def lookup(self, conv_id: str) -> Optional[int]:
+        return self._slot_of.get(conv_id)
+
+    def acquire(self, conv_id: str) -> Tuple[int, bool]:
+        """Slot for ``conv_id``; allocates (evicting LRU if full).
+
+        Returns (slot, is_new) — ``is_new`` means the slot holds no state
+        for this conversation and the caller must treat the turn as a
+        first turn (full cache build).
+        """
+        slot = self._slot_of.get(conv_id)
+        if slot is not None:
+            self._slot_of.move_to_end(conv_id)
+            self.hits += 1
+            return slot, False
+        if not self._free:
+            lru_id, lru_slot = next(iter(self._slot_of.items()))
+            del self._slot_of[lru_id]
+            self._free.append(lru_slot)
+            self.evictions += 1
+        slot = self._free.pop()
+        self._slot_of[conv_id] = slot
+        self.allocs += 1
+        return slot, True
+
+    def release(self, conv_id: str) -> Optional[int]:
+        """End a conversation; its slot returns to the free list."""
+        slot = self._slot_of.pop(conv_id, None)
+        if slot is not None:
+            self._free.append(slot)
+        return slot
+
+    def stats(self) -> Dict[str, int]:
+        return {"n_slots": self.n_slots, "occupancy": self.occupancy,
+                "allocs": self.allocs, "evictions": self.evictions,
+                "hits": self.hits}
+
+    # -- device slab access -------------------------------------------
+
+    def gather(self, slots: Sequence[int]) -> Any:
+        """Session pytree batch for ``slots`` (leading dim len(slots))."""
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        return jax.tree.map(lambda a: a[idx], self._slab)
+
+    def scatter(self, slots: Sequence[int], sessions: Any) -> None:
+        """Write a batched session pytree back into the slab rows.
+
+        ``slots`` may repeat only on the trash slot (padded rows);
+        live-slot rows must be unique within one call — the batched
+        engine guarantees one turn per conversation per device batch.
+        """
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        with warnings.catch_warnings():
+            # CPU backends warn that the donated slab was not consumed
+            warnings.filterwarnings("ignore", message=".*[Dd]onat")
+            self._slab = _scatter_slab(self._slab, idx, sessions)
+
+
+def ivf_session_store(index: _ivf.IVFIndex, *, h: int, nprobe: int,
+                      n_slots: int) -> SessionStore:
+    """Slab of ``toploc.IVFSession`` rows sized for ``index``."""
+    template = toploc.IVFSession(
+        cache_ids=jnp.zeros((h,), jnp.int32),
+        cache_vecs=jnp.zeros((h, index.d), index.centroids.dtype),
+        anchor_sel=jnp.zeros((nprobe,), jnp.int32),
+        refreshes=jnp.zeros((), jnp.int32),
+        turn=jnp.zeros((), jnp.int32))
+    return SessionStore(template, n_slots)
+
+
+def hnsw_session_store(index: _hnsw.HNSWIndex, *, n_slots: int
+                       ) -> SessionStore:
+    """Slab of ``toploc.HNSWSession`` rows."""
+    del index  # layout is index-independent; kept for API symmetry
+    template = toploc.HNSWSession(
+        entry_point=jnp.zeros((), jnp.int32),
+        turn=jnp.zeros((), jnp.int32))
+    return SessionStore(template, n_slots)

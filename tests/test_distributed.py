@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import ivf
+
 from repro.core.topk import distributed_topk
 from repro.distributed import collectives as COL
 from repro.distributed import sharding as SH
@@ -47,7 +49,7 @@ def test_distributed_topk_single_axis(mesh1, rng):
     def f(v, ids):
         return distributed_topk(v, ids, 4, "model")
 
-    out_v, out_i = jax.shard_map(f, mesh=mesh1,
+    out_v, out_i = compat.shard_map(f, mesh=mesh1,
                                  in_specs=(P(), P()),
                                  out_specs=(P(), P()),
                                  check_vma=False)(v, ids)
@@ -108,7 +110,7 @@ def test_compressed_psum_under_shard_map(mesh1, rng):
                                        axis_name="model")
         return deq["w"], new_e["w"]
 
-    deq, new_e = jax.shard_map(f, mesh=mesh1, in_specs=(P(), P()),
+    deq, new_e = compat.shard_map(f, mesh=mesh1, in_specs=(P(), P()),
                                out_specs=(P(), P()),
                                check_vma=False)(g["w"], e["w"])
     # 1 shard: compressed mean == dequantised value; error bounded

@@ -53,6 +53,17 @@ def test_centroid_topk_sweep(b, d, p, k, blk):
                                atol=1e-4)
 
 
+@pytest.mark.tpu_only
+def test_centroid_topk_kernel_mode_smoke():
+    """Compile-and-run the real Pallas TPU kernel (mode='kernel', no
+    interpreter).  Auto-skipped off-TPU (see conftest/pytest.ini)."""
+    q = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32))
+    c = jnp.asarray(RNG.normal(size=(512, 64)).astype(np.float32))
+    v, i = ops.centroid_topk(q, c, 8, mode="kernel")
+    rv, ri = ref.centroid_topk(q, c, 8)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_centroid_topk_dtypes(dtype):
     q = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32)).astype(dtype)

@@ -1,8 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt);
+the whole module skips cleanly when it is absent so tier-1 collection
+never dies on a missing extra.
+"""
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ivf, topk
 from repro.kernels import ops, ref, sorting

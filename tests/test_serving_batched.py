@@ -1,0 +1,310 @@
+"""Batched multi-conversation serving: equivalence + SessionStore.
+
+The contract under test: serving B concurrent conversations through one
+batched dispatch (``toploc.*_batch`` / ``BatchedConversationalSearchEngine``)
+is *bit-identical* — scores, ids, and every ``TurnStats`` field — to
+serving them one at a time through the sequential path.  This is what
+makes the batched path a drop-in: no effectiveness re-evaluation is
+needed when the only change is the batching.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw, ivf, toploc
+from repro.serving import (BatchedConversationalSearchEngine,
+                           ConversationalSearchEngine, ServingConfig,
+                           SessionStore, hnsw_session_store,
+                           ivf_session_store)
+
+B, T = 4, 4          # ≥ 4 interleaved conversations
+K, H, NPROBE, EF, UP = 10, 16, 4, 16, 2
+
+
+@pytest.fixture(scope="module")
+def convs(small_corpus):
+    return jnp.asarray(small_corpus.conversations[:B, :T])
+
+
+def _stats_equal(seq_stats_rows, batched_stats):
+    """Every TurnStats field equal between stacked sequential rows and
+    one batched TurnStats."""
+    for f in toploc.TurnStats._fields:
+        seq = jnp.stack([getattr(s, f) for s in seq_stats_rows])
+        if not bool((seq == getattr(batched_stats, f)).all()):
+            return False
+    return True
+
+
+# ------------------------------------------------------------------ IVF
+
+@pytest.mark.parametrize("alpha", [-1.0, 0.3])
+def test_ivf_batch_equals_sequential(ivf_index, convs, alpha):
+    idx = ivf_index
+    # sequential: B independent conversations
+    sess, vs, is_, sts = [], [], [], []
+    for b in range(B):
+        v, i, s, st = toploc.ivf_start(idx, convs[b, 0], h=H, nprobe=NPROBE,
+                                       k=K)
+        sess.append(s)
+        vs.append([v]); is_.append([i]); sts.append([st])
+    for t in range(1, T):
+        for b in range(B):
+            v, i, s, st = toploc.ivf_step(idx, sess[b], convs[b, t],
+                                          nprobe=NPROBE, k=K, alpha=alpha)
+            sess[b] = s
+            vs[b].append(v); is_[b].append(i); sts[b].append(st)
+
+    # batched: one dispatch per turn over all B conversations
+    bv, bi, bsess, bst = toploc.ivf_start_batch(idx, convs[:, 0], h=H,
+                                                nprobe=NPROBE, k=K)
+    assert bool((jnp.stack([vs[b][0] for b in range(B)]) == bv).all())
+    assert bool((jnp.stack([is_[b][0] for b in range(B)]) == bi).all())
+    assert _stats_equal([sts[b][0] for b in range(B)], bst)
+    for t in range(1, T):
+        bv, bi, bsess, bst = toploc.ivf_step_batch(
+            idx, bsess, convs[:, t], nprobe=NPROBE, k=K, alpha=alpha)
+        assert bool((jnp.stack([vs[b][t] for b in range(B)]) == bv).all()), t
+        assert bool((jnp.stack([is_[b][t] for b in range(B)]) == bi).all()), t
+        assert _stats_equal([sts[b][t] for b in range(B)], bst), t
+    # final session state also matches (cache, anchors, counters)
+    for f in toploc.IVFSession._fields:
+        seq = jnp.stack([getattr(sess[b], f) for b in range(B)])
+        assert bool((seq == getattr(bsess, f)).all()), f
+
+
+def test_ivf_mixed_first_and_followup_batch(ivf_index, convs):
+    """One batch mixing first turns and follow-ups via the is_first mask
+    reproduces ivf_start rows and ivf_step rows exactly."""
+    idx = ivf_index
+    alpha = 0.3
+    v0, i0_, sess0, st0 = toploc.ivf_start_batch(idx, convs[:, 0], h=H,
+                                                 nprobe=NPROBE, k=K)
+    first = jnp.asarray([True, False, True, False])
+    qmix = jnp.where(first[:, None], convs[:, 0], convs[:, 1])
+    mv, mi, msess, mst = toploc.ivf_step_batch(
+        idx, sess0, qmix, nprobe=NPROBE, k=K, alpha=alpha, is_first=first)
+    for b in range(B):
+        if bool(first[b]):
+            rv, ri, rs, rst = toploc.ivf_start(idx, convs[b, 0], h=H,
+                                               nprobe=NPROBE, k=K)
+        else:
+            sb = jax.tree.map(lambda a: a[b], sess0)
+            rv, ri, rs, rst = toploc.ivf_step(idx, sb, convs[b, 1],
+                                              nprobe=NPROBE, k=K,
+                                              alpha=alpha)
+        assert bool((mv[b] == rv).all()) and bool((mi[b] == ri).all()), b
+        for f in toploc.TurnStats._fields:
+            assert bool((getattr(mst, f)[b] == getattr(rst, f)).all()), (b, f)
+        for f in toploc.IVFSession._fields:
+            assert bool((jax.tree.map(lambda a: a[b], msess)._asdict()[f]
+                         == getattr(rs, f)).all()), (b, f)
+
+
+# ----------------------------------------------------------------- HNSW
+
+def test_hnsw_batch_equals_sequential(hnsw_index, convs):
+    idx = hnsw_index
+    sess, vs, is_, sts = [], [], [], []
+    for b in range(B):
+        v, i, s, st = toploc.hnsw_start(idx, convs[b, 0], ef=EF, k=K, up=UP)
+        sess.append(s)
+        vs.append([v]); is_.append([i]); sts.append([st])
+    for t in range(1, T):
+        for b in range(B):
+            v, i, s, st = toploc.hnsw_step(idx, sess[b], convs[b, t],
+                                           ef=EF, k=K)
+            sess[b] = s
+            vs[b].append(v); is_[b].append(i); sts[b].append(st)
+
+    bv, bi, bsess, bst = toploc.hnsw_start_batch(idx, convs[:, 0], ef=EF,
+                                                 k=K, up=UP)
+    assert bool((jnp.stack([vs[b][0] for b in range(B)]) == bv).all())
+    assert bool((jnp.stack([is_[b][0] for b in range(B)]) == bi).all())
+    assert _stats_equal([sts[b][0] for b in range(B)], bst)
+    for t in range(1, T):
+        bv, bi, bsess, bst = toploc.hnsw_step_batch(idx, bsess, convs[:, t],
+                                                    ef=EF, k=K)
+        assert bool((jnp.stack([vs[b][t] for b in range(B)]) == bv).all()), t
+        assert bool((jnp.stack([is_[b][t] for b in range(B)]) == bi).all()), t
+        assert _stats_equal([sts[b][t] for b in range(B)], bst), t
+    assert bool((jnp.stack([s.entry_point for s in sess])
+                 == bsess.entry_point).all())
+
+
+def test_hnsw_mixed_first_and_followup_batch(hnsw_index, convs):
+    idx = hnsw_index
+    _, _, sess0, _ = toploc.hnsw_start_batch(idx, convs[:, 0], ef=EF, k=K,
+                                             up=UP)
+    first = jnp.asarray([False, True, False, True])
+    qmix = jnp.where(first[:, None], convs[:, 0], convs[:, 1])
+    mv, mi, msess, mst = toploc.hnsw_step_batch(
+        idx, sess0, qmix, ef=EF, k=K, up=UP, is_first=first)
+    for b in range(B):
+        if bool(first[b]):
+            rv, ri, rs, rst = toploc.hnsw_start(idx, convs[b, 0], ef=EF,
+                                                k=K, up=UP)
+        else:
+            sb = jax.tree.map(lambda a: a[b], sess0)
+            rv, ri, rs, rst = toploc.hnsw_step(idx, sb, convs[b, 1],
+                                               ef=EF, k=K)
+        assert bool((mv[b] == rv).all()) and bool((mi[b] == ri).all()), b
+        assert int(mst.graph_dists[b]) == int(rst.graph_dists)
+        assert bool(mst.refreshed[b]) == bool(rst.refreshed)
+        assert int(msess.entry_point[b]) == int(rs.entry_point)
+        assert int(msess.turn[b]) == int(rs.turn)
+
+
+# --------------------------------------------------------- SessionStore
+
+def test_session_store_slot_reuse_and_eviction(ivf_index):
+    store = ivf_session_store(ivf_index, h=H, nprobe=NPROBE, n_slots=2)
+    s0, new0 = store.acquire("a")
+    s1, new1 = store.acquire("b")
+    assert new0 and new1 and s0 != s1
+    # reuse: same conv → same slot, not new
+    assert store.acquire("a") == (s0, False)
+    # full store: 'b' is now LRU ('a' was just touched) → 'c' evicts 'b'
+    s2, new2 = store.acquire("c")
+    assert new2 and s2 == s1
+    assert store.evictions == 1
+    assert store.lookup("b") is None
+    # evicted conv returning is a fresh allocation (first-turn semantics)
+    s3, new3 = store.acquire("b")
+    assert new3
+    # release returns the slot to the free list for reuse
+    freed = store.release("c")
+    s4, new4 = store.acquire("d")
+    assert new4 and s4 == freed
+    assert store.occupancy == 2
+
+
+def test_session_store_gather_scatter_roundtrip(ivf_index):
+    store = ivf_session_store(ivf_index, h=H, nprobe=NPROBE, n_slots=4)
+    slots = [store.acquire(f"c{j}")[0] for j in range(3)]
+    sess = store.gather(slots)
+    bumped = sess._replace(turn=sess.turn + jnp.arange(3, dtype=jnp.int32))
+    store.scatter(slots, bumped)
+    back = store.gather(slots)
+    assert bool((back.turn == jnp.arange(3)).all())
+    # trash slot absorbs padded rows without touching live sessions
+    pad_slots = [slots[0], store.trash_slot]
+    pad = store.gather(pad_slots)
+    store.scatter([store.trash_slot, store.trash_slot],
+                  jax.tree.map(lambda a: a + 1 if a.dtype == jnp.int32
+                               else a, pad))
+    assert bool((store.gather(slots).turn == jnp.arange(3)).all())
+
+
+def test_hnsw_session_store_layout(hnsw_index):
+    store = hnsw_session_store(hnsw_index, n_slots=3)
+    assert store.gather([0]).entry_point.shape == (1,)
+    assert store.trash_slot == 3
+
+
+# ------------------------------------------------------ batched engine
+
+@pytest.mark.parametrize("backend,strategy", [
+    ("ivf", "toploc"), ("ivf", "toploc+"), ("ivf", "plain"),
+    ("hnsw", "toploc"),
+])
+def test_batched_engine_matches_sequential(small_corpus, ivf_index,
+                                           hnsw_index, backend, strategy):
+    wl = small_corpus
+    cfg = ServingConfig(backend=backend, strategy=strategy, nprobe=NPROBE,
+                        h=H, alpha=0.3, ef_search=EF, up=UP, k=K)
+    seq = ConversationalSearchEngine(cfg, ivf_index=ivf_index,
+                                     hnsw_index=hnsw_index)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, hnsw_index=hnsw_index, max_batch=4,
+        max_wait_s=1e-4)
+    for t in range(T):
+        futs = []
+        for c in range(4):
+            qv = jnp.asarray(wl.conversations[c, t])
+            sv, si = seq.query(f"c{c}", qv)
+            futs.append((sv, si, bat.submit(f"c{c}", qv)))
+        bat.drain()
+        for sv, si, fut in futs:
+            bv, bi = fut.result(timeout=5)
+            np.testing.assert_array_equal(sv, bv)
+            np.testing.assert_array_equal(si, bi)
+    # identical per-turn work accounting, order-independent
+    def key(recs):
+        return sorted((r.conv_id, r.turn, r.centroid_dists, r.list_dists,
+                       r.graph_dists, r.refreshed, r.i0) for r in recs)
+    assert key(seq.records) == key(bat.records)
+
+
+def test_batched_engine_rejects_undersized_store(ivf_index):
+    """A wave needs one live slot per conversation: n_slots < max_batch
+    would evict a conversation acquired earlier in the same wave."""
+    cfg = ServingConfig(backend="ivf", strategy="toploc", nprobe=NPROBE,
+                        h=H, k=K)
+    with pytest.raises(ValueError, match="n_slots"):
+        BatchedConversationalSearchEngine(cfg, ivf_index=ivf_index,
+                                          n_slots=4, max_batch=32)
+
+
+def test_batched_engine_max_batch_beyond_buckets(small_corpus, ivf_index):
+    """max_batch above the largest default bucket gets its own bucket
+    instead of overflowing the padded arrays."""
+    wl = small_corpus
+    cfg = ServingConfig(backend="ivf", strategy="toploc", nprobe=NPROBE,
+                        h=H, k=K)
+    seq = ConversationalSearchEngine(cfg, ivf_index=ivf_index)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, n_slots=64, max_batch=64,
+        max_wait_s=1e-4)
+    assert bat.batcher.bucket(64) == 64
+    futs = [bat.submit(f"c{c}", jnp.asarray(wl.conversations[c % 4, 0]))
+            for c in range(40)]                  # one 40-row wave → bucket 64
+    bat.drain()
+    for c, fut in enumerate(futs):
+        sv, si = seq.query(f"s{c}", jnp.asarray(wl.conversations[c % 4, 0]))
+        bv, bi = fut.result(timeout=5)
+        np.testing.assert_array_equal(si, bi)
+        np.testing.assert_array_equal(sv, bv)
+
+
+def test_batched_engine_waves_same_conversation(small_corpus, ivf_index):
+    """Two turns of one conversation in a single flush are served in
+    consecutive waves — the second sees the first's updated session."""
+    wl = small_corpus
+    cfg = ServingConfig(backend="ivf", strategy="toploc", nprobe=NPROBE,
+                        h=H, k=K)
+    seq = ConversationalSearchEngine(cfg, ivf_index=ivf_index)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, max_batch=8, max_wait_s=1e-4)
+    futs = [bat.submit("c0", jnp.asarray(wl.conversations[0, t]))
+            for t in range(3)]
+    bat.drain()
+    for t, fut in enumerate(futs):
+        sv, si = seq.query("c0", jnp.asarray(wl.conversations[0, t]))
+        bv, bi = fut.result(timeout=5)
+        np.testing.assert_array_equal(si, bi)
+        np.testing.assert_array_equal(sv, bv)
+    assert [r.turn for r in bat.records] == [0, 1, 2]
+
+
+def test_batched_engine_padding_never_corrupts_sessions(small_corpus,
+                                                        ivf_index):
+    """A batch of 3 pads to bucket 4; the padded row lands in the trash
+    slot and follow-up turns stay bit-identical to sequential."""
+    wl = small_corpus
+    cfg = ServingConfig(backend="ivf", strategy="toploc+", nprobe=NPROBE,
+                        h=H, alpha=0.3, k=K)
+    seq = ConversationalSearchEngine(cfg, ivf_index=ivf_index)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, max_batch=4, max_wait_s=1e-4)
+    for t in range(T):
+        futs = []
+        for c in range(3):                      # 3 → padded to 4
+            qv = jnp.asarray(wl.conversations[c, t])
+            futs.append((seq.query(f"c{c}", qv), bat.submit(f"c{c}", qv)))
+        bat.drain()
+        for (sv, si), fut in futs:
+            bv, bi = fut.result(timeout=5)
+            np.testing.assert_array_equal(si, bi)
+            np.testing.assert_array_equal(sv, bv)
