@@ -23,19 +23,25 @@ import jax.numpy as jnp
 
 from repro.core import hnsw as HN
 from repro.core import ivf as IV
+from repro.core import pq as PQ
 from repro.data import synthetic as SY
 
 CACHE = os.environ.get("BENCH_CACHE", "artifacts/bench_cache")
 
+# All knobs are env-overridable so the CI benchmark-smoke step (and any
+# laptop run) can shrink the corpus without editing this file.
 N_DOCS = int(os.environ.get("BENCH_DOCS", 20000))
 DIM = 64
 N_TOPICS = 64
 # Paper regime: p is 5-40x above the sqrt(n) heuristic (2^15..2^18 for a
 # 38.6M corpus) so the CENTROID SCAN dominates per-query cost — that is
 # the term TopLoc eliminates. Scaled to 20k docs: p=2048 (~10 docs/list).
-PARTITIONS = 2048
-CONVS = 12
-TURNS = 8
+PARTITIONS = int(os.environ.get("BENCH_PARTITIONS", 2048))
+CONVS = int(os.environ.get("BENCH_CONVS", 12))
+TURNS = int(os.environ.get("BENCH_TURNS", 8))
+PQ_M = int(os.environ.get("BENCH_PQ_M", 8))      # PQ subquantizers
+HNSW_M = int(os.environ.get("BENCH_HNSW_M", 16))
+HNSW_EFC = int(os.environ.get("BENCH_HNSW_EFC", 64))
 
 
 def workload(kind: str) -> SY.Workload:
@@ -55,7 +61,8 @@ def workload(kind: str) -> SY.Workload:
             query_drift=0.15, walk_step=0.05, shift_prob=0.10, seed=20)
     else:
         raise ValueError(kind)
-    return _cached(f"workload_{kind}_{N_DOCS}", lambda: SY.make_workload(cfg))
+    return _cached(f"workload_{kind}_{N_DOCS}_{CONVS}_{TURNS}",
+                   lambda: SY.make_workload(cfg))
 
 
 def _cached(name: str, build: Callable):
@@ -78,10 +85,22 @@ def ivf_index(kind: str) -> IV.IVFIndex:
     return IV.IVFIndex(*[jnp.asarray(x) for x in raw])
 
 
+def ivf_pq_index(kind: str) -> PQ.IVFPQIndex:
+    """IVF geometry of ``ivf_index`` + PQ-compressed posting lists."""
+    idx = ivf_index(kind)
+    wl = workload(kind)
+    raw = _cached(
+        f"ivfpq_{kind}_{N_DOCS}_{PARTITIONS}_{PQ_M}",
+        lambda: PQ.build_ivf_pq(idx, jnp.asarray(wl.doc_vecs), m=PQ_M,
+                                iters=8, key=jax.random.PRNGKey(0)))
+    return PQ.IVFPQIndex(*[jnp.asarray(x) for x in raw])
+
+
 def hnsw_index(kind: str) -> HN.HNSWIndex:
     wl = workload(kind)
-    raw = _cached(f"hnsw_{kind}_{N_DOCS}",
-                  lambda: HN.build(wl.doc_vecs, m=16, ef_construction=64))
+    raw = _cached(f"hnsw_{kind}_{N_DOCS}_{HNSW_M}_{HNSW_EFC}",
+                  lambda: HN.build(wl.doc_vecs, m=HNSW_M,
+                                   ef_construction=HNSW_EFC))
     return HN.HNSWIndex(*[jnp.asarray(x) for x in raw])
 
 

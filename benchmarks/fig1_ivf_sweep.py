@@ -1,8 +1,9 @@
 """Figure 1 reproduction: effectiveness/efficiency frontier vs nprobe.
 
-Sweeps np over powers of two for IVF, TopLoc_IVF and TopLoc_IVF+ on both
-conversation sets — NDCG@10 vs per-turn time and vs distance
-computations (the paper varies np exactly this way).
+Sweeps np over powers of two for IVF, TopLoc_IVF, TopLoc_IVF+ and
+TopLoc_IVFPQ on both conversation sets — NDCG@10 vs per-turn time and
+vs distance computations (the paper varies np exactly this way; the PQ
+row shows how much of the frontier survives 4·d/m-compressed lists).
 """
 from __future__ import annotations
 
@@ -19,11 +20,13 @@ NPROBES = (4, 8, 16, 32, 64)
 H_FACTOR = 16         # h = 16·np (np/h ≈ 6%, paper-regime grid point)
 ALPHA = 0.25
 K = 10
+RERANK = 64
 
 
 def sweep(kind: str, csv: bool = True) -> List[Dict]:
     wl = C.workload(kind)
     index = C.ivf_index(kind)
+    pq_index = C.ivf_pq_index(kind)
     convs = jnp.asarray(wl.conversations)
     n_conv, turns, _ = convs.shape
     rows = []
@@ -32,8 +35,14 @@ def sweep(kind: str, csv: bool = True) -> List[Dict]:
         for method, mode, alpha in (
                 ("IVF", "plain", -1.0),
                 ("TopLoc_IVF", "toploc", -1.0),
-                ("TopLoc_IVF+", "toploc", ALPHA)):
-            def all_convs(cs, mode=mode, alpha=alpha, npb=npb, h=h):
+                ("TopLoc_IVF+", "toploc", ALPHA),
+                ("TopLoc_IVFPQ", "toploc", -1.0)):
+            def all_convs(cs, method=method, mode=mode, alpha=alpha,
+                          npb=npb, h=h):
+                if method == "TopLoc_IVFPQ":
+                    return jax.vmap(lambda conv: TL.ivf_pq_conversation(
+                        pq_index, conv, h=h, nprobe=npb, k=K, alpha=alpha,
+                        rerank=RERANK, mode=mode))(cs)
                 return jax.vmap(lambda conv: TL.ivf_conversation(
                     index, conv, h=h, nprobe=npb, k=K, alpha=alpha,
                     mode=mode))(cs)
@@ -45,19 +54,22 @@ def sweep(kind: str, csv: bool = True) -> List[Dict]:
             metrics = C.eval_conversations(np.asarray(ids), wl)
             work = float((np.asarray(stats.centroid_dists)
                           + np.asarray(stats.list_dists)).mean())
+            code_work = float(np.asarray(stats.code_dists).mean())
             row = dict(dataset=kind, method=method, nprobe=npb, h=h,
                        ndcg10=metrics["ndcg@10"], mrr10=metrics["mrr@10"],
                        ms_per_turn=1e3 * wall / (n_conv * turns),
-                       work=work)
+                       work=work, code_work=code_work)
             rows.append(row)
             if csv:
                 print(f"fig1,{kind},{method},{npb},{row['ndcg10']:.3f},"
-                      f"{row['ms_per_turn']:.3f},{work:.0f}")
+                      f"{row['ms_per_turn']:.3f},{work:.0f},"
+                      f"{code_work:.0f}")
     return rows
 
 
 def main():
-    print("fig,dataset,method,nprobe,ndcg@10,ms_per_turn,work_dists")
+    print("fig,dataset,method,nprobe,ndcg@10,ms_per_turn,work_dists,"
+          "code_dists")
     for kind in ("cast19", "cast20"):
         sweep(kind)
 

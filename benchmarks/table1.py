@@ -1,15 +1,20 @@
 """Table 1 reproduction: effectiveness + efficiency of every method on
 both conversation sets.
 
-Methods (paper rows): Exact, IVF, TopLoc_IVF, TopLoc_IVF+, HNSW,
-TopLoc_HNSW.  Columns: MRR@10, NDCG@3, NDCG@10, mean per-turn time
+Methods (paper rows + the PQ extension): Exact, IVF, TopLoc_IVF,
+TopLoc_IVF+, IVF-PQ, TopLoc_IVFPQ, TopLoc_IVFPQ+, HNSW, TopLoc_HNSW.
+Columns: MRR@10, NDCG@3, NDCG@10, recall@10 vs Exact, mean per-turn time
 (jitted device path, batch-of-conversations), speedup vs the plain
-counterpart, and the hardware-independent work counters (distance
-computations — what the paper's speedups reduce to).
+counterpart, and the hardware-independent work counters (float distance
+computations + PQ code distances — what the paper's speedups reduce to).
+
+``--smoke`` runs the whole table on a tiny corpus and asserts the
+quality floors (used by CI so the benchmark scripts cannot rot):
+TopLoc_IVFPQ recall@10 must stay ≥ 0.9 of float TopLoc_IVF's.
 """
 from __future__ import annotations
 
-import time
+import sys
 from typing import Dict, List
 
 import numpy as np
@@ -28,29 +33,45 @@ ALPHA = 0.25
 EF = 32
 UP = 2
 K = 10
+RERANK = 64      # IVF-PQ exact re-rank depth
 
 
-def _run_ivf(index, wl, mode: str, alpha: float) -> Dict:
+def _recall_vs(ids: np.ndarray, exact_ids: np.ndarray) -> float:
+    """Mean top-K overlap fraction against the exact run. (Q, K) each."""
+    a = ids.reshape(-1, K)
+    b = exact_ids.reshape(-1, K)
+    return float(np.mean([len(set(a[j]) & set(b[j])) / K
+                          for j in range(b.shape[0])]))
+
+
+def _run_ivf(index, wl, mode: str, alpha: float, *,
+             pq: bool = False) -> Dict:
+    """One IVF-family run; ``pq=True`` routes through the PQ backend
+    (same measurement scaffolding, ADC counters reported)."""
     convs = jnp.asarray(wl.conversations)           # (C, T, d)
     n_conv, turns, d = convs.shape
 
-    def all_convs(cs):
-        return jax.vmap(
-            lambda conv: TL.ivf_conversation(index, conv, h=H,
-                                             nprobe=NPROBE, k=K,
-                                             alpha=alpha, mode=mode))(cs)
+    def one_conv(conv):
+        if pq:
+            return TL.ivf_pq_conversation(index, conv, h=H, nprobe=NPROBE,
+                                          k=K, alpha=alpha, rerank=RERANK,
+                                          mode=mode)
+        return TL.ivf_conversation(index, conv, h=H, nprobe=NPROBE, k=K,
+                                   alpha=alpha, mode=mode)
 
-    fn = jax.jit(all_convs)
+    fn = jax.jit(lambda cs: jax.vmap(one_conv)(cs))
     v, ids, stats = fn(convs)
     jax.block_until_ready(ids)
     wall = C.time_fn(fn, convs)
     metrics = C.eval_conversations(np.asarray(ids), wl)
     return dict(
         metrics=metrics,
+        ids=np.asarray(ids),
         ms_per_turn=1e3 * wall / (n_conv * turns),
         centroid_work=float(np.asarray(stats.centroid_dists).mean()),
         list_work=float(np.asarray(stats.list_dists).mean()),
         graph_work=0.0,
+        code_work=float(np.asarray(stats.code_dists).mean()),
         refresh_rate=float(np.asarray(stats.refreshed)[:, 1:].mean()),
     )
 
@@ -71,9 +92,11 @@ def _run_hnsw(index, wl, mode: str) -> Dict:
     metrics = C.eval_conversations(np.asarray(ids), wl)
     return dict(
         metrics=metrics,
+        ids=np.asarray(ids),
         ms_per_turn=1e3 * wall / (n_conv * turns),
         centroid_work=0.0, list_work=0.0,
         graph_work=float(np.asarray(stats.graph_dists).mean()),
+        code_work=0.0,
         refresh_rate=0.0,
     )
 
@@ -87,11 +110,12 @@ def _run_exact(wl) -> Dict:
     v, ids = fn(flat)
     jax.block_until_ready(ids)
     wall = C.time_fn(fn, flat)
-    metrics = C.eval_conversations(
-        np.asarray(ids).reshape(n_conv, turns, K), wl)
-    return dict(metrics=metrics, ms_per_turn=1e3 * wall / flat.shape[0],
+    ids = np.asarray(ids).reshape(n_conv, turns, K)
+    metrics = C.eval_conversations(ids, wl)
+    return dict(metrics=metrics, ids=ids,
+                ms_per_turn=1e3 * wall / flat.shape[0],
                 centroid_work=0.0, list_work=float(docs.shape[0]),
-                graph_work=0.0, refresh_rate=0.0)
+                graph_work=0.0, code_work=0.0, refresh_rate=0.0)
 
 
 def run(csv: bool = True) -> List[Dict]:
@@ -99,30 +123,46 @@ def run(csv: bool = True) -> List[Dict]:
     for kind in ("cast19", "cast20"):
         wl = C.workload(kind)
         ivf_idx = C.ivf_index(kind)
+        pq_idx = C.ivf_pq_index(kind)
         hnsw_idx = C.hnsw_index(kind)
         results = {
             "Exact": _run_exact(wl),
             "IVF": _run_ivf(ivf_idx, wl, "plain", -1.0),
             "TopLoc_IVF": _run_ivf(ivf_idx, wl, "toploc", -1.0),
             "TopLoc_IVF+": _run_ivf(ivf_idx, wl, "toploc", ALPHA),
+            "IVF-PQ": _run_ivf(pq_idx, wl, "plain", -1.0, pq=True),
+            "TopLoc_IVFPQ": _run_ivf(pq_idx, wl, "toploc", -1.0, pq=True),
+            "TopLoc_IVFPQ+": _run_ivf(pq_idx, wl, "toploc", ALPHA,
+                                      pq=True),
             "HNSW": _run_hnsw(hnsw_idx, wl, "plain"),
             "TopLoc_HNSW": _run_hnsw(hnsw_idx, wl, "toploc"),
         }
+        exact_ids = results["Exact"]["ids"]
         base_ms = {"TopLoc_IVF": results["IVF"]["ms_per_turn"],
                    "TopLoc_IVF+": results["IVF"]["ms_per_turn"],
+                   "TopLoc_IVFPQ": results["IVF-PQ"]["ms_per_turn"],
+                   "TopLoc_IVFPQ+": results["IVF-PQ"]["ms_per_turn"],
                    "TopLoc_HNSW": results["HNSW"]["ms_per_turn"]}
         base_work = {
             "TopLoc_IVF": results["IVF"]["centroid_work"]
             + results["IVF"]["list_work"],
             "TopLoc_IVF+": results["IVF"]["centroid_work"]
             + results["IVF"]["list_work"],
+            "TopLoc_IVFPQ": results["IVF-PQ"]["centroid_work"]
+            + results["IVF-PQ"]["list_work"],
+            "TopLoc_IVFPQ+": results["IVF-PQ"]["centroid_work"]
+            + results["IVF-PQ"]["list_work"],
             "TopLoc_HNSW": results["HNSW"]["graph_work"]}
         for name, res in results.items():
+            # float distances only; code_dists reported separately (an
+            # ADC eval moves m bytes, a float distance moves 4·d)
             work = (res["centroid_work"] + res["list_work"]
                     + res["graph_work"])
             row = dict(dataset=kind, method=name, **res["metrics"],
+                       recall10=round(_recall_vs(res["ids"], exact_ids), 3),
                        ms_per_turn=round(res["ms_per_turn"], 3),
                        work=round(work, 1),
+                       code_work=round(res["code_work"], 1),
                        speedup_time=(round(base_ms[name]
                                            / res["ms_per_turn"], 2)
                                      if name in base_ms else None),
@@ -135,14 +175,47 @@ def run(csv: bool = True) -> List[Dict]:
                 sp_w = row["speedup_work"] or "-"
                 print(f"table1,{kind},{name},{row['mrr@10']:.3f},"
                       f"{row['ndcg@3']:.3f},{row['ndcg@10']:.3f},"
-                      f"{row['ms_per_turn']},{row['work']},{sp_t},{sp_w}")
+                      f"{row['recall10']:.3f},{row['ms_per_turn']},"
+                      f"{row['work']},{row['code_work']},{sp_t},{sp_w}")
     return rows
 
 
-def main():
-    print("table,dataset,method,mrr@10,ndcg@3,ndcg@10,ms_per_turn,"
-          "work_dists,speedup_time,speedup_work")
-    run()
+def _assert_smoke_floors(rows: List[Dict]) -> None:
+    """Quality floors pinned by the PR-3 acceptance criteria."""
+    by = {(r["dataset"], r["method"]): r for r in rows}
+    for kind in ("cast19", "cast20"):
+        pq_rec = by[(kind, "TopLoc_IVFPQ")]["recall10"]
+        fl_rec = by[(kind, "TopLoc_IVF")]["recall10"]
+        assert pq_rec >= 0.9 * fl_rec, (
+            f"{kind}: TopLoc_IVFPQ recall@10 {pq_rec} < 0.9 x "
+            f"TopLoc_IVF {fl_rec}")
+        # all three backends produced sane rankings
+        for method in ("TopLoc_IVF", "TopLoc_IVFPQ", "TopLoc_HNSW"):
+            assert by[(kind, method)]["recall10"] >= 0.3, (kind, method)
+        # compression actually moved the float-distance counter
+        assert (by[(kind, "TopLoc_IVFPQ")]["work"]
+                < by[(kind, "TopLoc_IVF")]["work"]), kind
+    print("smoke: all floors hold "
+          f"(pq/float recall ratio >= 0.9 on both sets)")
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    if smoke:
+        # tiny corpus so the full table runs in CI seconds; constants
+        # are read at call time so mutating the modules is enough
+        global H
+        C.N_DOCS, C.PARTITIONS = 4000, 128
+        C.CONVS, C.TURNS = 6, 6
+        C.HNSW_M, C.HNSW_EFC = 8, 32
+        H = 64                        # keep np << h < p at p=128
+    print("table,dataset,method,mrr@10,ndcg@3,ndcg@10,recall@10,"
+          "ms_per_turn,work_dists,code_dists,speedup_time,speedup_work")
+    rows = run()
+    if smoke:
+        _assert_smoke_floors(rows)
+    return rows
 
 
 if __name__ == "__main__":

@@ -9,3 +9,5 @@ Public API:
   pq       — product-quantised posting lists (IVF-PQ, beyond-paper)
 """
 from repro.core import hnsw, ivf, kmeans, pq, topk, toploc  # noqa: F401
+from repro.core.pq import (  # noqa: F401
+    IVFPQIndex, PQCodebook, build_ivf_pq)

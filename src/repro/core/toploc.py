@@ -6,15 +6,23 @@ step:
 
   * ``ivf_start`` / ``ivf_step``   — TopLoc_IVF / TopLoc_IVF+ centroid
     caching with the |I0| drift proxy (Eq. 1) and α·np refresh trigger.
+  * ``ivf_pq_start`` / ``ivf_pq_step`` — TopLoc_IVFPQ: the same centroid
+    cache + drift proxy, but posting lists are scanned *PQ-compressed*
+    (asymmetric distance computation, ``kernels/pq_adc``) and the top-R
+    ADC candidates are exact-re-ranked against the float corpus.  The
+    first backend whose speedup comes from memory compression rather
+    than search-space restriction — the two compose.
   * ``hnsw_start`` / ``hnsw_step`` — TopLoc_HNSW privileged entry point
     with the ``up`` first-turn ef upscaling.
-  * ``conversation_scan``          — run a whole conversation under
+  * ``*_conversation``             — run a whole conversation under
     ``lax.scan`` (benchmark harness path).
 
 Work accounting: every step returns a ``TurnStats`` whose fields mirror
 the paper's cost model — centroid distances (p for a full scan, h for a
-cached one), posting-list distances, graph distances.  Speedups in
-benchmarks/ are computed from these counters *and* wall-clock.
+cached one), posting-list float distances, graph distances, and PQ code
+distances (ADC table-sum evaluations, each m table gathers + adds
+instead of a d-dim dot).  Speedups in benchmarks/ are computed from
+these counters *and* wall-clock.
 """
 from __future__ import annotations
 
@@ -26,7 +34,9 @@ import jax.numpy as jnp
 
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
+from repro.core import pq as _pq
 from repro.core.topk import intersect_count, masked_topk
+from repro.kernels import ops as _kops
 
 
 class IVFSession(NamedTuple):
@@ -46,15 +56,17 @@ class HNSWSession(NamedTuple):
 
 class TurnStats(NamedTuple):
     centroid_dists: jax.Array  # () int32
-    list_dists: jax.Array      # () int32
+    list_dists: jax.Array      # () int32 — float doc distances (lists/rerank)
     graph_dists: jax.Array     # () int32
+    code_dists: jax.Array      # () int32 — PQ ADC table-sum evaluations
     i0: jax.Array              # () int32 — |I0| (IVF+ only; -1 otherwise)
     refreshed: jax.Array       # () bool
 
 
 def _zero_stats() -> TurnStats:
     z = jnp.asarray(0, jnp.int32)
-    return TurnStats(z, z, z, jnp.asarray(-1, jnp.int32), jnp.asarray(False))
+    return TurnStats(z, z, z, z, jnp.asarray(-1, jnp.int32),
+                     jnp.asarray(False))
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +90,7 @@ def ivf_start(index: _ivf.IVFIndex, q0: jax.Array, *, h: int, nprobe: int,
         centroid_dists=jnp.asarray(index.p, jnp.int32),
         list_dists=real[0],
         graph_dists=jnp.asarray(0, jnp.int32),
+        code_dists=jnp.asarray(0, jnp.int32),
         i0=jnp.asarray(-1, jnp.int32),
         refreshed=jnp.asarray(True),
     )
@@ -128,6 +141,139 @@ def ivf_step(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
         + need_refresh.astype(jnp.int32) * index.p,
         list_dists=real[0],
         graph_dists=jnp.asarray(0, jnp.int32),
+        code_dists=jnp.asarray(0, jnp.int32),
+        i0=i0,
+        refreshed=need_refresh,
+    )
+    return top_v[0], top_i[0], new_sess, stats
+
+
+# ---------------------------------------------------------------------------
+# TopLoc_IVFPQ — centroid cache + PQ-compressed list scan + exact re-rank
+# ---------------------------------------------------------------------------
+#
+# Identical session machinery to TopLoc_IVF (the ``IVFSession`` centroid
+# cache, Eq. 1 drift proxy, α·np refresh) — only the posting-list scan
+# changes: lists hold m-byte PQ codes, the hot loop is an asymmetric-
+# distance scan (``kernels.ops.pq_adc_scan`` → Pallas on TPU, jnp ref on
+# CPU), and the top-R ADC candidates are re-ranked with exact float dot
+# products against ``index.doc_vecs``.  Work accounting: ``code_dists``
+# counts ADC evaluations (m table gathers + adds each), ``list_dists``
+# counts the exact re-rank dot products (R per turn) — so the float-
+# distance counter drops from O(nprobe·L) to O(R).
+#
+# Numerics follow the batch-size-stability rule from the batched-serving
+# section below: every reduction (LUT build, ADC sum, re-rank dots) is
+# formulated so each row's reduction order is independent of the batch
+# size, keeping sequential and batched engines bit-identical.
+
+
+def _adc_tables(index: _pq.IVFPQIndex, q: jax.Array) -> jax.Array:
+    """Per-query ADC lookup tables, (B, m, n_codes).
+
+    Broadcasts the codewords into the batch dim (cf.
+    ``_bcast_centroid_scores``) so each row's d_sub-length contractions
+    are bit-identical at any batch size.
+    """
+    b = q.shape[0]
+    m, n_codes, d_sub = index.codewords.shape
+    qs = q.reshape(b, m, d_sub)
+    cw = jnp.broadcast_to(index.codewords, (b,) + index.codewords.shape)
+    return jnp.einsum("bmd,bmkd->bmk", qs, cw)
+
+
+def _scan_lists_pq(index: _pq.IVFPQIndex, q: jax.Array, sel: jax.Array,
+                   k: int, rerank: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """ADC-scan the selected PQ lists, exact-re-rank the top-R.
+
+    q (B, d); sel (B, np).  Returns (top_v (B,k), top_i (B,k),
+    code_dists (B,), rerank_dists (B,)).
+    """
+    nprobe = sel.shape[1]
+    r = max(k, min(rerank, nprobe * index.lmax))
+    tables = _adc_tables(index, q)
+    cand_v, cand_ids = _kops.pq_adc_scan(tables, index.list_codes,
+                                         index.list_ids, sel, r)
+    # exact re-rank of the R survivors against the float corpus — the
+    # only place uncompressed vectors are touched (R rows, not np·Lmax).
+    # Explicit multiply-reduce, not a dot_general: XLA canonicalises the
+    # unit batch dim away at B=1 and retiles the reduction (cf.
+    # hnsw._dots), which would break sequential↔batched bit-identity.
+    safe = jnp.maximum(cand_ids, 0)
+    exact = jnp.sum(index.doc_vecs[safe] * q[:, None, :], axis=-1)
+    exact = jnp.where(cand_ids >= 0, exact, -jnp.inf)
+    top_v, pos = jax.lax.top_k(exact, k)
+    top_i = jnp.take_along_axis(cand_ids, pos, axis=-1)
+    code_d = jnp.sum(index.list_sizes[sel], axis=-1).astype(jnp.int32)
+    rerank_d = jnp.sum((cand_ids >= 0), axis=-1).astype(jnp.int32)
+    return top_v, top_i, code_d, rerank_d
+
+
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank"))
+def ivf_pq_start(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
+                 nprobe: int, k: int, rerank: int = 32
+                 ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
+    """First utterance on the PQ backend: full centroid scan, build C0,
+    ADC-scan + re-rank.  Session layout is exactly ``ivf_start``'s."""
+    cache_ids, cache_vecs = _ivf.make_cache(index, q0, h=h)
+    anchor_sel = cache_ids[:nprobe]
+    top_v, top_i, code_d, rerank_d = _scan_lists_pq(
+        index, q0[None], anchor_sel[None], k, rerank)
+    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
+                      jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
+    stats = TurnStats(
+        centroid_dists=jnp.asarray(index.p, jnp.int32),
+        list_dists=rerank_d[0],
+        graph_dists=jnp.asarray(0, jnp.int32),
+        code_dists=code_d[0],
+        i0=jnp.asarray(-1, jnp.int32),
+        refreshed=jnp.asarray(True),
+    )
+    return top_v[0], top_i[0], sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
+                                             "rerank"))
+def ivf_pq_step(index: _pq.IVFPQIndex, sess: IVFSession, q: jax.Array, *,
+                nprobe: int, k: int, alpha: float = -1.0, rerank: int = 32
+                ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
+    """Follow-up utterance on the PQ backend.
+
+    Same control flow as ``ivf_step`` (drift check before any scan;
+    ``alpha < 0`` static cache, ``alpha >= 0`` refresh) with the PQ
+    scan + re-rank in place of the float list scan.
+    """
+    h = sess.cache_ids.shape[0]
+    csims = sess.cache_vecs @ q                      # (h,)
+    _, sel_local = jax.lax.top_k(csims, nprobe)
+    sel_cached = sess.cache_ids[sel_local]
+
+    i0 = intersect_count(sel_cached, sess.anchor_sel)
+    need_refresh = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
+
+    def refreshed(_):
+        cache_ids, cache_vecs = _ivf.make_cache(index, q, h=h)
+        return cache_ids, cache_vecs, cache_ids[:nprobe], cache_ids[:nprobe]
+
+    def kept(_):
+        return sess.cache_ids, sess.cache_vecs, sess.anchor_sel, sel_cached
+
+    cache_ids, cache_vecs, anchor_sel, sel = jax.lax.cond(
+        need_refresh, refreshed, kept, None)
+
+    top_v, top_i, code_d, rerank_d = _scan_lists_pq(
+        index, q[None], sel[None], k, rerank)
+
+    new_sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
+                          sess.refreshes + need_refresh.astype(jnp.int32),
+                          sess.turn + 1)
+    stats = TurnStats(
+        centroid_dists=jnp.asarray(h, jnp.int32)
+        + need_refresh.astype(jnp.int32) * index.p,
+        list_dists=rerank_d[0],
+        graph_dists=jnp.asarray(0, jnp.int32),
+        code_dists=code_d[0],
         i0=i0,
         refreshed=need_refresh,
     )
@@ -232,6 +378,7 @@ def ivf_start_batch(index: _ivf.IVFIndex, q0: jax.Array, *, h: int,
         centroid_dists=jnp.full((b,), index.p, jnp.int32),
         list_dists=real,
         graph_dists=jnp.zeros((b,), jnp.int32),
+        code_dists=jnp.zeros((b,), jnp.int32),
         i0=jnp.full((b,), -1, jnp.int32),
         refreshed=jnp.ones((b,), bool),
     )
@@ -302,6 +449,7 @@ def ivf_step_batch(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
             h + step_refresh.astype(jnp.int32) * index.p).astype(jnp.int32),
         list_dists=real,
         graph_dists=jnp.zeros((b,), jnp.int32),
+        code_dists=jnp.zeros((b,), jnp.int32),
         i0=jnp.where(first, -1, i0),
         refreshed=refresh,
     )
@@ -320,6 +468,115 @@ def ivf_plain_batch(index: _ivf.IVFIndex, q: jax.Array, *, nprobe: int,
         centroid_dists=jnp.full((b,), index.p, jnp.int32),
         list_dists=real,
         graph_dists=jnp.zeros((b,), jnp.int32),
+        code_dists=jnp.zeros((b,), jnp.int32),
+        i0=jnp.full((b,), -1, jnp.int32),
+        refreshed=jnp.zeros((b,), bool),
+    )
+    return top_v, top_i, stats
+
+
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank"))
+def ivf_pq_start_batch(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
+                       nprobe: int, k: int, rerank: int = 32
+                       ) -> Tuple[jax.Array, jax.Array, IVFSession,
+                                  TurnStats]:
+    """Batched ``ivf_pq_start``: B first utterances in one dispatch."""
+    b = q0.shape[0]
+    cache_ids, cache_vecs = make_cache_batch(index, q0, h=h)
+    anchor_sel = cache_ids[:, :nprobe]
+    top_v, top_i, code_d, rerank_d = _scan_lists_pq(index, q0, anchor_sel,
+                                                    k, rerank)
+    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
+                      jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.int32))
+    stats = TurnStats(
+        centroid_dists=jnp.full((b,), index.p, jnp.int32),
+        list_dists=rerank_d,
+        graph_dists=jnp.zeros((b,), jnp.int32),
+        code_dists=code_d,
+        i0=jnp.full((b,), -1, jnp.int32),
+        refreshed=jnp.ones((b,), bool),
+    )
+    return top_v, top_i, sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
+                                             "rerank"))
+def ivf_pq_step_batch(index: _pq.IVFPQIndex, sess: IVFSession,
+                      q: jax.Array, *, nprobe: int, k: int,
+                      alpha: float = -1.0, rerank: int = 32,
+                      is_first: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array, IVFSession,
+                                 TurnStats]:
+    """Batched ``ivf_pq_step`` over B concurrent conversations.
+
+    Mirrors ``ivf_step_batch`` — same ``is_first`` forced-refresh
+    semantics, same batch-wide refresh gate — with the PQ scan +
+    re-rank in place of the float list scan.
+    """
+    b, h = sess.cache_ids.shape
+    csims = jnp.einsum("bhd,bd->bh", sess.cache_vecs, q)
+    _, sel_local = jax.lax.top_k(csims, nprobe)
+    sel_cached = jnp.take_along_axis(sess.cache_ids, sel_local, axis=1)
+
+    i0 = jax.vmap(intersect_count)(sel_cached, sess.anchor_sel)
+    drift = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
+
+    first = (jnp.zeros((b,), bool) if is_first is None else is_first)
+    refresh = first | drift
+
+    if is_first is not None or alpha >= 0.0:
+        fresh_ids, fresh_vecs = jax.lax.cond(
+            jnp.any(refresh),
+            lambda: make_cache_batch(index, q, h=h),
+            lambda: (jnp.zeros((b, h), jnp.int32),
+                     jnp.zeros((b, h) + index.centroids.shape[1:],
+                               index.centroids.dtype)))
+        r1 = refresh[:, None]
+        cache_ids = jnp.where(r1, fresh_ids, sess.cache_ids)
+        cache_vecs = jnp.where(r1[..., None], fresh_vecs, sess.cache_vecs)
+        anchor_sel = jnp.where(r1, fresh_ids[:, :nprobe], sess.anchor_sel)
+        sel = jnp.where(r1, fresh_ids[:, :nprobe], sel_cached)
+    else:
+        cache_ids, cache_vecs = sess.cache_ids, sess.cache_vecs
+        anchor_sel, sel = sess.anchor_sel, sel_cached
+
+    top_v, top_i, code_d, rerank_d = _scan_lists_pq(index, q, sel, k,
+                                                    rerank)
+
+    step_refresh = drift & ~first
+    new_sess = IVFSession(
+        cache_ids, cache_vecs, anchor_sel,
+        jnp.where(first, 0, sess.refreshes + step_refresh.astype(jnp.int32)),
+        jnp.where(first, 1, sess.turn + 1))
+    stats = TurnStats(
+        centroid_dists=jnp.where(
+            first, index.p,
+            h + step_refresh.astype(jnp.int32) * index.p).astype(jnp.int32),
+        list_dists=rerank_d,
+        graph_dists=jnp.zeros((b,), jnp.int32),
+        code_dists=code_d,
+        i0=jnp.where(first, -1, i0),
+        refreshed=refresh,
+    )
+    return top_v, top_i, new_sess, stats
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "rerank"))
+def ivf_pq_plain_batch(index: _pq.IVFPQIndex, q: jax.Array, *, nprobe: int,
+                       k: int, rerank: int = 32
+                       ) -> Tuple[jax.Array, jax.Array, TurnStats]:
+    """Batched plain IVF-PQ baseline turn (stateless; full centroid scan
+    every turn — what a sessionless IVFPQ deployment pays)."""
+    b = q.shape[0]
+    cscores = _bcast_centroid_scores(index.centroids, q)
+    _, sel = jax.lax.top_k(cscores, nprobe)
+    top_v, top_i, code_d, rerank_d = _scan_lists_pq(index, q, sel, k,
+                                                    rerank)
+    stats = TurnStats(
+        centroid_dists=jnp.full((b,), index.p, jnp.int32),
+        list_dists=rerank_d,
+        graph_dists=jnp.zeros((b,), jnp.int32),
+        code_dists=code_d,
         i0=jnp.full((b,), -1, jnp.int32),
         refreshed=jnp.zeros((b,), bool),
     )
@@ -336,7 +593,7 @@ def hnsw_start_batch(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int,
     sess = HNSWSession(entry_point=i[:, 0].astype(jnp.int32),
                        turn=jnp.ones((b,), jnp.int32))
     z = jnp.zeros((b,), jnp.int32)
-    stats = TurnStats(z, z, nd, jnp.full((b,), -1, jnp.int32),
+    stats = TurnStats(z, z, nd, z, jnp.full((b,), -1, jnp.int32),
                       jnp.ones((b,), bool))
     return v, i, sess, stats
 
@@ -382,7 +639,7 @@ def hnsw_step_batch(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array,
     new_sess = HNSWSession(entry_point=new_entry,
                            turn=jnp.where(first, 1, sess.turn + 1))
     z = jnp.zeros((b,), jnp.int32)
-    stats = TurnStats(z, z, nd, jnp.full((b,), -1, jnp.int32), first)
+    stats = TurnStats(z, z, nd, z, jnp.full((b,), -1, jnp.int32), first)
     return v, i, new_sess, stats
 
 
@@ -393,7 +650,7 @@ def hnsw_plain_batch(index: _hnsw.HNSWIndex, q: jax.Array, *, ef: int,
     b = q.shape[0]
     v, i, nd = _hnsw.search(index, q, ef=ef, k=k)
     z = jnp.zeros((b,), jnp.int32)
-    stats = TurnStats(z, z, nd, jnp.full((b,), -1, jnp.int32),
+    stats = TurnStats(z, z, nd, z, jnp.full((b,), -1, jnp.int32),
                       jnp.zeros((b,), bool))
     return v, i, stats
 
@@ -419,6 +676,7 @@ def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
             top_v, top_i, st = _ivf.search(index, q[None], nprobe=nprobe, k=k)
             stats = TurnStats(jnp.asarray(index.p, jnp.int32),
                               st.list_dists[0], jnp.asarray(0, jnp.int32),
+                              jnp.asarray(0, jnp.int32),
                               jnp.asarray(-1, jnp.int32), jnp.asarray(False))
             return carry, (top_v[0], top_i[0], stats)
         _, (v, i, stats) = jax.lax.scan(body, 0, utterances)
@@ -430,6 +688,42 @@ def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
     def body(sess, q):
         v, i, sess, st = ivf_step(index, sess, q, nprobe=nprobe, k=k,
                                   alpha=alpha)
+        return sess, (v, i, st)
+
+    _, (v, i, st) = jax.lax.scan(body, sess, rest)
+    v = jnp.concatenate([v0[None], v])
+    i = jnp.concatenate([i0_[None], i])
+    stats = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b]), st0, st)
+    return v, i, stats
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("h", "nprobe", "k", "alpha", "rerank",
+                                    "mode"))
+def ivf_pq_conversation(index: _pq.IVFPQIndex, utterances: jax.Array, *,
+                        h: int, nprobe: int, k: int, alpha: float = -1.0,
+                        rerank: int = 32, mode: str = "toploc"
+                        ) -> Tuple[jax.Array, jax.Array, TurnStats]:
+    """Run a (T, d) conversation through one IVF-PQ strategy.
+
+    mode: 'toploc' (centroid cache; alpha<0 static, alpha>=0 refresh) or
+    'plain' (full centroid scan every turn).
+    """
+    if mode == "plain":
+        def body(carry, q):
+            v, i, st = ivf_pq_plain_batch(index, q[None], nprobe=nprobe,
+                                          k=k, rerank=rerank)
+            return carry, (v[0], i[0], jax.tree.map(lambda a: a[0], st))
+        _, (v, i, stats) = jax.lax.scan(body, 0, utterances)
+        return v, i, stats
+
+    q0, rest = utterances[0], utterances[1:]
+    v0, i0_, sess, st0 = ivf_pq_start(index, q0, h=h, nprobe=nprobe, k=k,
+                                      rerank=rerank)
+
+    def body(sess, q):
+        v, i, sess, st = ivf_pq_step(index, sess, q, nprobe=nprobe, k=k,
+                                     alpha=alpha, rerank=rerank)
         return sess, (v, i, st)
 
     _, (v, i, st) = jax.lax.scan(body, sess, rest)
@@ -451,7 +745,7 @@ def hnsw_conversation(index: _hnsw.HNSWIndex, utterances: jax.Array, *,
     if mode == "plain":
         v, i, nd = _hnsw.search(index, utterances, ef=ef, k=k)
         stats = TurnStats(
-            jnp.zeros_like(nd), jnp.zeros_like(nd), nd,
+            jnp.zeros_like(nd), jnp.zeros_like(nd), nd, jnp.zeros_like(nd),
             jnp.full_like(nd, -1), jnp.zeros(nd.shape, bool))
         return v, i, stats
 

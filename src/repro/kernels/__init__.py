@@ -2,6 +2,7 @@
 
   centroid_topk   fused QxC matmul + streaming exact top-k   [TopLoc #1]
   ivf_scan        fused list gather + dot + masked top-k     [TopLoc #2]
+  pq_adc          fused PQ code gather + ADC LUT scan        [IVF-PQ]
   flash_attention prefill/train flash attn + flash decode    [LM archs]
   embedding_bag   fused gather + weighted bag reduction      [recsys]
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels import centroid_topk as _ck
 from repro.kernels import ivf_scan as _iv
+from repro.kernels import pq_adc as _pq
 from repro.kernels import flash_attention as _fa
 from repro.kernels import embedding_bag as _eb
 
@@ -98,6 +99,32 @@ def ivf_scan(queries: jax.Array, list_vecs: jax.Array, list_ids: jax.Array,
     li = _pad_axis(list_ids, 1, lpad, -1)
     v, i = _iv.ivf_scan(queries, lv, li, sel, kp, blk_l=blk_l,
                         interpret=(mode == "interpret"))
+    return v[:, :k], i[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# pq_adc_scan
+# ---------------------------------------------------------------------------
+
+def pq_adc_scan(tables: jax.Array, list_codes: jax.Array,
+                list_ids: jax.Array, sel: jax.Array, k: int, *,
+                mode: Optional[str] = None, max_tile: int = 4096
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Fused ADC scan of selected PQ posting lists. tables (B, m, codes),
+    sel (B, nprobe).  Returns the ADC top-k candidates per query."""
+    mode = mode or default_mode()
+    if mode == "ref":
+        return ref.pq_adc_scan_batch(tables, list_codes, list_ids, sel, k)
+    p, lmax, m = list_codes.shape
+    kp = _next_pow2(k)
+    lpad = _next_pow2(lmax)
+    blk_l = min(lpad, max_tile)
+    blk_l = max(blk_l, kp)
+    lpad = ((lpad + blk_l - 1) // blk_l) * blk_l
+    codes = _pad_axis(list_codes, 1, lpad, 0)
+    li = _pad_axis(list_ids, 1, lpad, -1)
+    v, i = _pq.pq_adc_scan(tables.astype(jnp.float32), codes, li, sel, kp,
+                           blk_l=blk_l, interpret=(mode == "interpret"))
     return v[:, :k], i[:, :k]
 
 

@@ -60,6 +60,43 @@ def ivf_scan_batch(queries: jax.Array, list_vecs: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# pq_adc_scan — PQ asymmetric-distance scan of selected posting lists
+# ---------------------------------------------------------------------------
+
+def pq_adc_scan(table: jax.Array, list_codes: jax.Array,
+                list_ids: jax.Array, sel: jax.Array, k: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """ADC scan of the selected PQ-compressed posting lists (one query).
+
+    table (m, n_codes) f32 — the query's ADC lookup table
+    (``pq.adc_table``); list_codes (p, Lmax, m) uint8; list_ids
+    (p, Lmax) int32 (-1 pad); sel (np,) int32.
+    Returns (values (k,), doc_ids (k,)) sorted descending by ADC score.
+    """
+    codes = list_codes[sel].astype(jnp.int32)       # (np, Lmax, m)
+    ids = list_ids[sel]                             # (np, Lmax)
+    npb, lmax, m = codes.shape
+    # gather along the code axis of the LUT: (m, np·Lmax) partial sums,
+    # reduced over the m subquantizers — elementwise per doc, so the
+    # reduction order is independent of any batching above
+    flat = codes.reshape(npb * lmax, m)
+    gathered = jnp.take_along_axis(table, flat.T, axis=1)   # (m, np·Lmax)
+    scores = jnp.sum(gathered, axis=0)
+    scores = jnp.where(ids.reshape(-1) >= 0, scores, -jnp.inf)
+    v, pos = jax.lax.top_k(scores, k)
+    return v, ids.reshape(-1)[pos].astype(jnp.int32)
+
+
+def pq_adc_scan_batch(tables: jax.Array, list_codes: jax.Array,
+                      list_ids: jax.Array, sel: jax.Array, k: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """vmap of pq_adc_scan over a query batch; tables (B, m, n_codes),
+    sel (B, np)."""
+    return jax.vmap(lambda t, s: pq_adc_scan(t, list_codes, list_ids, s, k)
+                    )(tables, sel)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention — causal/full softmax attention with GQA
 # ---------------------------------------------------------------------------
 

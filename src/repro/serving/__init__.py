@@ -12,4 +12,5 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     HedgedExecutor, MicroBatcher, Request)
 from repro.serving.sessions import (  # noqa: F401
-    SessionStore, hnsw_session_store, ivf_session_store)
+    SessionStore, hnsw_session_store, ivf_pq_session_store,
+    ivf_session_store)

@@ -4,7 +4,8 @@ Python-side session orchestration around the jitted core:
   * per-conversation TopLoc state (IVF centroid cache / HNSW entry
     point) held device-resident between turns;
   * strategy selected per deployment config (plain / toploc / exact,
-    IVF / HNSW backend);
+    IVF / IVF-PQ / HNSW backend — IVF-PQ scans PQ-compressed lists via
+    ADC and exact-re-ranks the top-R candidates);
   * work + latency accounting per turn (feeds benchmarks/table1.py);
   * optional query encoder in front (full paper pipeline), and an item
     corpus front-end for the two-tower ``retrieval_cand`` serving shape.
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
+from repro.core import pq as _pq
 from repro.core import toploc
 from repro.serving import sessions as _sessions
 from repro.serving.scheduler import MicroBatcher, Request
@@ -50,13 +52,14 @@ from repro.serving.scheduler import MicroBatcher, Request
 
 @dataclasses.dataclass
 class ServingConfig:
-    backend: str = "ivf"          # "ivf" | "hnsw" | "exact"
+    backend: str = "ivf"          # "ivf" | "ivf_pq" | "hnsw" | "exact"
     strategy: str = "toploc"      # "toploc" | "toploc+" | "plain"
     k: int = 10
-    # IVF
+    # IVF / IVF-PQ
     nprobe: int = 64
     h: int = 1024                 # cached centroids (TopLoc_IVF)
     alpha: float = 0.1            # refresh threshold (TopLoc_IVF+)
+    rerank: int = 64              # exact re-rank depth (IVF-PQ)
     # HNSW
     ef_search: int = 64
     up: int = 2                   # first-turn ef upscaling
@@ -72,6 +75,7 @@ class TurnRecord:
     graph_dists: int
     refreshed: bool
     i0: int
+    code_dists: int = 0           # PQ ADC evaluations (ivf_pq backend)
 
 
 class _EngineAccounting:
@@ -93,14 +97,19 @@ class _EngineAccounting:
                 [r.list_dists for r in self.records])),
             "mean_graph_dists": float(np.mean(
                 [r.graph_dists for r in self.records])),
+            "mean_code_dists": float(np.mean(
+                [r.code_dists for r in self.records])),
             "refresh_rate": float(np.mean(
                 [r.refreshed for r in self.records[1:]] or [0.0])),
         }
 
 
-def _check_indexes(config: ServingConfig, ivf_index, hnsw_index, doc_vecs):
+def _check_indexes(config: ServingConfig, ivf_index, hnsw_index, doc_vecs,
+                   ivf_pq_index=None):
     if config.backend == "ivf" and ivf_index is None:
         raise ValueError("ivf backend needs ivf_index")
+    if config.backend == "ivf_pq" and ivf_pq_index is None:
+        raise ValueError("ivf_pq backend needs ivf_pq_index")
     if config.backend == "hnsw" and hnsw_index is None:
         raise ValueError("hnsw backend needs hnsw_index")
     if config.backend == "exact" and doc_vecs is None:
@@ -111,12 +120,15 @@ class ConversationalSearchEngine(_EngineAccounting):
     def __init__(self, config: ServingConfig, *,
                  ivf_index: Optional[_ivf.IVFIndex] = None,
                  hnsw_index: Optional[_hnsw.HNSWIndex] = None,
+                 ivf_pq_index: Optional[_pq.IVFPQIndex] = None,
                  doc_vecs: Optional[jax.Array] = None):
         self.cfg = config
         self.ivf = ivf_index
         self.hnsw = hnsw_index
+        self.ivf_pq = ivf_pq_index
         self.doc_vecs = doc_vecs
-        _check_indexes(config, ivf_index, hnsw_index, doc_vecs)
+        _check_indexes(config, ivf_index, hnsw_index, doc_vecs,
+                       ivf_pq_index)
         self.sessions: Dict[str, Any] = {}
         self.turn_count: Dict[str, int] = {}
         self.records: List[TurnRecord] = []
@@ -136,6 +148,8 @@ class ConversationalSearchEngine(_EngineAccounting):
             stats = None
         elif cfg.backend == "ivf":
             v, i, stats = self._ivf_turn(conv_id, qvec, turn)
+        elif cfg.backend == "ivf_pq":
+            v, i, stats = self._ivf_pq_turn(conv_id, qvec, turn)
         else:
             v, i, stats = self._hnsw_turn(conv_id, qvec, turn)
 
@@ -148,7 +162,7 @@ class ConversationalSearchEngine(_EngineAccounting):
                 conv_id, turn, dt,
                 int(stats.centroid_dists), int(stats.list_dists),
                 int(stats.graph_dists), bool(stats.refreshed),
-                int(stats.i0)))
+                int(stats.i0), int(stats.code_dists)))
         else:
             self.records.append(TurnRecord(conv_id, turn, dt,
                                            0, 0, 0, False, -1))
@@ -167,8 +181,8 @@ class ConversationalSearchEngine(_EngineAccounting):
                                    nprobe=cfg.nprobe, k=cfg.k)
             stats = toploc.TurnStats(
                 jnp.asarray(self.ivf.p, jnp.int32), st.list_dists[0],
-                jnp.asarray(0, jnp.int32), jnp.asarray(-1, jnp.int32),
-                jnp.asarray(False))
+                jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+                jnp.asarray(-1, jnp.int32), jnp.asarray(False))
             return v[0], i[0], stats
         if turn == 0 or conv_id not in self.sessions:
             v, i, sess, stats = toploc.ivf_start(
@@ -182,6 +196,28 @@ class ConversationalSearchEngine(_EngineAccounting):
         self.sessions[conv_id] = sess
         return v, i, stats
 
+    def _ivf_pq_turn(self, conv_id, qvec, turn):
+        cfg = self.cfg
+        if cfg.strategy == "plain":
+            # B=1 call into the (batch-size-stable) batched path keeps
+            # sequential and batched plain serving bit-identical
+            v, i, st = toploc.ivf_pq_plain_batch(
+                self.ivf_pq, qvec[None], nprobe=cfg.nprobe, k=cfg.k,
+                rerank=cfg.rerank)
+            return v[0], i[0], jax.tree.map(lambda a: a[0], st)
+        if turn == 0 or conv_id not in self.sessions:
+            v, i, sess, stats = toploc.ivf_pq_start(
+                self.ivf_pq, qvec, h=cfg.h, nprobe=cfg.nprobe, k=cfg.k,
+                rerank=cfg.rerank)
+            self.sessions[conv_id] = sess
+            return v, i, stats
+        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
+        v, i, sess, stats = toploc.ivf_pq_step(
+            self.ivf_pq, self.sessions[conv_id], qvec,
+            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha, rerank=cfg.rerank)
+        self.sessions[conv_id] = sess
+        return v, i, stats
+
     def _hnsw_turn(self, conv_id, qvec, turn):
         cfg = self.cfg
         if cfg.strategy == "plain":
@@ -189,7 +225,8 @@ class ConversationalSearchEngine(_EngineAccounting):
                                     ef=cfg.ef_search, k=cfg.k)
             stats = toploc.TurnStats(
                 jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
-                nd[0], jnp.asarray(-1, jnp.int32), jnp.asarray(False))
+                nd[0], jnp.asarray(0, jnp.int32),
+                jnp.asarray(-1, jnp.int32), jnp.asarray(False))
             return v[0], i[0], stats
         if turn == 0 or conv_id not in self.sessions:
             v, i, sess, stats = toploc.hnsw_start(
@@ -217,6 +254,7 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
     def __init__(self, config: ServingConfig, *,
                  ivf_index: Optional[_ivf.IVFIndex] = None,
                  hnsw_index: Optional[_hnsw.HNSWIndex] = None,
+                 ivf_pq_index: Optional[_pq.IVFPQIndex] = None,
                  doc_vecs: Optional[jax.Array] = None,
                  n_slots: int = 256, max_batch: int = 32,
                  max_wait_s: float = 0.002,
@@ -224,8 +262,10 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         self.cfg = config
         self.ivf = ivf_index
         self.hnsw = hnsw_index
+        self.ivf_pq = ivf_pq_index
         self.doc_vecs = doc_vecs
-        _check_indexes(config, ivf_index, hnsw_index, doc_vecs)
+        _check_indexes(config, ivf_index, hnsw_index, doc_vecs,
+                       ivf_pq_index)
         # a wave holds up to max_batch distinct conversations, each
         # needing its own live slot — fewer slots would make acquire()
         # evict a conversation acquired earlier in the SAME wave and
@@ -239,6 +279,10 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         if config.backend == "ivf":
             self.store = _sessions.ivf_session_store(
                 ivf_index, h=config.h, nprobe=config.nprobe, n_slots=n_slots)
+        elif config.backend == "ivf_pq":
+            self.store = _sessions.ivf_pq_session_store(
+                ivf_pq_index, h=config.h, nprobe=config.nprobe,
+                n_slots=n_slots)
         elif config.backend == "hnsw":
             self.store = _sessions.hnsw_session_store(
                 hnsw_index, n_slots=n_slots)
@@ -332,6 +376,8 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
                 slots[row], is_first[row] = self.store.acquire(r.conv_id)
             if cfg.backend == "ivf":
                 v, i, stats = self._ivf_wave(q, slots, is_first)
+            elif cfg.backend == "ivf_pq":
+                v, i, stats = self._ivf_pq_wave(q, slots, is_first)
             else:
                 v, i, stats = self._hnsw_wave(q, slots, is_first)
 
@@ -352,7 +398,8 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
                     int(stats.centroid_dists[row]),
                     int(stats.list_dists[row]),
                     int(stats.graph_dists[row]),
-                    bool(stats.refreshed[row]), int(stats.i0[row]))
+                    bool(stats.refreshed[row]), int(stats.i0[row]),
+                    int(stats.code_dists[row]))
             self.records.append(rec)
             results[j] = (v[row], i[row])
 
@@ -366,6 +413,20 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         v, i, new_sess, stats = toploc.ivf_step_batch(
             self.ivf, sess, q, nprobe=cfg.nprobe, k=cfg.k, alpha=alpha,
             is_first=jnp.asarray(is_first))
+        self.store.scatter(slots, new_sess)
+        return v, i, stats
+
+    def _ivf_pq_wave(self, q, slots, is_first):
+        cfg = self.cfg
+        if cfg.strategy == "plain":
+            return toploc.ivf_pq_plain_batch(self.ivf_pq, q,
+                                             nprobe=cfg.nprobe, k=cfg.k,
+                                             rerank=cfg.rerank)
+        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
+        sess = self.store.gather(slots)
+        v, i, new_sess, stats = toploc.ivf_pq_step_batch(
+            self.ivf_pq, sess, q, nprobe=cfg.nprobe, k=cfg.k, alpha=alpha,
+            rerank=cfg.rerank, is_first=jnp.asarray(is_first))
         self.store.scatter(slots, new_sess)
         return v, i, stats
 

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
+from repro.core import pq as _pq
 from repro.core import toploc
 
 
@@ -148,9 +149,10 @@ class SessionStore:
             self._slab = _scatter_slab(self._slab, idx, sessions)
 
 
-def ivf_session_store(index: _ivf.IVFIndex, *, h: int, nprobe: int,
-                      n_slots: int) -> SessionStore:
-    """Slab of ``toploc.IVFSession`` rows sized for ``index``."""
+def ivf_session_store(index: "_ivf.IVFIndex | _pq.IVFPQIndex", *, h: int,
+                      nprobe: int, n_slots: int) -> SessionStore:
+    """Slab of ``toploc.IVFSession`` rows sized for ``index`` (reads
+    only the ``.d``/``.centroids`` fields both index types share)."""
     template = toploc.IVFSession(
         cache_ids=jnp.zeros((h,), jnp.int32),
         cache_vecs=jnp.zeros((h, index.d), index.centroids.dtype),
@@ -158,6 +160,18 @@ def ivf_session_store(index: _ivf.IVFIndex, *, h: int, nprobe: int,
         refreshes=jnp.zeros((), jnp.int32),
         turn=jnp.zeros((), jnp.int32))
     return SessionStore(template, n_slots)
+
+
+def ivf_pq_session_store(index: _pq.IVFPQIndex, *, h: int, nprobe: int,
+                         n_slots: int) -> SessionStore:
+    """Slab for the IVF-PQ backend.
+
+    TopLoc_IVFPQ reuses the ``IVFSession`` layout unchanged (the
+    centroid cache is identical — only the list scan differs), so this
+    delegates to the float-IVF store builder, which only reads the
+    ``.d``/``.centroids`` fields both index types share.
+    """
+    return ivf_session_store(index, h=h, nprobe=nprobe, n_slots=n_slots)
 
 
 def hnsw_session_store(index: _hnsw.HNSWIndex, *, n_slots: int

@@ -42,6 +42,14 @@ def ivf_index(small_corpus):
 
 
 @pytest.fixture(scope="session")
+def ivf_pq_index(small_corpus, ivf_index):
+    """IVF geometry of ``ivf_index`` + PQ-compressed posting lists."""
+    from repro.core import pq
+    return pq.build_ivf_pq(ivf_index, jnp.asarray(small_corpus.doc_vecs),
+                           m=8, iters=6, key=jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
 def hnsw_index(small_corpus):
     from repro.core import hnsw
     return hnsw.build(small_corpus.doc_vecs[:1200], m=8,

@@ -1,0 +1,113 @@
+"""Golden cost-model regression: pinned TurnStats for all three backends.
+
+The paper's speedup claims reduce to the work counters; an optimization
+that silently changes them (scans a different number of lists, skips the
+drift check, re-ranks a different depth) would invalidate the reported
+accounting even if retrieval quality looks fine.  This test pins the
+*exact* per-turn counters of a fixed-seed 8-turn conversation on IVF,
+IVF-PQ and HNSW so any such change fails loudly and must be justified in
+review.
+
+The pinned values also encode the PQ cost-model identity: TopLoc_IVFPQ
+pays the same centroid work and the same |I0| refresh schedule as float
+TopLoc_IVF, its ``code_dists`` equal the float backend's ``list_dists``
+(same posting lists, scanned compressed), and its float ``list_dists``
+collapse to the re-rank depth R.
+
+Determinism scope: fixed seeds end-to-end (workload, k-means, PQ
+codebooks, HNSW build) on the CPU backend CI runs — the same platform
+the tier-1 suite targets.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw, ivf, pq, toploc
+
+H, NPROBE, K, ALPHA, RERANK, EF, UP = 16, 4, 10, 0.3, 32, 16, 2
+
+GOLD_IVF = {
+    "centroid_dists": [32, 16, 16, 16, 16, 48, 16, 16],
+    "list_dists": [161, 149, 149, 168, 184, 206, 220, 212],
+    "graph_dists": [0, 0, 0, 0, 0, 0, 0, 0],
+    "code_dists": [0, 0, 0, 0, 0, 0, 0, 0],
+    "i0": [-1, 3, 3, 3, 3, 1, 3, 3],
+    "refreshed": [1, 0, 0, 0, 0, 1, 0, 0],
+}
+GOLD_IVF_PQ = {
+    "centroid_dists": [32, 16, 16, 16, 16, 48, 16, 16],
+    "list_dists": [32, 32, 32, 32, 32, 32, 32, 32],      # = RERANK
+    "graph_dists": [0, 0, 0, 0, 0, 0, 0, 0],
+    "code_dists": [161, 149, 149, 168, 184, 206, 220, 212],
+    "i0": [-1, 3, 3, 3, 3, 1, 3, 3],
+    "refreshed": [1, 0, 0, 0, 0, 1, 0, 0],
+}
+GOLD_HNSW = {
+    "centroid_dists": [0, 0, 0, 0, 0, 0, 0, 0],
+    "list_dists": [0, 0, 0, 0, 0, 0, 0, 0],
+    "graph_dists": [315, 186, 178, 164, 183, 173, 178, 169],
+    "code_dists": [0, 0, 0, 0, 0, 0, 0, 0],
+    "i0": [-1, -1, -1, -1, -1, -1, -1, -1],
+    "refreshed": [1, 0, 0, 0, 0, 0, 0, 0],
+}
+
+
+@pytest.fixture(scope="module")
+def golden_setup():
+    from repro.data import synthetic as SY
+    wl = SY.make_workload(SY.WorkloadConfig(
+        n_docs=1500, d=32, n_topics=12, n_conversations=2,
+        turns_per_conversation=8, query_drift=0.15, walk_step=0.05,
+        shift_prob=0.15, seed=7))
+    fidx = ivf.build(jnp.asarray(wl.doc_vecs), p=32, iters=5,
+                     key=jax.random.PRNGKey(0))
+    pqi = pq.build_ivf_pq(fidx, jnp.asarray(wl.doc_vecs), m=8, iters=6,
+                          key=jax.random.PRNGKey(0))
+    hidx = hnsw.build(wl.doc_vecs[:800], m=8, ef_construction=32, seed=0)
+    return jnp.asarray(wl.conversations[0]), fidx, pqi, hidx
+
+
+def _check(stats: toploc.TurnStats, gold: dict) -> None:
+    for field, expect in gold.items():
+        got = np.asarray(getattr(stats, field)).astype(int).tolist()
+        assert got == expect, (field, got, expect)
+
+
+def test_golden_ivf_counters(golden_setup):
+    conv, fidx, _, _ = golden_setup
+    _, _, st = toploc.ivf_conversation(fidx, conv, h=H, nprobe=NPROBE,
+                                       k=K, alpha=ALPHA)
+    _check(st, GOLD_IVF)
+
+
+def test_golden_ivf_pq_counters(golden_setup):
+    conv, _, pqi, _ = golden_setup
+    _, _, st = toploc.ivf_pq_conversation(pqi, conv, h=H, nprobe=NPROBE,
+                                          k=K, alpha=ALPHA, rerank=RERANK)
+    _check(st, GOLD_IVF_PQ)
+
+
+def test_golden_hnsw_counters(golden_setup):
+    conv, _, _, hidx = golden_setup
+    _, _, st = toploc.hnsw_conversation(hidx, conv, ef=EF, k=K, up=UP)
+    _check(st, GOLD_HNSW)
+
+
+def test_golden_pq_cost_identity(golden_setup):
+    """The structural identity behind the pinned numbers: PQ scans the
+    SAME lists as float IVF (code_dists == float list_dists, same
+    refresh schedule) while float work collapses to R per turn."""
+    conv, fidx, pqi, _ = golden_setup
+    _, _, st_f = toploc.ivf_conversation(fidx, conv, h=H, nprobe=NPROBE,
+                                         k=K, alpha=ALPHA)
+    _, _, st_q = toploc.ivf_pq_conversation(pqi, conv, h=H, nprobe=NPROBE,
+                                            k=K, alpha=ALPHA,
+                                            rerank=RERANK)
+    np.testing.assert_array_equal(np.asarray(st_q.code_dists),
+                                  np.asarray(st_f.list_dists))
+    np.testing.assert_array_equal(np.asarray(st_q.centroid_dists),
+                                  np.asarray(st_f.centroid_dists))
+    np.testing.assert_array_equal(np.asarray(st_q.refreshed),
+                                  np.asarray(st_f.refreshed))
+    assert np.all(np.asarray(st_q.list_dists) == RERANK)

@@ -102,6 +102,73 @@ def test_ivf_mixed_first_and_followup_batch(ivf_index, convs):
                          == getattr(rs, f)).all()), (b, f)
 
 
+# --------------------------------------------------------------- IVF-PQ
+
+@pytest.mark.parametrize("alpha", [-1.0, 0.3])
+def test_ivf_pq_batch_equals_sequential(ivf_pq_index, convs, alpha):
+    idx = ivf_pq_index
+    RR = 32
+    sess, vs, is_, sts = [], [], [], []
+    for b in range(B):
+        v, i, s, st = toploc.ivf_pq_start(idx, convs[b, 0], h=H,
+                                          nprobe=NPROBE, k=K, rerank=RR)
+        sess.append(s)
+        vs.append([v]); is_.append([i]); sts.append([st])
+    for t in range(1, T):
+        for b in range(B):
+            v, i, s, st = toploc.ivf_pq_step(idx, sess[b], convs[b, t],
+                                             nprobe=NPROBE, k=K,
+                                             alpha=alpha, rerank=RR)
+            sess[b] = s
+            vs[b].append(v); is_[b].append(i); sts[b].append(st)
+
+    bv, bi, bsess, bst = toploc.ivf_pq_start_batch(idx, convs[:, 0], h=H,
+                                                   nprobe=NPROBE, k=K,
+                                                   rerank=RR)
+    assert bool((jnp.stack([vs[b][0] for b in range(B)]) == bv).all())
+    assert bool((jnp.stack([is_[b][0] for b in range(B)]) == bi).all())
+    assert _stats_equal([sts[b][0] for b in range(B)], bst)
+    for t in range(1, T):
+        bv, bi, bsess, bst = toploc.ivf_pq_step_batch(
+            idx, bsess, convs[:, t], nprobe=NPROBE, k=K, alpha=alpha,
+            rerank=RR)
+        assert bool((jnp.stack([vs[b][t] for b in range(B)]) == bv).all()), t
+        assert bool((jnp.stack([is_[b][t] for b in range(B)]) == bi).all()), t
+        assert _stats_equal([sts[b][t] for b in range(B)], bst), t
+    for f in toploc.IVFSession._fields:
+        seq = jnp.stack([getattr(sess[b], f) for b in range(B)])
+        assert bool((seq == getattr(bsess, f)).all()), f
+
+
+def test_ivf_pq_mixed_first_and_followup_batch(ivf_pq_index, convs):
+    idx = ivf_pq_index
+    alpha, RR = 0.3, 32
+    _, _, sess0, _ = toploc.ivf_pq_start_batch(idx, convs[:, 0], h=H,
+                                               nprobe=NPROBE, k=K,
+                                               rerank=RR)
+    first = jnp.asarray([True, False, True, False])
+    qmix = jnp.where(first[:, None], convs[:, 0], convs[:, 1])
+    mv, mi, msess, mst = toploc.ivf_pq_step_batch(
+        idx, sess0, qmix, nprobe=NPROBE, k=K, alpha=alpha, rerank=RR,
+        is_first=first)
+    for b in range(B):
+        if bool(first[b]):
+            rv, ri, rs, rst = toploc.ivf_pq_start(idx, convs[b, 0], h=H,
+                                                  nprobe=NPROBE, k=K,
+                                                  rerank=RR)
+        else:
+            sb = jax.tree.map(lambda a: a[b], sess0)
+            rv, ri, rs, rst = toploc.ivf_pq_step(idx, sb, convs[b, 1],
+                                                 nprobe=NPROBE, k=K,
+                                                 alpha=alpha, rerank=RR)
+        assert bool((mv[b] == rv).all()) and bool((mi[b] == ri).all()), b
+        for f in toploc.TurnStats._fields:
+            assert bool((getattr(mst, f)[b] == getattr(rst, f)).all()), (b, f)
+        for f in toploc.IVFSession._fields:
+            assert bool((jax.tree.map(lambda a: a[b], msess)._asdict()[f]
+                         == getattr(rs, f)).all()), (b, f)
+
+
 # ----------------------------------------------------------------- HNSW
 
 def test_hnsw_batch_equals_sequential(hnsw_index, convs):
@@ -207,18 +274,21 @@ def test_hnsw_session_store_layout(hnsw_index):
 
 @pytest.mark.parametrize("backend,strategy", [
     ("ivf", "toploc"), ("ivf", "toploc+"), ("ivf", "plain"),
+    ("ivf_pq", "toploc"), ("ivf_pq", "toploc+"), ("ivf_pq", "plain"),
     ("hnsw", "toploc"),
 ])
 def test_batched_engine_matches_sequential(small_corpus, ivf_index,
-                                           hnsw_index, backend, strategy):
+                                           ivf_pq_index, hnsw_index,
+                                           backend, strategy):
     wl = small_corpus
     cfg = ServingConfig(backend=backend, strategy=strategy, nprobe=NPROBE,
-                        h=H, alpha=0.3, ef_search=EF, up=UP, k=K)
+                        h=H, alpha=0.3, ef_search=EF, up=UP, k=K, rerank=32)
     seq = ConversationalSearchEngine(cfg, ivf_index=ivf_index,
+                                     ivf_pq_index=ivf_pq_index,
                                      hnsw_index=hnsw_index)
     bat = BatchedConversationalSearchEngine(
-        cfg, ivf_index=ivf_index, hnsw_index=hnsw_index, max_batch=4,
-        max_wait_s=1e-4)
+        cfg, ivf_index=ivf_index, ivf_pq_index=ivf_pq_index,
+        hnsw_index=hnsw_index, max_batch=4, max_wait_s=1e-4)
     for t in range(T):
         futs = []
         for c in range(4):
@@ -233,7 +303,8 @@ def test_batched_engine_matches_sequential(small_corpus, ivf_index,
     # identical per-turn work accounting, order-independent
     def key(recs):
         return sorted((r.conv_id, r.turn, r.centroid_dists, r.list_dists,
-                       r.graph_dists, r.refreshed, r.i0) for r in recs)
+                       r.graph_dists, r.code_dists, r.refreshed, r.i0)
+                      for r in recs)
     assert key(seq.records) == key(bat.records)
 
 
@@ -286,6 +357,85 @@ def test_batched_engine_waves_same_conversation(small_corpus, ivf_index):
         np.testing.assert_array_equal(si, bi)
         np.testing.assert_array_equal(sv, bv)
     assert [r.turn for r in bat.records] == [0, 1, 2]
+
+
+@pytest.mark.parametrize("backend", ["ivf", "ivf_pq"])
+def test_evicted_live_conversation_resumes_as_first_turn(
+        small_corpus, ivf_index, ivf_pq_index, backend):
+    """LRU-evicting a live conversation then resuming it must re-run the
+    first-turn path: a fresh ``ivf_start`` on the *current* utterance,
+    not a follow-up step against another conversation's slot contents."""
+    wl = small_corpus
+    cfg = ServingConfig(backend=backend, strategy="toploc+", nprobe=NPROBE,
+                        h=H, alpha=0.3, k=K, rerank=32)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, ivf_pq_index=ivf_pq_index,
+        n_slots=2, max_batch=2, max_wait_s=1e-4)
+    idx = ivf_index if backend == "ivf" else ivf_pq_index
+    start = toploc.ivf_start if backend == "ivf" else toploc.ivf_pq_start
+
+    qa0, qa1 = jnp.asarray(wl.conversations[0, 0]), \
+        jnp.asarray(wl.conversations[0, 1])
+    bat.query("a", qa0)                       # slot 0
+    bat.query("b", jnp.asarray(wl.conversations[1, 0]))   # slot 1 (full)
+    bat.query("c", jnp.asarray(wl.conversations[2, 0]))   # evicts LRU 'a'
+    assert bat.store.evictions == 1
+    assert bat.store.lookup("a") is None
+    # 'a' returns mid-conversation: must be served as a first turn
+    v, i = bat.query("a", qa1)
+    kw = {"rerank": 32} if backend == "ivf_pq" else {}
+    rv, ri, _, rst = start(idx, qa1, h=H, nprobe=NPROBE, k=K, **kw)
+    np.testing.assert_array_equal(v, np.asarray(rv))
+    np.testing.assert_array_equal(i, np.asarray(ri))
+    rec = bat.records[-1]
+    assert rec.conv_id == "a" and rec.turn == 1      # host turn counter…
+    assert rec.centroid_dists == idx.p               # …but first-turn work
+    assert rec.refreshed and rec.i0 == -1
+    # and the rebuilt session continues as a normal follow-up
+    bat.query("a", jnp.asarray(wl.conversations[0, 2]))
+    assert bat.records[-1].centroid_dists in (H, H + idx.p)
+
+
+def test_trash_slot_never_leaks_into_live_rows(small_corpus, ivf_index):
+    """A padded trash-slot row must never surface scores to a caller or
+    mutate the stats/sessions of real rows."""
+    wl = small_corpus
+    cfg = ServingConfig(backend="ivf", strategy="toploc+", nprobe=NPROBE,
+                        h=H, alpha=0.3, k=K)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, max_batch=4, max_wait_s=1e-4)
+    # every flush of 3 pads to bucket 4 → one trash row per flush
+    for t in range(3):
+        for c in range(3):
+            bat.submit(f"c{c}", jnp.asarray(wl.conversations[c, t]))
+        bat.drain()
+    # no records for the trash row: exactly 3 convs x 3 turns
+    assert len(bat.records) == 9
+    assert {r.conv_id for r in bat.records} == {"c0", "c1", "c2"}
+    assert [r.turn for r in sorted(bat.records,
+                                   key=lambda r: (r.conv_id, r.turn))] \
+        == [0, 1, 2] * 3
+    # live slab rows equal the sequential per-conversation sessions
+    seq_sess = {}
+    for c in range(3):
+        v, i, s, _ = toploc.ivf_start(ivf_index,
+                                      jnp.asarray(wl.conversations[c, 0]),
+                                      h=H, nprobe=NPROBE, k=K)
+        for t in (1, 2):
+            v, i, s, _ = toploc.ivf_step(ivf_index, s,
+                                         jnp.asarray(wl.conversations[c, t]),
+                                         nprobe=NPROBE, k=K, alpha=0.3)
+        seq_sess[f"c{c}"] = s
+    for c in range(3):
+        slot = bat.store.lookup(f"c{c}")
+        row = bat.store.gather([slot])
+        for f in toploc.IVFSession._fields:
+            assert bool((getattr(row, f)[0]
+                         == getattr(seq_sess[f"c{c}"], f)).all()), (c, f)
+    # the trash row itself was scattered to (turn bumped) but that state
+    # is unreachable: no conversation maps to the trash slot
+    assert bat.store.trash_slot not in [
+        bat.store.lookup(f"c{c}") for c in range(3)]
 
 
 def test_batched_engine_padding_never_corrupts_sessions(small_corpus,
