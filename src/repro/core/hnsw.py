@@ -176,7 +176,26 @@ def _dots(vecs: jax.Array, q: jax.Array) -> jax.Array:
     return jnp.sum(vecs * q[None, :], axis=-1)
 
 
-def _greedy_level(vectors, adj, q, cur, cur_s, ndist):
+def _gather_dots(vectors):
+    """Default ``dots_at`` factory: gather rows, explicit multiply-reduce.
+
+    The search loops score candidates through an injected
+    ``dots_at(ids) -> (len(ids),)`` closure rather than touching
+    ``vectors`` directly, so the device-sharded path
+    (``distributed.retrieval.ShardedHNSWSearch``) can swap in an
+    owner-computes + ``psum`` scorer while reusing the exact traversal —
+    the arithmetic per candidate is identical either way (one shard
+    computes the same ``_dots`` row, the others contribute exact zeros),
+    which keeps sharded and single-device searches bit-identical.
+    """
+    def factory(q):
+        def dots_at(ids):
+            return _dots(vectors[ids], q)
+        return dots_at
+    return factory
+
+
+def _greedy_level(dots_at, adj, cur, cur_s, ndist):
     """Greedy hill-climb on one level (vectorised neighbour expansion)."""
     def cond(st):
         _, _, _, improved = st
@@ -186,8 +205,7 @@ def _greedy_level(vectors, adj, q, cur, cur_s, ndist):
         cur, cur_s, ndist, _ = st
         nbrs = adj[cur]                              # (deg,)
         valid = nbrs >= 0
-        vecs = vectors[jnp.maximum(nbrs, 0)]
-        s = jnp.where(valid, _dots(vecs, q), -jnp.inf)
+        s = jnp.where(valid, dots_at(jnp.maximum(nbrs, 0)), -jnp.inf)
         j = jnp.argmax(s)
         better = s[j] > cur_s
         ndist = ndist + jnp.sum(valid.astype(jnp.int32))
@@ -200,10 +218,9 @@ def _greedy_level(vectors, adj, q, cur, cur_s, ndist):
     return cur, cur_s, ndist
 
 
-def _search_layer0(vectors, adj0, q, entry, ef: int, max_steps: int):
+def _search_layer0(dots_at, n, adj0, entry, ef: int, max_steps: int):
     """Fixed-width beam realisation of the ef-search candidate loop."""
-    n = vectors.shape[0]
-    entry_s = _dots(vectors[entry][None], q)[0]
+    entry_s = dots_at(entry[None])[0]
     cand_v = jnp.full((ef,), -jnp.inf).at[0].set(entry_s)
     cand_i = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
     expanded = jnp.zeros((ef,), bool)
@@ -229,8 +246,7 @@ def _search_layer0(vectors, adj0, q, entry, ef: int, max_steps: int):
         expanded = expanded.at[pick].set(True)
         nbrs = adj0[node]                            # (2M,)
         ok = (nbrs >= 0) & ~visited[jnp.maximum(nbrs, 0)]
-        vecs = vectors[jnp.maximum(nbrs, 0)]
-        s = jnp.where(ok, _dots(vecs, q), -jnp.inf)
+        s = jnp.where(ok, dots_at(jnp.maximum(nbrs, 0)), -jnp.inf)
         ndist = ndist + jnp.sum(ok.astype(jnp.int32))
         visited = visited.at[jnp.maximum(nbrs, 0)].max(ok)
         # merge new candidates into the beam (expanded flag rides along)
@@ -244,6 +260,41 @@ def _search_layer0(vectors, adj0, q, entry, ef: int, max_steps: int):
         cond, body, (cand_v, cand_i, expanded, visited, ndist,
                      jnp.asarray(0, jnp.int32)))
     return cand_v, cand_i, ndist
+
+
+def _search_impl(dots_factory, n, top_level, adj0, upper_adj, entry_point,
+                 queries, entry_override, *, ef: int, k: int,
+                 use_entry_override: bool
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Traversal shared by the local and device-sharded search paths.
+
+    ``dots_factory(q) -> dots_at(ids)`` supplies the candidate scorer;
+    ``n`` sizes the visited bitmap (the *global* node count when vectors
+    are sharded).  Everything else is exactly the public ``search``.
+    """
+    max_steps = 4 * ef + 16
+
+    def one(q, override):
+        dots_at = dots_factory(q)
+        ndist = jnp.asarray(0, jnp.int32)
+        if use_entry_override:
+            start = override
+        else:
+            cur = entry_point
+            cur_s = dots_at(cur[None])[0]
+            ndist = ndist + 1
+            for lvl in range(top_level - 1, -1, -1):  # top level → level 1
+                cur, cur_s, ndist = _greedy_level(
+                    dots_at, upper_adj[lvl], cur, cur_s, ndist)
+            start = cur
+        cand_v, cand_i, nd0 = _search_layer0(
+            dots_at, n, adj0, start, ef, max_steps)
+        top_v, pos = jax.lax.top_k(cand_v, k)
+        return top_v, cand_i[pos], ndist + nd0
+
+    if entry_override is None:
+        entry_override = jnp.zeros((queries.shape[0],), jnp.int32)
+    return jax.vmap(one)(queries, entry_override)
 
 
 @functools.partial(jax.jit, static_argnames=("ef", "k", "use_entry_override"))
@@ -260,26 +311,7 @@ def search(index: HNSWIndex, queries: jax.Array, *, ef: int, k: int,
 
     Returns (scores (B,k), ids (B,k), ndist (B,) int32).
     """
-    max_steps = 4 * ef + 16
-
-    def one(q, override):
-        ndist = jnp.asarray(0, jnp.int32)
-        if use_entry_override:
-            start = override
-        else:
-            cur = index.entry_point
-            cur_s = _dots(index.vectors[cur][None], q)[0]
-            ndist = ndist + 1
-            L = index.top_level
-            for lvl in range(L - 1, -1, -1):   # top level → level 1
-                cur, cur_s, ndist = _greedy_level(
-                    index.vectors, index.upper_adj[lvl], q, cur, cur_s, ndist)
-            start = cur
-        cand_v, cand_i, nd0 = _search_layer0(
-            index.vectors, index.adj0, q, start, ef, max_steps)
-        top_v, pos = jax.lax.top_k(cand_v, k)
-        return top_v, cand_i[pos], ndist + nd0
-
-    if entry_override is None:
-        entry_override = jnp.zeros((queries.shape[0],), jnp.int32)
-    return jax.vmap(one)(queries, entry_override)
+    return _search_impl(
+        _gather_dots(index.vectors), index.n, index.top_level, index.adj0,
+        index.upper_adj, index.entry_point, queries, entry_override,
+        ef=ef, k=k, use_entry_override=use_entry_override)

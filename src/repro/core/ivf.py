@@ -116,17 +116,20 @@ def _scan_lists(index: IVFIndex, queries: jax.Array, sel: jax.Array,
     return top_v, top_i, real
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
-def search(index: IVFIndex, queries: jax.Array, *, nprobe: int, k: int
-           ) -> Tuple[jax.Array, jax.Array, SearchStats]:
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "scan"))
+def search(index: IVFIndex, queries: jax.Array, *, nprobe: int, k: int,
+           scan=None) -> Tuple[jax.Array, jax.Array, SearchStats]:
     """Plain IVF search (the paper's baseline).
 
+    ``scan`` optionally replaces the posting-list scan (same signature as
+    ``_scan_lists``) — the device-sharded retrieval path
+    (``distributed.retrieval.ShardedIVFScan``) plugs in here.
     Returns (scores (B,k), doc_ids (B,k), stats).
     """
     b = queries.shape[0]
     cscores = queries @ index.centroids.T           # (B, p)
     _, sel = jax.lax.top_k(cscores, nprobe)          # (B, np)
-    top_v, top_i, real = _scan_lists(index, queries, sel, k)
+    top_v, top_i, real = (scan or _scan_lists)(index, queries, sel, k)
     stats = SearchStats(
         centroid_dists=jnp.full((b,), index.p, jnp.int32),
         list_dists=real,

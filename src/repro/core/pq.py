@@ -175,6 +175,28 @@ def build_ivf_pq(index, vectors: jax.Array, m: int, *, iters: int = 8,
                       jnp.asarray(vectors))
 
 
+def adc_scores_masked(tables: jax.Array, codes: jax.Array,
+                      ids: jax.Array) -> jax.Array:
+    """ADC scores for pre-gathered candidate blocks, batched + masked.
+
+    tables (B, m, n_codes) f32; codes (B, N, m) int32; ids (B, N) int32
+    (-1 = pad/foreign → score -inf).  Returns (B, N) f32.
+
+    The per-candidate compute — an m-row LUT gather transposed to
+    (m, N) and reduced over the m axis — is formulated *exactly* like
+    ``kernels.ref.pq_adc_scan`` so each candidate's reduction order (and
+    therefore its last-ulp value) matches the single-device scan.  The
+    device-sharded scan (``distributed.retrieval.ShardedPQScan``) relies
+    on this to stay bit-identical to the unsharded backend.
+    """
+    def one(table, codes_q, ids_q):
+        gathered = jnp.take_along_axis(table, codes_q.T, axis=1)  # (m, N)
+        scores = jnp.sum(gathered, axis=0)
+        return jnp.where(ids_q >= 0, scores, -jnp.inf)
+
+    return jax.vmap(one)(tables, codes, ids)
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def adc_search_lists(book: PQCodebook, query: jax.Array,
                      list_codes: jax.Array, list_ids: jax.Array,

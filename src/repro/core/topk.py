@@ -67,6 +67,36 @@ def distributed_topk(
     return top_v, top_i
 
 
+def distributed_topk_ordered(
+    local_values: jax.Array,
+    local_pos: jax.Array,
+    local_ids: jax.Array,
+    k: int,
+    axis_name: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Global top-k across a mesh axis with *single-device tie-breaking*.
+
+    ``distributed_topk`` concatenates shards in mesh order before the
+    final ``top_k``, so candidates with equal scores resolve shard-major —
+    but a single-device ``masked_topk`` over the flat candidate array
+    resolves ties by flat position.  Here every shard passes, alongside
+    its local top-k, each candidate's *global flat position* (``pos`` as
+    returned by a local ``lax.top_k`` over the full-shape masked scan —
+    the same flat index the single-device scan would use), and the merge
+    sorts lexicographically by (score desc, position asc).  The result is
+    bit-identical to the single-device selection even when duplicate
+    documents produce exact score ties — the invariant the
+    sharded-vs-single-device equivalence tests pin down.
+    """
+    all_v = jax.lax.all_gather(local_values, axis_name, axis=-1, tiled=True)
+    all_p = jax.lax.all_gather(local_pos, axis_name, axis=-1, tiled=True)
+    all_i = jax.lax.all_gather(local_ids, axis_name, axis=-1, tiled=True)
+    # lax.sort is ascending: negate scores; positions break ties ascending
+    _, _, top_i, top_v = jax.lax.sort(
+        (-all_v, all_p, all_i, all_v), dimension=-1, num_keys=2)
+    return top_v[..., :k], top_i[..., :k]
+
+
 def intersect_count(ids_a: jax.Array, ids_b: jax.Array) -> jax.Array:
     """|set(ids_a) ∩ set(ids_b)| for 1-D id vectors (entries assumed unique
     within each vector; -1 entries are treated as padding and ignored).

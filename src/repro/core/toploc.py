@@ -73,17 +73,23 @@ def _zero_stats() -> TurnStats:
 # TopLoc_IVF / TopLoc_IVF+
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k"))
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "scan"))
 def ivf_start(index: _ivf.IVFIndex, q0: jax.Array, *, h: int, nprobe: int,
-              k: int) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
+              k: int, scan=None
+              ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
     """First utterance: full centroid scan, build C0 = top_h(q0, C), answer.
 
+    ``scan`` optionally replaces the posting-list scan (signature of
+    ``ivf._scan_lists``); the device-sharded retrieval path plugs in
+    ``distributed.retrieval.ShardedIVFScan`` here while the centroid
+    cache / session machinery stays replicated.
     Returns (scores (k,), doc_ids (k,), session, stats).
     """
     cache_ids, cache_vecs = _ivf.make_cache(index, q0, h=h)
     # top_np(q0, C0) == top_np(q0, C) since C0 holds q0's h best centroids
     anchor_sel = cache_ids[:nprobe]
-    top_v, top_i, real = _ivf._scan_lists(index, q0[None], anchor_sel[None], k)
+    top_v, top_i, real = (scan or _ivf._scan_lists)(
+        index, q0[None], anchor_sel[None], k)
     sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
                       jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
     stats = TurnStats(
@@ -97,9 +103,9 @@ def ivf_start(index: _ivf.IVFIndex, q0: jax.Array, *, h: int, nprobe: int,
     return top_v[0], top_i[0], sess, stats
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha"))
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha", "scan"))
 def ivf_step(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
-             nprobe: int, k: int, alpha: float = -1.0
+             nprobe: int, k: int, alpha: float = -1.0, scan=None
              ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
     """Follow-up utterance.
 
@@ -131,7 +137,8 @@ def ivf_step(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
         need_refresh, refreshed, kept, None)
 
     # 4. one posting-list scan with the final selection
-    top_v, top_i, real = _ivf._scan_lists(index, q[None], sel[None], k)
+    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q[None],
+                                                    sel[None], k)
 
     new_sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
                           sess.refreshes + need_refresh.astype(jnp.int32),
@@ -210,15 +217,19 @@ def _scan_lists_pq(index: _pq.IVFPQIndex, q: jax.Array, sel: jax.Array,
     return top_v, top_i, code_d, rerank_d
 
 
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank"))
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank",
+                                             "scan"))
 def ivf_pq_start(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
-                 nprobe: int, k: int, rerank: int = 32
+                 nprobe: int, k: int, rerank: int = 32, scan=None
                  ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
     """First utterance on the PQ backend: full centroid scan, build C0,
-    ADC-scan + re-rank.  Session layout is exactly ``ivf_start``'s."""
+    ADC-scan + re-rank.  Session layout is exactly ``ivf_start``'s.
+    ``scan`` optionally replaces the whole ADC-scan + re-rank stage
+    (signature of ``_scan_lists_pq``; sharded:
+    ``distributed.retrieval.ShardedPQScan``)."""
     cache_ids, cache_vecs = _ivf.make_cache(index, q0, h=h)
     anchor_sel = cache_ids[:nprobe]
-    top_v, top_i, code_d, rerank_d = _scan_lists_pq(
+    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
         index, q0[None], anchor_sel[None], k, rerank)
     sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
                       jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
@@ -234,9 +245,10 @@ def ivf_pq_start(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
-                                             "rerank"))
+                                             "rerank", "scan"))
 def ivf_pq_step(index: _pq.IVFPQIndex, sess: IVFSession, q: jax.Array, *,
-                nprobe: int, k: int, alpha: float = -1.0, rerank: int = 32
+                nprobe: int, k: int, alpha: float = -1.0, rerank: int = 32,
+                scan=None
                 ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
     """Follow-up utterance on the PQ backend.
 
@@ -262,7 +274,7 @@ def ivf_pq_step(index: _pq.IVFPQIndex, sess: IVFSession, q: jax.Array, *,
     cache_ids, cache_vecs, anchor_sel, sel = jax.lax.cond(
         need_refresh, refreshed, kept, None)
 
-    top_v, top_i, code_d, rerank_d = _scan_lists_pq(
+    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
         index, q[None], sel[None], k, rerank)
 
     new_sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
@@ -284,12 +296,15 @@ def ivf_pq_step(index: _pq.IVFPQIndex, sess: IVFSession, q: jax.Array, *,
 # TopLoc_HNSW
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up"))
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "search"))
 def hnsw_start(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int, k: int,
-               up: int = 2) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
+               up: int = 2, search=None
+               ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
     """First utterance: plain HNSW with an upscaled candidate list
-    (up · ef_search) so the privileged entry point is reliable."""
-    v, i, nd = _hnsw.search(index, q0[None], ef=up * ef, k=k)
+    (up · ef_search) so the privileged entry point is reliable.
+    ``search`` optionally replaces ``hnsw.search`` (sharded:
+    ``distributed.retrieval.ShardedHNSWSearch``)."""
+    v, i, nd = (search or _hnsw.search)(index, q0[None], ef=up * ef, k=k)
     sess = HNSWSession(entry_point=i[0, 0].astype(jnp.int32),
                        turn=jnp.asarray(1, jnp.int32))
     stats = _zero_stats()._replace(graph_dists=nd[0],
@@ -297,9 +312,10 @@ def hnsw_start(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int, k: int,
     return v[0], i[0], sess, stats
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "k", "adaptive"))
+@functools.partial(jax.jit, static_argnames=("ef", "k", "adaptive",
+                                             "search"))
 def hnsw_step(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array, *,
-              ef: int, k: int, adaptive: bool = False
+              ef: int, k: int, adaptive: bool = False, search=None
               ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
     """Follow-up utterance: start the level-0 beam at the privileged entry
     point — no hierarchy descent (the paper's saving).
@@ -308,10 +324,10 @@ def hnsw_step(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array, *,
     point at every turn's top-1 (the paper keeps q0's anchor for the whole
     conversation).
     """
-    v, i, nd = _hnsw.search(index, q[None],
-                            ef=ef, k=k,
-                            entry_override=sess.entry_point[None],
-                            use_entry_override=True)
+    v, i, nd = (search or _hnsw.search)(
+        index, q[None], ef=ef, k=k,
+        entry_override=sess.entry_point[None],
+        use_entry_override=True)
     new_entry = i[0, 0].astype(jnp.int32) if adaptive else sess.entry_point
     sess = HNSWSession(entry_point=new_entry, turn=sess.turn + 1)
     stats = _zero_stats()._replace(graph_dists=nd[0])
@@ -359,9 +375,9 @@ def make_cache_batch(index: _ivf.IVFIndex, q: jax.Array, *, h: int
     return ids, index.centroids[ids]
 
 
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k"))
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "scan"))
 def ivf_start_batch(index: _ivf.IVFIndex, q0: jax.Array, *, h: int,
-                    nprobe: int, k: int
+                    nprobe: int, k: int, scan=None
                     ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
     """Batched ``ivf_start``: B first utterances in one dispatch.
 
@@ -371,7 +387,7 @@ def ivf_start_batch(index: _ivf.IVFIndex, q0: jax.Array, *, h: int,
     b = q0.shape[0]
     cache_ids, cache_vecs = make_cache_batch(index, q0, h=h)
     anchor_sel = cache_ids[:, :nprobe]
-    top_v, top_i, real = _ivf._scan_lists(index, q0, anchor_sel, k)
+    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q0, anchor_sel, k)
     sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
                       jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.int32))
     stats = TurnStats(
@@ -385,10 +401,11 @@ def ivf_start_batch(index: _ivf.IVFIndex, q0: jax.Array, *, h: int,
     return top_v, top_i, sess, stats
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha"))
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
+                                             "scan"))
 def ivf_step_batch(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
                    nprobe: int, k: int, alpha: float = -1.0,
-                   is_first: Optional[jax.Array] = None
+                   is_first: Optional[jax.Array] = None, scan=None
                    ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
     """Batched ``ivf_step`` over B concurrent conversations.
 
@@ -436,7 +453,7 @@ def ivf_step_batch(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
         anchor_sel, sel = sess.anchor_sel, sel_cached
 
     # 4. one posting-list scan for the whole batch
-    top_v, top_i, real = _ivf._scan_lists(index, q, sel, k)
+    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q, sel, k)
 
     step_refresh = drift & ~first      # first turns don't count as refreshes
     new_sess = IVFSession(
@@ -456,14 +473,15 @@ def ivf_step_batch(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
     return top_v, top_i, new_sess, stats
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "scan"))
 def ivf_plain_batch(index: _ivf.IVFIndex, q: jax.Array, *, nprobe: int,
-                    k: int) -> Tuple[jax.Array, jax.Array, TurnStats]:
+                    k: int, scan=None
+                    ) -> Tuple[jax.Array, jax.Array, TurnStats]:
     """Batched plain-IVF baseline turn (stateless; engine parity path)."""
     b = q.shape[0]
     cscores = _bcast_centroid_scores(index.centroids, q)
     _, sel = jax.lax.top_k(cscores, nprobe)
-    top_v, top_i, real = _ivf._scan_lists(index, q, sel, k)
+    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q, sel, k)
     stats = TurnStats(
         centroid_dists=jnp.full((b,), index.p, jnp.int32),
         list_dists=real,
@@ -475,17 +493,18 @@ def ivf_plain_batch(index: _ivf.IVFIndex, q: jax.Array, *, nprobe: int,
     return top_v, top_i, stats
 
 
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank"))
+@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank",
+                                             "scan"))
 def ivf_pq_start_batch(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
-                       nprobe: int, k: int, rerank: int = 32
+                       nprobe: int, k: int, rerank: int = 32, scan=None
                        ) -> Tuple[jax.Array, jax.Array, IVFSession,
                                   TurnStats]:
     """Batched ``ivf_pq_start``: B first utterances in one dispatch."""
     b = q0.shape[0]
     cache_ids, cache_vecs = make_cache_batch(index, q0, h=h)
     anchor_sel = cache_ids[:, :nprobe]
-    top_v, top_i, code_d, rerank_d = _scan_lists_pq(index, q0, anchor_sel,
-                                                    k, rerank)
+    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
+        index, q0, anchor_sel, k, rerank)
     sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
                       jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.int32))
     stats = TurnStats(
@@ -500,11 +519,11 @@ def ivf_pq_start_batch(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
-                                             "rerank"))
+                                             "rerank", "scan"))
 def ivf_pq_step_batch(index: _pq.IVFPQIndex, sess: IVFSession,
                       q: jax.Array, *, nprobe: int, k: int,
                       alpha: float = -1.0, rerank: int = 32,
-                      is_first: Optional[jax.Array] = None
+                      is_first: Optional[jax.Array] = None, scan=None
                       ) -> Tuple[jax.Array, jax.Array, IVFSession,
                                  TurnStats]:
     """Batched ``ivf_pq_step`` over B concurrent conversations.
@@ -540,8 +559,8 @@ def ivf_pq_step_batch(index: _pq.IVFPQIndex, sess: IVFSession,
         cache_ids, cache_vecs = sess.cache_ids, sess.cache_vecs
         anchor_sel, sel = sess.anchor_sel, sel_cached
 
-    top_v, top_i, code_d, rerank_d = _scan_lists_pq(index, q, sel, k,
-                                                    rerank)
+    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
+        index, q, sel, k, rerank)
 
     step_refresh = drift & ~first
     new_sess = IVFSession(
@@ -561,17 +580,18 @@ def ivf_pq_step_batch(index: _pq.IVFPQIndex, sess: IVFSession,
     return top_v, top_i, new_sess, stats
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "rerank"))
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "rerank",
+                                             "scan"))
 def ivf_pq_plain_batch(index: _pq.IVFPQIndex, q: jax.Array, *, nprobe: int,
-                       k: int, rerank: int = 32
+                       k: int, rerank: int = 32, scan=None
                        ) -> Tuple[jax.Array, jax.Array, TurnStats]:
     """Batched plain IVF-PQ baseline turn (stateless; full centroid scan
     every turn — what a sessionless IVFPQ deployment pays)."""
     b = q.shape[0]
     cscores = _bcast_centroid_scores(index.centroids, q)
     _, sel = jax.lax.top_k(cscores, nprobe)
-    top_v, top_i, code_d, rerank_d = _scan_lists_pq(index, q, sel, k,
-                                                    rerank)
+    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
+        index, q, sel, k, rerank)
     stats = TurnStats(
         centroid_dists=jnp.full((b,), index.p, jnp.int32),
         list_dists=rerank_d,
@@ -583,13 +603,13 @@ def ivf_pq_plain_batch(index: _pq.IVFPQIndex, q: jax.Array, *, nprobe: int,
     return top_v, top_i, stats
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up"))
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "search"))
 def hnsw_start_batch(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int,
-                     k: int, up: int = 2
+                     k: int, up: int = 2, search=None
                      ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
     """Batched ``hnsw_start``: B first utterances, upscaled ef, one dispatch."""
     b = q0.shape[0]
-    v, i, nd = _hnsw.search(index, q0, ef=up * ef, k=k)
+    v, i, nd = (search or _hnsw.search)(index, q0, ef=up * ef, k=k)
     sess = HNSWSession(entry_point=i[:, 0].astype(jnp.int32),
                        turn=jnp.ones((b,), jnp.int32))
     z = jnp.zeros((b,), jnp.int32)
@@ -598,10 +618,11 @@ def hnsw_start_batch(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int,
     return v, i, sess, stats
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "adaptive"))
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "adaptive",
+                                             "search"))
 def hnsw_step_batch(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array,
                     *, ef: int, k: int, up: int = 2, adaptive: bool = False,
-                    is_first: Optional[jax.Array] = None
+                    is_first: Optional[jax.Array] = None, search=None
                     ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
     """Batched ``hnsw_step`` over B concurrent conversations.
 
@@ -613,15 +634,16 @@ def hnsw_step_batch(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array,
     rather than diverging per row.
     """
     b = q.shape[0]
-    v, i, nd = _hnsw.search(index, q, ef=ef, k=k,
-                            entry_override=sess.entry_point,
-                            use_entry_override=True)
+    do_search = search or _hnsw.search
+    v, i, nd = do_search(index, q, ef=ef, k=k,
+                         entry_override=sess.entry_point,
+                         use_entry_override=True)
     if is_first is not None:
         # batch-wide gate: steady-state flushes (no first turns) skip
         # the full-descent upscaled search entirely
         v0, i_0, nd0 = jax.lax.cond(
             jnp.any(is_first),
-            lambda: _hnsw.search(index, q, ef=up * ef, k=k),
+            lambda: do_search(index, q, ef=up * ef, k=k),
             lambda: (jnp.zeros((b, k), index.vectors.dtype),
                      jnp.zeros((b, k), jnp.int32),
                      jnp.zeros((b,), jnp.int32)))
@@ -643,12 +665,13 @@ def hnsw_step_batch(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array,
     return v, i, new_sess, stats
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "k"))
+@functools.partial(jax.jit, static_argnames=("ef", "k", "search"))
 def hnsw_plain_batch(index: _hnsw.HNSWIndex, q: jax.Array, *, ef: int,
-                     k: int) -> Tuple[jax.Array, jax.Array, TurnStats]:
+                     k: int, search=None
+                     ) -> Tuple[jax.Array, jax.Array, TurnStats]:
     """Batched plain-HNSW baseline turn (stateless; engine parity path)."""
     b = q.shape[0]
-    v, i, nd = _hnsw.search(index, q, ef=ef, k=k)
+    v, i, nd = (search or _hnsw.search)(index, q, ef=ef, k=k)
     z = jnp.zeros((b,), jnp.int32)
     stats = TurnStats(z, z, nd, z, jnp.full((b,), -1, jnp.int32),
                       jnp.zeros((b,), bool))
@@ -660,10 +683,11 @@ def hnsw_plain_batch(index: _hnsw.HNSWIndex, q: jax.Array, *, ef: int,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit,
-                   static_argnames=("h", "nprobe", "k", "alpha", "mode"))
+                   static_argnames=("h", "nprobe", "k", "alpha", "mode",
+                                    "scan"))
 def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
                      nprobe: int, k: int, alpha: float = -1.0,
-                     mode: str = "toploc"
+                     mode: str = "toploc", scan=None
                      ) -> Tuple[jax.Array, jax.Array, TurnStats]:
     """Run a (T, d) conversation through one IVF strategy.
 
@@ -673,7 +697,8 @@ def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
     """
     if mode == "plain":
         def body(carry, q):
-            top_v, top_i, st = _ivf.search(index, q[None], nprobe=nprobe, k=k)
+            top_v, top_i, st = _ivf.search(index, q[None], nprobe=nprobe,
+                                           k=k, scan=scan)
             stats = TurnStats(jnp.asarray(index.p, jnp.int32),
                               st.list_dists[0], jnp.asarray(0, jnp.int32),
                               jnp.asarray(0, jnp.int32),
@@ -683,11 +708,12 @@ def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
         return v, i, stats
 
     q0, rest = utterances[0], utterances[1:]
-    v0, i0_, sess, st0 = ivf_start(index, q0, h=h, nprobe=nprobe, k=k)
+    v0, i0_, sess, st0 = ivf_start(index, q0, h=h, nprobe=nprobe, k=k,
+                                   scan=scan)
 
     def body(sess, q):
         v, i, sess, st = ivf_step(index, sess, q, nprobe=nprobe, k=k,
-                                  alpha=alpha)
+                                  alpha=alpha, scan=scan)
         return sess, (v, i, st)
 
     _, (v, i, st) = jax.lax.scan(body, sess, rest)
@@ -699,10 +725,10 @@ def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("h", "nprobe", "k", "alpha", "rerank",
-                                    "mode"))
+                                    "mode", "scan"))
 def ivf_pq_conversation(index: _pq.IVFPQIndex, utterances: jax.Array, *,
                         h: int, nprobe: int, k: int, alpha: float = -1.0,
-                        rerank: int = 32, mode: str = "toploc"
+                        rerank: int = 32, mode: str = "toploc", scan=None
                         ) -> Tuple[jax.Array, jax.Array, TurnStats]:
     """Run a (T, d) conversation through one IVF-PQ strategy.
 
@@ -712,18 +738,18 @@ def ivf_pq_conversation(index: _pq.IVFPQIndex, utterances: jax.Array, *,
     if mode == "plain":
         def body(carry, q):
             v, i, st = ivf_pq_plain_batch(index, q[None], nprobe=nprobe,
-                                          k=k, rerank=rerank)
+                                          k=k, rerank=rerank, scan=scan)
             return carry, (v[0], i[0], jax.tree.map(lambda a: a[0], st))
         _, (v, i, stats) = jax.lax.scan(body, 0, utterances)
         return v, i, stats
 
     q0, rest = utterances[0], utterances[1:]
     v0, i0_, sess, st0 = ivf_pq_start(index, q0, h=h, nprobe=nprobe, k=k,
-                                      rerank=rerank)
+                                      rerank=rerank, scan=scan)
 
     def body(sess, q):
         v, i, sess, st = ivf_pq_step(index, sess, q, nprobe=nprobe, k=k,
-                                     alpha=alpha, rerank=rerank)
+                                     alpha=alpha, rerank=rerank, scan=scan)
         return sess, (v, i, st)
 
     _, (v, i, st) = jax.lax.scan(body, sess, rest)
@@ -733,9 +759,11 @@ def ivf_pq_conversation(index: _pq.IVFPQIndex, utterances: jax.Array, *,
     return v, i, stats
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "mode"))
+@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "mode",
+                                             "search"))
 def hnsw_conversation(index: _hnsw.HNSWIndex, utterances: jax.Array, *,
-                      ef: int, k: int, up: int = 2, mode: str = "toploc"
+                      ef: int, k: int, up: int = 2, mode: str = "toploc",
+                      search=None
                       ) -> Tuple[jax.Array, jax.Array, TurnStats]:
     """Run a (T, d) conversation through one HNSW strategy.
 
@@ -743,19 +771,20 @@ def hnsw_conversation(index: _hnsw.HNSWIndex, utterances: jax.Array, *,
     (beyond-paper: re-anchor the entry point at every turn's top-1).
     """
     if mode == "plain":
-        v, i, nd = _hnsw.search(index, utterances, ef=ef, k=k)
+        v, i, nd = (search or _hnsw.search)(index, utterances, ef=ef, k=k)
         stats = TurnStats(
             jnp.zeros_like(nd), jnp.zeros_like(nd), nd, jnp.zeros_like(nd),
             jnp.full_like(nd, -1), jnp.zeros(nd.shape, bool))
         return v, i, stats
 
     q0, rest = utterances[0], utterances[1:]
-    v0, i0_, sess, st0 = hnsw_start(index, q0, ef=ef, k=k, up=up)
+    v0, i0_, sess, st0 = hnsw_start(index, q0, ef=ef, k=k, up=up,
+                                    search=search)
     adaptive = mode == "adaptive"
 
     def body(sess, q):
         v, i, sess, st = hnsw_step(index, sess, q, ef=ef, k=k,
-                                   adaptive=adaptive)
+                                   adaptive=adaptive, search=search)
         return sess, (v, i, st)
 
     _, (v, i, st) = jax.lax.scan(body, sess, rest)

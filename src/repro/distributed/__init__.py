@@ -1,2 +1,3 @@
 """Mesh/sharding rules, retrieval collectives, fault tolerance, elastic."""
-from repro.distributed import collectives, elastic, fault, sharding  # noqa: F401
+from repro.distributed import (  # noqa: F401
+    collectives, elastic, fault, retrieval, sharding)

@@ -292,3 +292,38 @@ def ivf_index_specs(ax: Axes) -> Any:
         list_ids=P(tp, None),
         list_sizes=P(tp),
     )
+
+
+def ivf_pq_index_specs(ax: Axes) -> Any:
+    """IVF-PQ corpus layout (DESIGN.md §2): coarse centroids and PQ
+    codebooks replicated (tiny, read every turn); PQ code lists sharded
+    by partition like the float lists; the exact-re-rank corpus sharded
+    by *document* row so only 1/S of the uncompressed floats live on
+    each device (owner computes the re-rank dot, psum merges)."""
+    tp = ax.model
+    from repro.core.pq import IVFPQIndex
+    return IVFPQIndex(
+        centroids=P(None, None),
+        codewords=P(None, None, None),
+        list_codes=P(tp, None, None),
+        list_ids=P(tp, None),
+        list_sizes=P(tp),
+        doc_vecs=P(tp, None),
+    )
+
+
+def hnsw_index_specs(ax: Axes) -> Any:
+    """HNSW: the vector corpus (the memory-heavy field, 4·d bytes/node)
+    sharded by node row over the model axis; adjacency (ints, ~2M·4
+    bytes/node) and entry metadata replicated so the beam traversal
+    stays local — only candidate *scoring* is distributed (owner
+    computes the dot, psum merges; distributed.retrieval)."""
+    tp = ax.model
+    from repro.core.hnsw import HNSWIndex
+    return HNSWIndex(
+        vectors=P(tp, None),
+        adj0=P(None, None),
+        upper_adj=P(None, None, None),
+        entry_point=P(),
+        node_level=P(None),
+    )

@@ -46,6 +46,7 @@ from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import pq as _pq
 from repro.core import toploc
+from repro.distributed import retrieval as _retrieval
 from repro.serving import sessions as _sessions
 from repro.serving.scheduler import MicroBatcher, Request
 
@@ -63,6 +64,12 @@ class ServingConfig:
     # HNSW
     ef_search: int = 64
     up: int = 2                   # first-turn ef upscaling
+    # corpus sharding (distributed.retrieval): shards > 1 partitions the
+    # posting lists / vector corpus over a device mesh; results stay
+    # bit-identical to single-device (tests/test_sharded_retrieval.py)
+    shards: int = 0               # 0/1 = single device
+    mesh: Any = None              # prebuilt jax Mesh (overrides shards)
+    shard_axis: str = "model"
 
 
 @dataclasses.dataclass
@@ -116,7 +123,42 @@ def _check_indexes(config: ServingConfig, ivf_index, hnsw_index, doc_vecs,
         raise ValueError("exact backend needs doc_vecs")
 
 
-class ConversationalSearchEngine(_EngineAccounting):
+class _ShardedRetrievalMixin:
+    """Corpus-mesh wiring shared by both engines.
+
+    ``_setup_sharding`` resolves the ``ServingConfig`` mesh/shards knob,
+    re-places the active backend's index on the mesh (posting lists /
+    vector corpus sharded, centroids + session math replicated) and
+    builds the scan callables the strategy paths inject into
+    ``core.toploc``.  With no mesh configured every ``self._*scan``
+    stays ``None`` and the toploc entry points fall back to their local
+    scans — the single-device behaviour is untouched.
+    """
+
+    def _setup_sharding(self, config: ServingConfig) -> None:
+        mesh = config.mesh
+        if mesh is None and config.shards and config.shards > 1:
+            mesh = _retrieval.retrieval_mesh(config.shards,
+                                             axis=config.shard_axis)
+        self.mesh = mesh
+        self._ivf_scan = self._pq_scan = self._hnsw_search = None
+        if mesh is None or config.backend == "exact":
+            return
+        ax = config.shard_axis
+        if config.backend == "ivf":
+            self.ivf = _retrieval.shard_ivf_index(mesh, self.ivf, axis=ax)
+            self._ivf_scan = _retrieval.ShardedIVFScan(mesh, ax)
+        elif config.backend == "ivf_pq":
+            self.ivf_pq = _retrieval.shard_ivf_pq_index(mesh, self.ivf_pq,
+                                                        axis=ax)
+            self._pq_scan = _retrieval.ShardedPQScan(mesh, ax)
+        elif config.backend == "hnsw":
+            self.hnsw = _retrieval.shard_hnsw_index(mesh, self.hnsw,
+                                                    axis=ax)
+            self._hnsw_search = _retrieval.ShardedHNSWSearch(mesh, ax)
+
+
+class ConversationalSearchEngine(_EngineAccounting, _ShardedRetrievalMixin):
     def __init__(self, config: ServingConfig, *,
                  ivf_index: Optional[_ivf.IVFIndex] = None,
                  hnsw_index: Optional[_hnsw.HNSWIndex] = None,
@@ -129,6 +171,7 @@ class ConversationalSearchEngine(_EngineAccounting):
         self.doc_vecs = doc_vecs
         _check_indexes(config, ivf_index, hnsw_index, doc_vecs,
                        ivf_pq_index)
+        self._setup_sharding(config)
         self.sessions: Dict[str, Any] = {}
         self.turn_count: Dict[str, int] = {}
         self.records: List[TurnRecord] = []
@@ -178,7 +221,8 @@ class ConversationalSearchEngine(_EngineAccounting):
         cfg = self.cfg
         if cfg.strategy == "plain":
             v, i, st = _ivf.search(self.ivf, qvec[None],
-                                   nprobe=cfg.nprobe, k=cfg.k)
+                                   nprobe=cfg.nprobe, k=cfg.k,
+                                   scan=self._ivf_scan)
             stats = toploc.TurnStats(
                 jnp.asarray(self.ivf.p, jnp.int32), st.list_dists[0],
                 jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
@@ -186,13 +230,14 @@ class ConversationalSearchEngine(_EngineAccounting):
             return v[0], i[0], stats
         if turn == 0 or conv_id not in self.sessions:
             v, i, sess, stats = toploc.ivf_start(
-                self.ivf, qvec, h=cfg.h, nprobe=cfg.nprobe, k=cfg.k)
+                self.ivf, qvec, h=cfg.h, nprobe=cfg.nprobe, k=cfg.k,
+                scan=self._ivf_scan)
             self.sessions[conv_id] = sess
             return v, i, stats
         alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
         v, i, sess, stats = toploc.ivf_step(
             self.ivf, self.sessions[conv_id], qvec,
-            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha)
+            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha, scan=self._ivf_scan)
         self.sessions[conv_id] = sess
         return v, i, stats
 
@@ -203,26 +248,27 @@ class ConversationalSearchEngine(_EngineAccounting):
             # sequential and batched plain serving bit-identical
             v, i, st = toploc.ivf_pq_plain_batch(
                 self.ivf_pq, qvec[None], nprobe=cfg.nprobe, k=cfg.k,
-                rerank=cfg.rerank)
+                rerank=cfg.rerank, scan=self._pq_scan)
             return v[0], i[0], jax.tree.map(lambda a: a[0], st)
         if turn == 0 or conv_id not in self.sessions:
             v, i, sess, stats = toploc.ivf_pq_start(
                 self.ivf_pq, qvec, h=cfg.h, nprobe=cfg.nprobe, k=cfg.k,
-                rerank=cfg.rerank)
+                rerank=cfg.rerank, scan=self._pq_scan)
             self.sessions[conv_id] = sess
             return v, i, stats
         alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
         v, i, sess, stats = toploc.ivf_pq_step(
             self.ivf_pq, self.sessions[conv_id], qvec,
-            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha, rerank=cfg.rerank)
+            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha, rerank=cfg.rerank,
+            scan=self._pq_scan)
         self.sessions[conv_id] = sess
         return v, i, stats
 
     def _hnsw_turn(self, conv_id, qvec, turn):
         cfg = self.cfg
         if cfg.strategy == "plain":
-            v, i, nd = _hnsw.search(self.hnsw, qvec[None],
-                                    ef=cfg.ef_search, k=cfg.k)
+            v, i, nd = (self._hnsw_search or _hnsw.search)(
+                self.hnsw, qvec[None], ef=cfg.ef_search, k=cfg.k)
             stats = toploc.TurnStats(
                 jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
                 nd[0], jnp.asarray(0, jnp.int32),
@@ -230,16 +276,18 @@ class ConversationalSearchEngine(_EngineAccounting):
             return v[0], i[0], stats
         if turn == 0 or conv_id not in self.sessions:
             v, i, sess, stats = toploc.hnsw_start(
-                self.hnsw, qvec, ef=cfg.ef_search, k=cfg.k, up=cfg.up)
+                self.hnsw, qvec, ef=cfg.ef_search, k=cfg.k, up=cfg.up,
+                search=self._hnsw_search)
             self.sessions[conv_id] = sess
             return v, i, stats
         v, i, sess, stats = toploc.hnsw_step(
             self.hnsw, self.sessions[conv_id], qvec,
-            ef=cfg.ef_search, k=cfg.k)
+            ef=cfg.ef_search, k=cfg.k, search=self._hnsw_search)
         self.sessions[conv_id] = sess
         return v, i, stats
 
-class BatchedConversationalSearchEngine(_EngineAccounting):
+class BatchedConversationalSearchEngine(_EngineAccounting,
+                                        _ShardedRetrievalMixin):
     """Micro-batched multi-conversation serving front door.
 
     Requests flow ``submit() → MicroBatcher queue → flush → one padded
@@ -266,6 +314,7 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         self.doc_vecs = doc_vecs
         _check_indexes(config, ivf_index, hnsw_index, doc_vecs,
                        ivf_pq_index)
+        self._setup_sharding(config)
         # a wave holds up to max_batch distinct conversations, each
         # needing its own live slot — fewer slots would make acquire()
         # evict a conversation acquired earlier in the SAME wave and
@@ -276,16 +325,19 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         # ensure the bucket table covers max_batch so a full wave never
         # pads to a bucket smaller than itself
         buckets = tuple(sorted(set(buckets) | {max_batch}))
+        # session slabs replicate over the corpus mesh (sessions are the
+        # replicated TopLoc state; only the corpus shards)
         if config.backend == "ivf":
             self.store = _sessions.ivf_session_store(
-                ivf_index, h=config.h, nprobe=config.nprobe, n_slots=n_slots)
+                self.ivf, h=config.h, nprobe=config.nprobe,
+                n_slots=n_slots, mesh=self.mesh)
         elif config.backend == "ivf_pq":
             self.store = _sessions.ivf_pq_session_store(
-                ivf_pq_index, h=config.h, nprobe=config.nprobe,
-                n_slots=n_slots)
+                self.ivf_pq, h=config.h, nprobe=config.nprobe,
+                n_slots=n_slots, mesh=self.mesh)
         elif config.backend == "hnsw":
             self.store = _sessions.hnsw_session_store(
-                hnsw_index, n_slots=n_slots)
+                self.hnsw, n_slots=n_slots, mesh=self.mesh)
         else:
             self.store = None            # exact backend is stateless
         self.batcher = MicroBatcher(self._process_batch,
@@ -336,10 +388,14 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
 
         Splits the batch into waves holding at most one turn per
         conversation (turn t+1 must gather the session state turn t
-        scattered), each wave being one padded device dispatch.
+        scattered), each wave being one padded device dispatch.  The
+        batcher's trailing pad requests are dropped here — each wave
+        re-pads itself to its own bucket with trash-slot rows, so pad
+        rows never acquire a session slot or emit a ``TurnRecord``.
         """
         results: List[Any] = [None] * len(reqs)
-        remaining = list(enumerate(reqs))
+        remaining = [(j, r) for j, r in enumerate(reqs)
+                     if r.conv_id != MicroBatcher.PAD_ID]
         while remaining:
             seen, wave, deferred = set(), [], []
             for item in remaining:
@@ -407,12 +463,12 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         cfg = self.cfg
         if cfg.strategy == "plain":
             return toploc.ivf_plain_batch(self.ivf, q, nprobe=cfg.nprobe,
-                                          k=cfg.k)
+                                          k=cfg.k, scan=self._ivf_scan)
         alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
         sess = self.store.gather(slots)
         v, i, new_sess, stats = toploc.ivf_step_batch(
             self.ivf, sess, q, nprobe=cfg.nprobe, k=cfg.k, alpha=alpha,
-            is_first=jnp.asarray(is_first))
+            is_first=jnp.asarray(is_first), scan=self._ivf_scan)
         self.store.scatter(slots, new_sess)
         return v, i, stats
 
@@ -421,12 +477,14 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         if cfg.strategy == "plain":
             return toploc.ivf_pq_plain_batch(self.ivf_pq, q,
                                              nprobe=cfg.nprobe, k=cfg.k,
-                                             rerank=cfg.rerank)
+                                             rerank=cfg.rerank,
+                                             scan=self._pq_scan)
         alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
         sess = self.store.gather(slots)
         v, i, new_sess, stats = toploc.ivf_pq_step_batch(
             self.ivf_pq, sess, q, nprobe=cfg.nprobe, k=cfg.k, alpha=alpha,
-            rerank=cfg.rerank, is_first=jnp.asarray(is_first))
+            rerank=cfg.rerank, is_first=jnp.asarray(is_first),
+            scan=self._pq_scan)
         self.store.scatter(slots, new_sess)
         return v, i, stats
 
@@ -434,10 +492,11 @@ class BatchedConversationalSearchEngine(_EngineAccounting):
         cfg = self.cfg
         if cfg.strategy == "plain":
             return toploc.hnsw_plain_batch(self.hnsw, q, ef=cfg.ef_search,
-                                           k=cfg.k)
+                                           k=cfg.k,
+                                           search=self._hnsw_search)
         sess = self.store.gather(slots)
         v, i, new_sess, stats = toploc.hnsw_step_batch(
             self.hnsw, sess, q, ef=cfg.ef_search, k=cfg.k, up=cfg.up,
-            is_first=jnp.asarray(is_first))
+            is_first=jnp.asarray(is_first), search=self._hnsw_search)
         self.store.scatter(slots, new_sess)
         return v, i, stats

@@ -32,7 +32,20 @@ class Request:
 
 
 class MicroBatcher:
-    """Deadline-based micro-batching with shape bucketing."""
+    """Deadline-based micro-batching with shape bucketing.
+
+    Every flush is padded up to ``bucket(n)`` with trailing **pad
+    requests** (``conv_id == PAD_ID``, payload cloned from the first real
+    request) before reaching ``process_batch`` — so the callback only
+    ever sees batch sizes from the bucket table and the jitted device
+    program compiles once per bucket instead of once per distinct raw
+    size.  Pad results are discarded (no futures exist for them);
+    batch-aware callbacks such as the batched engine route pad rows to
+    the session store's trash slot.  ``batch_sizes`` records the raw
+    drained sizes, ``padded_sizes`` the dispatched (bucketed) sizes.
+    """
+
+    PAD_ID = "__pad__"   # reserved conv_id marking padding requests
 
     def __init__(self, process_batch: Callable[[List[Request]], List[Any]],
                  *, max_batch: int = 32, max_wait_s: float = 0.002,
@@ -40,11 +53,15 @@ class MicroBatcher:
         self._process = process_batch
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
-        self.buckets = sorted(buckets)
+        # the table must cover max_batch, else a drain larger than the
+        # top bucket would dispatch ragged (bucket() would return a
+        # bucket *smaller* than n and the pad range would be empty)
+        self.buckets = sorted(set(buckets) | {max_batch})
         self._queue: "collections.deque[Tuple[Request, Future]]" = \
             collections.deque()
         self._lock = threading.Lock()
         self.batch_sizes: List[int] = []
+        self.padded_sizes: List[int] = []
 
     def submit(self, req: Request) -> Future:
         fut: Future = Future()
@@ -73,8 +90,17 @@ class MicroBatcher:
             return 0
         reqs = [r for r, _ in items]
         self.batch_sizes.append(len(reqs))
+        # pad to the bucket so the process callback always dispatches a
+        # bucketed (jit-cache-stable) batch; pad payloads clone a real
+        # request so any payload-shape assumptions hold
+        bb = self.bucket(len(reqs))
+        reqs = reqs + [Request(self.PAD_ID, reqs[0].payload)
+                       for _ in range(bb - len(reqs))]
+        self.padded_sizes.append(len(reqs))
         try:
             results = self._process(reqs)
+            # pads are trailing: zip over items covers exactly the real
+            # requests and drops pad results
             for (_, fut), res in zip(items, results):
                 fut.set_result(res)
         except BaseException as e:
@@ -84,21 +110,43 @@ class MicroBatcher:
 
 
 class HedgedExecutor:
-    """First-result-wins duplicate dispatch across replicas."""
+    """First-*successful*-result-wins duplicate dispatch across replicas.
+
+    Winner selection is deterministic: among completed futures the
+    primary is considered before the hedge (``wait`` returns an
+    unordered set, so ``next(iter(done))`` would make ``hedges_won`` —
+    and, worse, *which exception propagates* — depend on set iteration
+    order).  A failed completion never wins while another replica is
+    still running or succeeded: a primary that fails *before* the hedge
+    deadline triggers an immediate failover dispatch to the backup
+    (counted in ``failovers``, not ``hedges_issued``), and the call
+    raises only when every issued replica failed (then the primary's
+    exception propagates).  ``hedges_won`` counts only hedges that
+    strictly beat a still-pending primary — a hedge or failover that
+    merely rescued a failed primary is not a latency win.
+
+    The latency history backing the adaptive p95 deadline is a bounded
+    deque (``lat_window``), so ``_deadline()`` stays O(window) instead
+    of percentile-over-all-time-calls, and the deadline tracks the
+    *recent* latency distribution at sustained traffic.
+    """
 
     def __init__(self, replicas: Sequence[Callable[[Any], Any]], *,
                  hedge_quantile: float = 0.95, min_history: int = 8,
-                 hedge_floor_s: float = 0.005):
+                 hedge_floor_s: float = 0.005, lat_window: int = 1024):
         assert len(replicas) >= 1
         self.replicas = list(replicas)
         self.hedge_quantile = hedge_quantile
         self.hedge_floor_s = hedge_floor_s
         self.min_history = min_history
-        self._lat: List[float] = []
+        self._lat: "collections.deque[float]" = collections.deque(
+            maxlen=lat_window)
         self._pool = ThreadPoolExecutor(max_workers=2 * len(replicas))
         self._rr = 0
+        self.calls = 0
         self.hedges_issued = 0
         self.hedges_won = 0
+        self.failovers = 0
 
     def _deadline(self) -> float:
         if len(self._lat) < self.min_history:
@@ -108,29 +156,48 @@ class HedgedExecutor:
 
     def call(self, payload: Any) -> Any:
         t0 = time.perf_counter()
+        self.calls += 1
         primary_idx = self._rr % len(self.replicas)
         self._rr += 1
         primary = self._pool.submit(self.replicas[primary_idx], payload)
         done, _ = wait([primary], timeout=self._deadline())
         futures = [primary]
+        backup_idx = (primary_idx + 1) % len(self.replicas)
         hedged: Optional[Future] = None
         if not done and len(self.replicas) > 1:
-            backup_idx = (primary_idx + 1) % len(self.replicas)
             hedged = self._pool.submit(self.replicas[backup_idx], payload)
             futures.append(hedged)
             self.hedges_issued += 1
-        done, _ = wait(futures, return_when=FIRST_COMPLETED)
-        winner = next(iter(done))
-        if hedged is not None and winner is hedged:
-            self.hedges_won += 1
+        elif (done and len(self.replicas) > 1
+              and primary.exception() is not None):
+            # primary failed before the hedge deadline: fail over to the
+            # backup immediately rather than raising with a healthy
+            # replica untried
+            hedged = self._pool.submit(self.replicas[backup_idx], payload)
+            futures.append(hedged)
+            self.failovers += 1
+        winner: Optional[Future] = None
+        pending = set(futures)
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            # deterministic preference: primary before hedge
+            ok = [f for f in futures if f in done and f.exception() is None]
+            if ok:
+                winner = ok[0]
+                if winner is hedged and primary in pending:
+                    self.hedges_won += 1
+                break
+        if winner is None:       # every issued replica failed
+            winner = primary
         result = winner.result()
         self._lat.append(time.perf_counter() - t0)
         return result
 
     def stats(self) -> Dict[str, float]:
         lat = np.asarray(self._lat) if self._lat else np.zeros(1)
-        return {"calls": len(self._lat),
+        return {"calls": self.calls,
                 "hedges_issued": self.hedges_issued,
                 "hedges_won": self.hedges_won,
+                "failovers": self.failovers,
                 "mean_ms": float(lat.mean() * 1e3),
                 "p99_ms": float(np.percentile(lat, 99) * 1e3)}

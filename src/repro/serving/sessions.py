@@ -31,8 +31,11 @@ Slot model
     effectiveness degrades gracefully rather than failing.
 
 At multi-host scale one ``SessionStore`` lives per data-parallel group
-and the router pins conversations to groups (DESIGN.md §2); sharding the
-slab itself over hosts is the follow-up PR this layout enables.
+and the router pins conversations to groups (DESIGN.md §2).  When the
+*corpus* is sharded over a device mesh (``distributed.retrieval``) the
+slab replicates over that mesh — sessions are the replicated TopLoc
+state; only posting lists / vector rows shard.  Sharding the slab itself
+over data-parallel hosts is the next step this layout enables.
 """
 from __future__ import annotations
 
@@ -44,6 +47,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as _P
 
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
@@ -65,15 +69,28 @@ def _scatter_slab(slab: Any, idx: jax.Array, updates: Any) -> Any:
 class SessionStore:
     """Fixed-capacity struct-of-arrays slab of per-conversation state."""
 
-    def __init__(self, template: Any, n_slots: int):
+    def __init__(self, template: Any, n_slots: int, *, mesh: Any = None):
         """``template``: a single-session pytree (no leading batch dim)
-        whose leaf shapes/dtypes define the slab layout."""
+        whose leaf shapes/dtypes define the slab layout.
+
+        ``mesh``: optional corpus mesh (distributed.retrieval) — the slab
+        is *replicated* over it, matching the replicated TopLoc session
+        state of the sharded scan paths (only the corpus shards).
+        """
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         self.n_slots = n_slots
         self._slab = jax.tree.map(
             lambda a: jnp.zeros((n_slots + 1,) + jnp.shape(a),
                                 jnp.asarray(a).dtype), template)
+        # the all-zero row scattered over released slots (one row batch)
+        self._zero_row = jax.tree.map(
+            lambda a: jnp.zeros((1,) + jnp.shape(a), jnp.asarray(a).dtype),
+            template)
+        if mesh is not None:
+            rep = lambda a: jax.device_put(a, NamedSharding(mesh, _P()))
+            self._slab = jax.tree.map(rep, self._slab)
+            self._zero_row = jax.tree.map(rep, self._zero_row)
         self._free = list(range(n_slots - 1, -1, -1))   # pop() → slot 0 first
         self._slot_of: "OrderedDict[str, int]" = OrderedDict()  # LRU order
         self.allocs = 0
@@ -111,16 +128,31 @@ class SessionStore:
             del self._slot_of[lru_id]
             self._free.append(lru_slot)
             self.evictions += 1
+            # same leak protection as release(): the evicted row is
+            # wiped before the slot changes hands, so the new occupant
+            # can never read the evicted conversation's cache
+            self.scatter([lru_slot], self._zero_row)
         slot = self._free.pop()
         self._slot_of[conv_id] = slot
         self.allocs += 1
         return slot, True
 
     def release(self, conv_id: str) -> Optional[int]:
-        """End a conversation; its slot returns to the free list."""
+        """End a conversation; its slot returns to the free list.
+
+        The released slab row is zeroed (the template row is scattered
+        over it) so a freed slot can never leak the prior conversation's
+        centroid cache / entry point to a later occupant — a misbehaving
+        caller that skips the ``is_first`` rebuild reads zeros, not
+        another user's state.  Idempotent: releasing an unknown or
+        already-released ``conv_id`` is a no-op returning ``None`` (in
+        particular the slot is never double-appended to the free list,
+        which would hand one slot to two conversations).
+        """
         slot = self._slot_of.pop(conv_id, None)
         if slot is not None:
             self._free.append(slot)
+            self.scatter([slot], self._zero_row)
         return slot
 
     def stats(self) -> Dict[str, int]:
@@ -150,7 +182,8 @@ class SessionStore:
 
 
 def ivf_session_store(index: "_ivf.IVFIndex | _pq.IVFPQIndex", *, h: int,
-                      nprobe: int, n_slots: int) -> SessionStore:
+                      nprobe: int, n_slots: int,
+                      mesh: Any = None) -> SessionStore:
     """Slab of ``toploc.IVFSession`` rows sized for ``index`` (reads
     only the ``.d``/``.centroids`` fields both index types share)."""
     template = toploc.IVFSession(
@@ -159,11 +192,11 @@ def ivf_session_store(index: "_ivf.IVFIndex | _pq.IVFPQIndex", *, h: int,
         anchor_sel=jnp.zeros((nprobe,), jnp.int32),
         refreshes=jnp.zeros((), jnp.int32),
         turn=jnp.zeros((), jnp.int32))
-    return SessionStore(template, n_slots)
+    return SessionStore(template, n_slots, mesh=mesh)
 
 
 def ivf_pq_session_store(index: _pq.IVFPQIndex, *, h: int, nprobe: int,
-                         n_slots: int) -> SessionStore:
+                         n_slots: int, mesh: Any = None) -> SessionStore:
     """Slab for the IVF-PQ backend.
 
     TopLoc_IVFPQ reuses the ``IVFSession`` layout unchanged (the
@@ -171,14 +204,15 @@ def ivf_pq_session_store(index: _pq.IVFPQIndex, *, h: int, nprobe: int,
     delegates to the float-IVF store builder, which only reads the
     ``.d``/``.centroids`` fields both index types share.
     """
-    return ivf_session_store(index, h=h, nprobe=nprobe, n_slots=n_slots)
+    return ivf_session_store(index, h=h, nprobe=nprobe, n_slots=n_slots,
+                             mesh=mesh)
 
 
-def hnsw_session_store(index: _hnsw.HNSWIndex, *, n_slots: int
-                       ) -> SessionStore:
+def hnsw_session_store(index: _hnsw.HNSWIndex, *, n_slots: int,
+                       mesh: Any = None) -> SessionStore:
     """Slab of ``toploc.HNSWSession`` rows."""
     del index  # layout is index-independent; kept for API symmetry
     template = toploc.HNSWSession(
         entry_point=jnp.zeros((), jnp.int32),
         turn=jnp.zeros((), jnp.int32))
-    return SessionStore(template, n_slots)
+    return SessionStore(template, n_slots, mesh=mesh)

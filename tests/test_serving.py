@@ -96,6 +96,45 @@ def test_micro_batcher_propagates_errors():
         fut.result(timeout=1)
 
 
+def test_micro_batcher_pads_flushes_to_bucket():
+    """Every flush reaching the process callback is padded to the next
+    bucket with trailing PAD_ID requests — ragged sizes never hit the
+    jitted device program."""
+    seen = []
+
+    def process(reqs):
+        seen.append([r.conv_id for r in reqs])
+        return [r.payload * 2 for r in reqs]
+
+    mb = MicroBatcher(process, max_batch=8, max_wait_s=0.001,
+                      buckets=(1, 2, 4, 8))
+    futs = [mb.submit(Request(f"c{i}", i)) for i in range(3)]
+    mb.flush_loop_once()
+    assert [f.result(timeout=1) for f in futs] == [0, 2, 4]
+    # raw 3 → dispatched 4: one trailing pad row
+    assert mb.batch_sizes == [3] and mb.padded_sizes == [4]
+    assert len(seen[0]) == 4
+    assert seen[0][3] == MicroBatcher.PAD_ID
+    assert seen[0][:3] == ["c0", "c1", "c2"]
+
+
+def test_micro_batcher_jit_cache_stability():
+    """Dispatched batch sizes stay inside the bucket table across ragged
+    arrival patterns (the jit-recompile-per-size regression)."""
+    lens = []
+    mb = MicroBatcher(lambda reqs: [r.payload for r in reqs],
+                      max_batch=8, max_wait_s=0.0, buckets=(1, 2, 4, 8))
+    for n in (1, 3, 5, 2, 7, 6):
+        futs = [mb.submit(Request("c", j)) for j in range(n)]
+        mb.flush_loop_once()
+        lens.append(n)
+        for f in futs:
+            f.result(timeout=1)
+    assert mb.batch_sizes == lens
+    assert set(mb.padded_sizes) <= {1, 2, 4, 8}
+    assert mb.padded_sizes == [mb.bucket(n) for n in lens]
+
+
 def test_hedged_executor_mitigates_straggler():
     def fast(x):
         return ("fast", x)
@@ -115,3 +154,105 @@ def test_hedged_executor_mitigates_straggler():
     assert all(r[1] == i for i, r in enumerate(results))
     # p99 stays well under the slow replica's latency x2
     assert st["p99_ms"] < 600
+
+
+def test_hedged_executor_survives_failing_fast_replica():
+    """A replica that fails *after* the hedge fired must not poison the
+    call: the surviving replica's result is returned, and the rescue is
+    not miscounted as a latency win (the hedge did not beat a pending
+    primary — the primary completed, with an exception)."""
+    def failing(x):
+        time.sleep(0.05)
+        raise RuntimeError("replica down")
+
+    def slow_ok(x):
+        time.sleep(0.12)
+        return ("ok", x)
+
+    ex = HedgedExecutor([failing, slow_ok], hedge_floor_s=0.01,
+                        min_history=99)
+    assert ex.call(7) == ("ok", 7)
+    st = ex.stats()
+    assert st["hedges_issued"] == 1
+    assert st["hedges_won"] == 0
+
+
+def test_hedged_executor_hedge_win_is_deterministic():
+    """hedges_won counts exactly the hedges that strictly beat a
+    still-pending primary; a successful primary always wins over a
+    hedge that completed in the same wait wake-up."""
+    def very_slow(x):
+        time.sleep(0.3)
+        return ("slow", x)
+
+    def instant(x):
+        return ("fast", x)
+
+    ex = HedgedExecutor([very_slow, instant], hedge_floor_s=0.01,
+                        min_history=99)
+    assert ex.call(1) == ("fast", 1)       # hedge rescued the straggler
+    assert ex.stats()["hedges_won"] == 1
+
+
+def test_hedged_executor_raises_only_when_all_replicas_fail():
+    def bad_a(x):
+        time.sleep(0.03)
+        raise ValueError("a")
+
+    def bad_b(x):
+        time.sleep(0.03)
+        raise ValueError("b")
+
+    ex = HedgedExecutor([bad_a, bad_b], hedge_floor_s=0.005,
+                        min_history=99)
+    with pytest.raises(ValueError, match="a"):   # primary's exception
+        ex.call(0)
+    assert ex.stats()["calls"] == 1
+
+
+def test_hedged_executor_fails_over_on_fast_primary_failure():
+    """A primary that fails *before* the hedge deadline triggers an
+    immediate failover to the backup instead of raising with a healthy
+    replica untried."""
+    def instant_crash(x):
+        raise ConnectionError("refused")
+
+    def healthy(x):
+        return ("ok", x)
+
+    ex = HedgedExecutor([instant_crash, healthy], hedge_floor_s=0.05,
+                        min_history=99)
+    assert ex.call(3) == ("ok", 3)
+    st = ex.stats()
+    assert st["failovers"] == 1
+    assert st["hedges_issued"] == 0 and st["hedges_won"] == 0
+
+
+def test_micro_batcher_pads_drains_beyond_largest_bucket():
+    """max_batch above the bucket table gets its own bucket inside the
+    batcher itself, so an oversized drain still dispatches bucketed."""
+    seen = []
+    mb = MicroBatcher(lambda reqs: (seen.append(len(reqs)),
+                                    [r.payload for r in reqs])[1],
+                      max_batch=64, max_wait_s=0.0, buckets=(1, 2, 4, 8,
+                                                            16, 32))
+    assert mb.bucket(50) == 64
+    futs = [mb.submit(Request("c", j)) for j in range(50)]
+    mb.flush_loop_once()
+    for f in futs:
+        f.result(timeout=1)
+    assert seen == [64]
+    assert mb.batch_sizes == [50] and mb.padded_sizes == [64]
+
+
+def test_hedged_executor_latency_history_is_bounded():
+    """The adaptive-deadline history is a maxlen deque: _deadline() cost
+    stays O(window) and reflects recent traffic, while the calls counter
+    keeps the all-time total."""
+    ex = HedgedExecutor([lambda x: x], lat_window=4, min_history=2,
+                        hedge_floor_s=0.001)
+    for i in range(10):
+        assert ex.call(i) == i
+    assert len(ex._lat) == 4
+    assert ex.stats()["calls"] == 10
+    assert ex._deadline() >= 0.001

@@ -270,6 +270,73 @@ def test_hnsw_session_store_layout(hnsw_index):
     assert store.trash_slot == 3
 
 
+def test_release_zeroes_slab_row_and_is_idempotent(ivf_index):
+    """A released slot's slab row is wiped (no prior-conversation cache
+    can leak to the next occupant) and double-release is a no-op — in
+    particular the slot is never double-appended to the free list."""
+    store = ivf_session_store(ivf_index, h=H, nprobe=NPROBE, n_slots=2)
+    slot, _ = store.acquire("a")
+    dirty = jax.tree.map(lambda a: a + 1 if a.dtype == jnp.int32 else a + 1.0,
+                         store.gather([slot]))
+    store.scatter([slot], dirty)
+    assert int(store.gather([slot]).turn[0]) == 1
+    freed = store.release("a")
+    assert freed == slot
+    row = store.gather([slot])
+    for f in toploc.IVFSession._fields:
+        assert bool((getattr(row, f) == 0).all()), f
+    # idempotent: second release returns None and does not corrupt the
+    # free list (a duplicate entry would hand one slot to two convs)
+    n_free = len(store._free)
+    assert store.release("a") is None
+    assert len(store._free) == n_free
+    s1, _ = store.acquire("x")
+    s2, _ = store.acquire("y")
+    assert s1 != s2
+
+
+def test_eviction_zeroes_slab_row_before_slot_reuse(ivf_index):
+    """LRU eviction is the other way a slot changes hands: the evicted
+    conversation's row must be wiped before the new occupant sees it."""
+    store = ivf_session_store(ivf_index, h=H, nprobe=NPROBE, n_slots=1)
+    slot, _ = store.acquire("old")
+    dirty = jax.tree.map(lambda a: a + 1 if a.dtype == jnp.int32 else a + 1.0,
+                         store.gather([slot]))
+    store.scatter([slot], dirty)
+    new_slot, is_new = store.acquire("new")      # evicts "old"
+    assert new_slot == slot and is_new and store.evictions == 1
+    row = store.gather([new_slot])
+    for f in toploc.IVFSession._fields:
+        assert bool((getattr(row, f) == 0).all()), f
+
+
+def test_release_then_reacquire_never_leaks_prior_cache(small_corpus,
+                                                        ivf_index):
+    """Engine-level: end_conversation() wipes the slot, so the next
+    conversation landing on it starts from zeros even if a buggy caller
+    were to skip the is_first rebuild."""
+    wl = small_corpus
+    cfg = ServingConfig(backend="ivf", strategy="toploc+", nprobe=NPROBE,
+                        h=H, alpha=0.3, k=K)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, max_batch=2, max_wait_s=1e-4)
+    bat.query("a", jnp.asarray(wl.conversations[0, 0]))
+    bat.query("a", jnp.asarray(wl.conversations[0, 1]))
+    slot = bat.store.lookup("a")
+    bat.end_conversation("a")
+    row = bat.store.gather([slot])
+    for f in toploc.IVFSession._fields:
+        assert bool((getattr(row, f) == 0).all()), f
+    # the freed slot's next occupant is served as a clean first turn
+    v, i = bat.query("b", jnp.asarray(wl.conversations[1, 0]))
+    assert bat.store.lookup("b") == slot
+    rv, ri, _, _ = toploc.ivf_start(ivf_index,
+                                    jnp.asarray(wl.conversations[1, 0]),
+                                    h=H, nprobe=NPROBE, k=K)
+    np.testing.assert_array_equal(v, np.asarray(rv))
+    np.testing.assert_array_equal(i, np.asarray(ri))
+
+
 # ------------------------------------------------------ batched engine
 
 @pytest.mark.parametrize("backend,strategy", [
