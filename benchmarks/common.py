@@ -7,7 +7,11 @@ Two synthetic conversation sets mirror the paper's datasets:
     hard set where the refresh mechanism of TopLoc_IVF+ matters).
 
 Index builds are cached on disk (artifacts/bench_cache) — HNSW
-construction is the slow part.
+construction is the slow part.  The cache directory is gitignored:
+every fixture regenerates *deterministically* on first use (fixed-seed
+workloads, k-means keys, PQ codebooks, HNSW insertion order), so a
+fresh checkout rebuilds byte-equivalent fixtures instead of shipping
+binary blobs in the repo.
 """
 from __future__ import annotations
 
@@ -100,7 +104,7 @@ def hnsw_index(kind: str) -> HN.HNSWIndex:
     wl = workload(kind)
     raw = _cached(f"hnsw_{kind}_{N_DOCS}_{HNSW_M}_{HNSW_EFC}",
                   lambda: HN.build(wl.doc_vecs, m=HNSW_M,
-                                   ef_construction=HNSW_EFC))
+                                   ef_construction=HNSW_EFC, seed=0))
     return HN.HNSWIndex(*[jnp.asarray(x) for x in raw])
 
 

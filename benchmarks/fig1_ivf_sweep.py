@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import toploc as TL
+from repro.core.backend import IVFBackend, IVFPQBackend
 from benchmarks import common as C
 
 NPROBES = (4, 8, 16, 32, 64)
@@ -37,15 +38,17 @@ def sweep(kind: str, csv: bool = True) -> List[Dict]:
                 ("TopLoc_IVF", "toploc", -1.0),
                 ("TopLoc_IVF+", "toploc", ALPHA),
                 ("TopLoc_IVFPQ", "toploc", -1.0)):
-            def all_convs(cs, method=method, mode=mode, alpha=alpha,
-                          npb=npb, h=h):
-                if method == "TopLoc_IVFPQ":
-                    return jax.vmap(lambda conv: TL.ivf_pq_conversation(
-                        pq_index, conv, h=h, nprobe=npb, k=K, alpha=alpha,
-                        rerank=RERANK, mode=mode))(cs)
-                return jax.vmap(lambda conv: TL.ivf_conversation(
-                    index, conv, h=h, nprobe=npb, k=K, alpha=alpha,
-                    mode=mode))(cs)
+            if method == "TopLoc_IVFPQ":
+                bk = IVFPQBackend(h=h, nprobe=npb, alpha=alpha,
+                                  rerank=RERANK)
+                bidx = pq_index
+            else:
+                bk = IVFBackend(h=h, nprobe=npb, alpha=alpha)
+                bidx = index
+
+            def all_convs(cs, bk=bk, bidx=bidx, mode=mode):
+                return jax.vmap(lambda conv: TL.conversation(
+                    bk, bidx, conv, k=K, mode=mode))(cs)
 
             fn = jax.jit(all_convs)
             _, ids, stats = fn(convs)

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import toploc as TL
+from repro.core.backend import HNSWBackend
 from benchmarks import common as C
 
 EFS = (4, 8, 16, 32, 64)
@@ -26,9 +27,12 @@ def sweep(kind: str, csv: bool = True) -> List[Dict]:
         k = min(K, ef)
         for method, mode in (("HNSW", "plain"), ("TopLoc_HNSW", "toploc"),
                              ("TopLoc_HNSW_adaptive", "adaptive")):
-            def all_convs(cs, mode=mode, ef=ef, k=k):
-                return jax.vmap(lambda conv: TL.hnsw_conversation(
-                    index, conv, ef=ef, k=k, up=UP, mode=mode))(cs)
+            bk = HNSWBackend(ef=ef, up=UP, adaptive=mode == "adaptive")
+            cmode = "plain" if mode == "plain" else "toploc"
+
+            def all_convs(cs, bk=bk, cmode=cmode, k=k):
+                return jax.vmap(lambda conv: TL.conversation(
+                    bk, index, conv, k=k, mode=cmode))(cs)
 
             fn = jax.jit(all_convs)
             _, ids, stats = fn(convs)

@@ -17,7 +17,7 @@ memory-capacity / sparse-execution scaling evidence, not a dense
 per-device FLOP measurement.
 
 Protocol: CONVS conversations × TURNS turns replay through the real
-``toploc.ivf_start/ivf_step`` entry points with the sharded scan plugged
+``toploc.start/step`` registry drivers with the sharded scan plugged
 in, for shards ∈ {1, 2, 4, 8} (host-platform devices — the script forces
 ``--xla_force_host_platform_device_count=8`` when unset, so it runs on
 any machine).  Per-turn probe selections are recovered with the same
@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import toploc
+from repro.core.backend import IVFBackend
 from repro.distributed import retrieval as R
 from benchmarks import common as C
 
@@ -68,14 +69,14 @@ H = 128
 K = 10
 
 
-def replay(index, scan, wl):
-    """All conversations through ivf_start/ivf_step (TopLoc, static
-    cache).  Returns (ids (C,T,K), sels (C,T,NPROBE)) as numpy."""
+def replay(index, bk, wl):
+    """All conversations through the registry start/step drivers
+    (TopLoc, static cache).  Returns (ids (C,T,K), sels (C,T,NPROBE))
+    as numpy."""
     ids, sels = [], []
     for c in range(wl.conversations.shape[0]):
         conv = jnp.asarray(wl.conversations[c])
-        _, i, sess, _ = toploc.ivf_start(index, conv[0], h=H,
-                                         nprobe=NPROBE, k=K, scan=scan)
+        _, i, sess, _ = toploc.start(bk, index, conv[0], k=K)
         c_ids, c_sels = [np.asarray(i)], [np.asarray(sess.anchor_sel)]
         for t in range(1, conv.shape[0]):
             # static cache → the step's probe selection is exactly
@@ -83,24 +84,21 @@ def replay(index, scan, wl):
             csims = sess.cache_vecs @ conv[t]
             _, loc = jax.lax.top_k(csims, NPROBE)
             c_sels.append(np.asarray(sess.cache_ids[loc]))
-            _, i, sess, _ = toploc.ivf_step(index, sess, conv[t],
-                                            nprobe=NPROBE, k=K, scan=scan)
+            _, i, sess, _ = toploc.step(bk, index, sess, conv[t], k=K)
             c_ids.append(np.asarray(i))
         ids.append(np.stack(c_ids))
         sels.append(np.stack(c_sels))
     return np.stack(ids), np.stack(sels)
 
 
-def timed_replay(index, scan, wl) -> float:
+def timed_replay(index, bk, wl) -> float:
     """Wall seconds for the pure step loop (no diagnostics)."""
     t0 = time.perf_counter()
     for c in range(wl.conversations.shape[0]):
         conv = jnp.asarray(wl.conversations[c])
-        _, i, sess, _ = toploc.ivf_start(index, conv[0], h=H,
-                                         nprobe=NPROBE, k=K, scan=scan)
+        _, i, sess, _ = toploc.start(bk, index, conv[0], k=K)
         for t in range(1, conv.shape[0]):
-            _, i, sess, _ = toploc.ivf_step(index, sess, conv[t],
-                                            nprobe=NPROBE, k=K, scan=scan)
+            _, i, sess, _ = toploc.step(bk, index, sess, conv[t], k=K)
     jax.block_until_ready(i)
     return time.perf_counter() - t0
 
@@ -122,11 +120,11 @@ def main():
     max_dev_by_s = {}
     for s in shard_counts:
         mesh = R.retrieval_mesh(s)
-        sidx = R.shard_ivf_index(mesh, idx)
-        scan = R.ShardedIVFScan(mesh)
-        ids, sels = replay(sidx, scan, wl)
-        timed_replay(sidx, scan, wl)                  # warmup (compile)
-        wall = timed_replay(sidx, scan, wl)
+        sbk, sidx = R.shard_backend(mesh, IVFBackend(h=H, nprobe=NPROBE),
+                                    idx)
+        ids, sels = replay(sidx, sbk, wl)
+        timed_replay(sidx, sbk, wl)                   # warmup (compile)
+        wall = timed_replay(sidx, sbk, wl)
         if ref_ids is None:
             ref_ids = ids
         elif not np.array_equal(ids, ref_ids):

@@ -1,0 +1,147 @@
+"""Fig 5 (ours): the session-level historical-embedding result cache.
+
+Frieder et al., *Caching Historical Embeddings in Conversational
+Search*, show that the topical locality TopLoc exploits for index
+pruning also makes per-conversation result caches effective.  This
+figure sweeps the cache's cosine threshold on both synthetic CAsT sets
+and reports the operating curve:
+
+  * **hit rate** — fraction of turns answered straight from the cached
+    document embeddings (zero backend work: no centroid scoring, no
+    list scan);
+  * **recall@10 vs the uncached run** — how much of the exact TopLoc
+    answer the cached answer retains;
+  * **recall@10 vs exact search** and ndcg@10 — absolute effectiveness;
+  * **mean backend work per turn** — the paper-style distance counters,
+    shrinking with the hit rate.
+
+``threshold = 0`` disables the cache (the uncached baseline — bit-
+identical to a cache-absent engine, pinned by tests/test_result_cache).
+Higher thresholds admit only nearer-duplicate queries: fewer hits, less
+work saved, but near-perfect agreement with the uncached ranking.  The
+cache stores ``DEPTH`` candidates per session (the engine over-fetches
+the backend once per miss) so hits re-score a deeper pool than the k
+returned — the knob Frieder et al. use to trade one miss's extra work
+for many cheap hits.
+
+``--smoke`` runs a tiny corpus and asserts the CI floors: at the
+operating threshold the cache must actually hit (hit-rate > 0) while
+keeping recall@10 ≥ 0.95x the uncached run's.
+
+  PYTHONPATH=src:. python benchmarks/fig5_cache.py
+  PYTHONPATH=src:. python benchmarks/fig5_cache.py --smoke
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ivf as IV
+from repro.serving import ConversationalSearchEngine, ServingConfig
+from benchmarks import common as C
+
+NPROBE = 16
+H = 256
+ALPHA = 0.25
+K = 10
+DEPTH = 64                    # cached candidates per session (>= K)
+THRESHOLDS = (0.0, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+SMOKE_THRESHOLD = 0.7         # CI floor operating point
+
+
+def _recall_vs(ids: np.ndarray, ref_ids: np.ndarray) -> float:
+    a = ids.reshape(-1, K)
+    b = ref_ids.reshape(-1, K)
+    return float(np.mean([len(set(a[j]) & set(b[j])) / K
+                          for j in range(b.shape[0])]))
+
+
+def _serve(kind: str, threshold: float):
+    wl = C.workload(kind)
+    index = C.ivf_index(kind)
+    eng = ConversationalSearchEngine(
+        ServingConfig(backend="ivf", strategy="toploc+", nprobe=NPROBE,
+                      h=min(H, index.p), alpha=ALPHA, k=K,
+                      cache_threshold=threshold, cache_depth=DEPTH),
+        ivf_index=index, doc_vecs=jnp.asarray(wl.doc_vecs))
+    n_conv, turns, _ = wl.conversations.shape
+    ids = np.empty((n_conv, turns, K), np.int64)
+    for c in range(n_conv):
+        for t in range(turns):
+            _, i = eng.query(f"c{c}", jnp.asarray(wl.conversations[c, t]))
+            ids[c, t] = i
+        eng.end_conversation(f"c{c}")
+    return eng, ids, wl
+
+
+def sweep(kind: str, csv: bool = True) -> List[Dict]:
+    wl = C.workload(kind)
+    docs = jnp.asarray(wl.doc_vecs)
+    flat_q = jnp.asarray(wl.conversations.reshape(-1,
+                                                  wl.doc_vecs.shape[1]))
+    _, exact_ids = IV.exact_search(docs, flat_q, K)
+    exact_ids = np.asarray(exact_ids)
+    rows, ref_ids = [], None
+    for th in THRESHOLDS:
+        eng, ids, _ = _serve(kind, th)
+        if ref_ids is None:
+            ref_ids = ids                     # th=0: the uncached run
+        stats = eng.cache_stats() or {"hit_rate": 0.0}
+        metrics = C.eval_conversations(ids, wl)
+        work = (eng.summary()["mean_centroid_dists"]
+                + eng.summary()["mean_list_dists"])
+        row = dict(dataset=kind, threshold=th,
+                   hit_rate=stats["hit_rate"],
+                   recall_vs_uncached=_recall_vs(ids, ref_ids),
+                   recall_vs_exact=_recall_vs(ids, exact_ids),
+                   ndcg10=metrics["ndcg@10"], work=work)
+        rows.append(row)
+        if csv:
+            print(f"fig5,{kind},{th:.2f},{row['hit_rate']:.3f},"
+                  f"{row['recall_vs_uncached']:.3f},"
+                  f"{row['recall_vs_exact']:.3f},{row['ndcg10']:.3f},"
+                  f"{work:.0f}")
+    return rows
+
+
+def _assert_smoke_floors(rows: List[Dict]) -> None:
+    by = {(r["dataset"], r["threshold"]): r for r in rows}
+    for kind in ("cast19",):
+        base = by[(kind, 0.0)]
+        op = by[(kind, SMOKE_THRESHOLD)]
+        assert op["hit_rate"] > 0.0, (
+            f"{kind}: cache never hit at threshold {SMOKE_THRESHOLD}")
+        assert op["recall_vs_exact"] >= 0.95 * base["recall_vs_exact"], (
+            f"{kind}: cached recall@10 {op['recall_vs_exact']:.3f} < "
+            f"0.95 x uncached {base['recall_vs_exact']:.3f}")
+        assert op["work"] < base["work"], (
+            f"{kind}: cache hits saved no backend work")
+    print(f"SMOKE OK: threshold {SMOKE_THRESHOLD} hit-rate "
+          f"{by[('cast19', SMOKE_THRESHOLD)]['hit_rate']:.2f} > 0 and "
+          "recall@10 >= 0.95x uncached")
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    if smoke:
+        global H
+        C.N_DOCS, C.PARTITIONS = 4000, 128
+        C.CONVS, C.TURNS = 6, 6
+        H = 64                        # keep np << h < p at p=128
+    print("fig,dataset,threshold,hit_rate,recall@10_vs_uncached,"
+          "recall@10_vs_exact,ndcg@10,mean_work_per_turn")
+    rows = []
+    for kind in ("cast19", "cast20"):
+        rows += sweep(kind)
+    if smoke:
+        _assert_smoke_floors(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

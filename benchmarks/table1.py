@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import hnsw as HN
 from repro.core import ivf as IV
 from repro.core import toploc as TL
+from repro.core.backend import HNSWBackend, IVFBackend, IVFPQBackend
 from benchmarks import common as C
 
 NPROBE = 16
@@ -51,13 +52,11 @@ def _run_ivf(index, wl, mode: str, alpha: float, *,
     convs = jnp.asarray(wl.conversations)           # (C, T, d)
     n_conv, turns, d = convs.shape
 
+    bk = (IVFPQBackend(h=H, nprobe=NPROBE, alpha=alpha, rerank=RERANK)
+          if pq else IVFBackend(h=H, nprobe=NPROBE, alpha=alpha))
+
     def one_conv(conv):
-        if pq:
-            return TL.ivf_pq_conversation(index, conv, h=H, nprobe=NPROBE,
-                                          k=K, alpha=alpha, rerank=RERANK,
-                                          mode=mode)
-        return TL.ivf_conversation(index, conv, h=H, nprobe=NPROBE, k=K,
-                                   alpha=alpha, mode=mode)
+        return TL.conversation(bk, index, conv, k=K, mode=mode)
 
     fn = jax.jit(lambda cs: jax.vmap(one_conv)(cs))
     v, ids, stats = fn(convs)
@@ -80,10 +79,12 @@ def _run_hnsw(index, wl, mode: str) -> Dict:
     convs = jnp.asarray(wl.conversations)
     n_conv, turns, d = convs.shape
 
+    bk = HNSWBackend(ef=EF, up=UP)
+
     def all_convs(cs):
         return jax.vmap(
-            lambda conv: TL.hnsw_conversation(index, conv, ef=EF, k=K,
-                                              up=UP, mode=mode))(cs)
+            lambda conv: TL.conversation(bk, index, conv, k=K,
+                                         mode=mode))(cs)
 
     fn = jax.jit(all_convs)
     v, ids, stats = fn(convs)

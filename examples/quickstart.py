@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ivf, toploc
+from repro.core.backend import IVFBackend
 from repro.data import synthetic as SY
 
 # 1. a CAsT-like workload: clustered corpus + drifting conversations
@@ -26,13 +27,14 @@ print(f"IVF index: p={index.p} partitions, Lmax={index.lmax}")
 conv = jnp.asarray(wl.conversations[0])       # (turns, d)
 
 # 3. plain IVF: every turn scores all p centroids
-_, ids_plain, st_plain = toploc.ivf_conversation(
-    index, conv, h=16, nprobe=8, k=10, mode="plain")
+backend = IVFBackend(h=16, nprobe=8, alpha=0.1)
+_, ids_plain, st_plain = toploc.conversation(
+    backend, index, conv, k=10, mode="plain")
 
 # 4. TopLoc_IVF+: turn 0 caches the top-h centroids; follow-ups score
 #    only the cache; the |I0| proxy triggers refresh on topic drift
-_, ids_tl, st_tl = toploc.ivf_conversation(
-    index, conv, h=16, nprobe=8, k=10, alpha=0.1, mode="toploc")
+_, ids_tl, st_tl = toploc.conversation(
+    backend, index, conv, k=10, mode="toploc")
 
 print("\nturn | plain work | toploc work | |I0| | refreshed | same top-1")
 for t in range(conv.shape[0]):

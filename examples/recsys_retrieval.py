@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ivf, toploc
+from repro.core.backend import IVFBackend
 from repro.models import recsys as R
 
 N_ITEMS = 50_000
@@ -55,12 +56,11 @@ for s in range(SESSIONS):
         ev, ei = ivf.exact_search(jnp.asarray(corpus), uvec[None], 10)
         tot_work_brute += N_ITEMS
         # TopLoc session over the item clusters
+        bk = IVFBackend(h=16, nprobe=8, alpha=0.1)
         if sess is None:
-            v, ids, sess, st = toploc.ivf_start(index, uvec, h=16,
-                                                nprobe=8, k=10)
+            v, ids, sess, st = toploc.start(bk, index, uvec, k=10)
         else:
-            v, ids, sess, st = toploc.ivf_step(index, sess, uvec,
-                                               nprobe=8, k=10, alpha=0.1)
+            v, ids, sess, st = toploc.step(bk, index, sess, uvec, k=10)
         tot_work_tl += int(st.centroid_dists) + int(st.list_dists)
         got = set(np.asarray(ids).tolist())
         gold = set(np.asarray(ei[0]).tolist())

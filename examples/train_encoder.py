@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.encoders import small_encoder_config, tiny_encoder_config
 from repro.core import ivf, toploc
+from repro.core.backend import IVFBackend
 from repro.data import synthetic as SY
 from repro.models import encoder as E
 from repro.optim import grad as G
@@ -97,10 +98,10 @@ def main():
         qt = conv_txt[c]
         qt = np.pad(qt, ((0, 0), (0, cfg.max_len - qt.shape[1])))
         qv = jnp.asarray(np.asarray(qenc(jnp.asarray(qt), qt > 0)))
-        _, ids_p, st_p = toploc.ivf_conversation(index, qv, h=8, nprobe=4,
-                                                 k=10, mode="plain")
-        _, ids_t, st_t = toploc.ivf_conversation(index, qv, h=8, nprobe=4,
-                                                 k=10, alpha=0.1)
+        bk = IVFBackend(h=8, nprobe=4, alpha=0.1)
+        _, ids_p, st_p = toploc.conversation(bk, index, qv, k=10,
+                                             mode="plain")
+        _, ids_t, st_t = toploc.conversation(bk, index, qv, k=10)
         gold = wl.conv_topics[c]
         hits_plain += sum(wl.doc_topic[np.asarray(ids_p[t, 0])] == gold[t]
                           for t in range(qv.shape[0]))

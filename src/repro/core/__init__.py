@@ -1,13 +1,18 @@
 """Core library: TopLoc (the paper's contribution) + the ANN substrate.
 
 Public API:
+  backend  — RetrievalBackend registry (IVF / IVF-PQ / HNSW / Exact
+             dataclasses; the single seam every layer dispatches through)
   ivf      — bucketed-padded IVF index (build / search / search_cached)
   hnsw     — HNSW index (host build, JAX beam-query)
-  toploc   — TopLoc sessions: centroid cache, |I0| refresh, entry points
+  toploc   — TopLoc sessions + the generic registry drivers
+             (start/step/plain/… over any registered backend)
   kmeans   — distributed balanced k-means (index build substrate)
   topk     — top-k select/merge utilities incl. distributed merge
   pq       — product-quantised posting lists (IVF-PQ, beyond-paper)
 """
-from repro.core import hnsw, ivf, kmeans, pq, topk, toploc  # noqa: F401
+from repro.core import backend, hnsw, ivf, kmeans, pq, topk, toploc  # noqa: F401,E501
+from repro.core.backend import (  # noqa: F401
+    ExactBackend, HNSWBackend, IVFBackend, IVFPQBackend, RetrievalBackend)
 from repro.core.pq import (  # noqa: F401
     IVFPQIndex, PQCodebook, build_ivf_pq)

@@ -171,7 +171,7 @@ def _dots(vecs: jax.Array, q: jax.Array) -> jax.Array:
     call could differ in the last ulp.  The elementwise-multiply +
     trailing-axis reduce keeps one reduction order per row regardless of
     batch size — this is what makes the batched serving path
-    (``toploc.hnsw_step_batch``) bit-identical to the sequential one.
+    (``toploc.step_batch``) bit-identical to the sequential one.
     """
     return jnp.sum(vecs * q[None, :], axis=-1)
 

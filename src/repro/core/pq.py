@@ -17,8 +17,8 @@ orthogonally (it prunes *which* lists are scanned; PQ compresses *how*).
 Pure-jnp here (build is offline).  The hot ADC scan lives in
 ``kernels/pq_adc.py`` (same PrefetchScalarGridSpec pattern as ivf_scan
 with the (m, 256) LUT resident in VMEM); ``IVFPQIndex`` below packages
-the compressed lists + re-rank source that ``toploc.ivf_pq_*`` and the
-serving engines consume.
+the compressed lists + re-rank source that ``backend.IVFPQBackend``
+and the serving engines consume.
 """
 from __future__ import annotations
 

@@ -1,32 +1,39 @@
 """TopLoc — the paper's contribution (§2), as a composable JAX module.
 
-Three mechanisms, each a pure function over an explicit session pytree so
-they vmap over concurrently-served conversations and jit into the serving
-step:
+The session logic (centroid cache, Eq. 1 ``|I0|`` drift proxy, α·np
+refresh, privileged HNSW entry points) is backend-agnostic; the concrete
+backends live in ``core.backend`` as registered, jit-static dataclasses
+(``IVFBackend``, ``IVFPQBackend``, ``HNSWBackend``, ``ExactBackend``).
+This module holds what is shared across all of them:
 
-  * ``ivf_start`` / ``ivf_step``   — TopLoc_IVF / TopLoc_IVF+ centroid
-    caching with the |I0| drift proxy (Eq. 1) and α·np refresh trigger.
-  * ``ivf_pq_start`` / ``ivf_pq_step`` — TopLoc_IVFPQ: the same centroid
-    cache + drift proxy, but posting lists are scanned *PQ-compressed*
-    (asymmetric distance computation, ``kernels/pq_adc``) and the top-R
-    ADC candidates are exact-re-ranked against the float corpus.  The
-    first backend whose speedup comes from memory compression rather
-    than search-space restriction — the two compose.
-  * ``hnsw_start`` / ``hnsw_step`` — TopLoc_HNSW privileged entry point
-    with the ``up`` first-turn ef upscaling.
-  * ``*_conversation``             — run a whole conversation under
-    ``lax.scan`` (benchmark harness path).
+  * the session pytrees (``IVFSession``, ``HNSWSession``) and the
+    ``TurnStats`` work counters mirroring the paper's cost model —
+    centroid distances (p for a full scan, h for a cached one), float
+    doc distances (lists/re-rank), graph distances, and PQ code
+    distances (ADC table-sum evaluations);
+  * the **generic jitted drivers** — one compiled program per
+    (backend, k) pair, replacing the old per-prefix clones:
 
-Work accounting: every step returns a ``TurnStats`` whose fields mirror
-the paper's cost model — centroid distances (p for a full scan, h for a
-cached one), posting-list float distances, graph distances, and PQ code
-distances (ADC table-sum evaluations, each m table gathers + adds
-instead of a d-dim dot).  Speedups in benchmarks/ are computed from
-these counters *and* wall-clock.
+      ``start(backend, index, q0, k=…)``        first utterance
+      ``step(backend, index, sess, q, k=…)``    follow-up utterance
+      ``plain(backend, index, q, k=…)``         stateless baseline turn
+      ``start_batch / step_batch / plain_batch`` batched serving path
+      ``conversation(backend, index, utterances, k=…, mode=…)``
+                                                whole-conversation scan
+
+  * batch-size-stable numeric helpers (``_bcast_centroid_scores``,
+    ``make_cache_batch``, ``_adc_tables``, ``_scan_lists_pq``) keeping
+    sequential, batched and sharded paths bit-identical.
+
+The legacy prefixed entry points (``ivf_start``, ``ivf_pq_step_batch``,
+``hnsw_conversation``, …) remain as thin aliases that emit a
+``DeprecationWarning`` and forward to the registry drivers;
+``tests/test_backend_registry.py`` pins alias == driver bit for bit.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -35,7 +42,6 @@ import jax.numpy as jnp
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import pq as _pq
-from repro.core.topk import intersect_count, masked_topk
 from repro.kernels import ops as _kops
 
 
@@ -70,109 +76,32 @@ def _zero_stats() -> TurnStats:
 
 
 # ---------------------------------------------------------------------------
-# TopLoc_IVF / TopLoc_IVF+
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "scan"))
-def ivf_start(index: _ivf.IVFIndex, q0: jax.Array, *, h: int, nprobe: int,
-              k: int, scan=None
-              ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
-    """First utterance: full centroid scan, build C0 = top_h(q0, C), answer.
-
-    ``scan`` optionally replaces the posting-list scan (signature of
-    ``ivf._scan_lists``); the device-sharded retrieval path plugs in
-    ``distributed.retrieval.ShardedIVFScan`` here while the centroid
-    cache / session machinery stays replicated.
-    Returns (scores (k,), doc_ids (k,), session, stats).
-    """
-    cache_ids, cache_vecs = _ivf.make_cache(index, q0, h=h)
-    # top_np(q0, C0) == top_np(q0, C) since C0 holds q0's h best centroids
-    anchor_sel = cache_ids[:nprobe]
-    top_v, top_i, real = (scan or _ivf._scan_lists)(
-        index, q0[None], anchor_sel[None], k)
-    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
-                      jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
-    stats = TurnStats(
-        centroid_dists=jnp.asarray(index.p, jnp.int32),
-        list_dists=real[0],
-        graph_dists=jnp.asarray(0, jnp.int32),
-        code_dists=jnp.asarray(0, jnp.int32),
-        i0=jnp.asarray(-1, jnp.int32),
-        refreshed=jnp.asarray(True),
-    )
-    return top_v[0], top_i[0], sess, stats
-
-
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha", "scan"))
-def ivf_step(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
-             nprobe: int, k: int, alpha: float = -1.0, scan=None
-             ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
-    """Follow-up utterance.
-
-    ``alpha < 0``  → TopLoc_IVF  (static cache, never refreshed)
-    ``alpha >= 0`` → TopLoc_IVF+ (refresh when |I0| < α·np, Eq. 1)
-
-    The drift check runs *before* any posting list is scanned, so a
-    refreshed turn pays (h + p) centroid distances but only one list scan.
-    """
-    h = sess.cache_ids.shape[0]
-    # 1. centroid selection against the cached set C0  (cost: h)
-    csims = sess.cache_vecs @ q                      # (h,)
-    _, sel_local = jax.lax.top_k(csims, nprobe)
-    sel_cached = sess.cache_ids[sel_local]           # (np,) global ids
-
-    # 2. drift proxy |I0| = |top_np(qj, C0) ∩ top_np(q0, C0)|   (Eq. 1)
-    i0 = intersect_count(sel_cached, sess.anchor_sel)
-    need_refresh = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
-
-    # 3. optional refresh: rescan the full centroid set, re-anchor on qj
-    def refreshed(_):
-        cache_ids, cache_vecs = _ivf.make_cache(index, q, h=h)
-        return cache_ids, cache_vecs, cache_ids[:nprobe], cache_ids[:nprobe]
-
-    def kept(_):
-        return sess.cache_ids, sess.cache_vecs, sess.anchor_sel, sel_cached
-
-    cache_ids, cache_vecs, anchor_sel, sel = jax.lax.cond(
-        need_refresh, refreshed, kept, None)
-
-    # 4. one posting-list scan with the final selection
-    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q[None],
-                                                    sel[None], k)
-
-    new_sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
-                          sess.refreshes + need_refresh.astype(jnp.int32),
-                          sess.turn + 1)
-    stats = TurnStats(
-        centroid_dists=jnp.asarray(h, jnp.int32)
-        + need_refresh.astype(jnp.int32) * index.p,
-        list_dists=real[0],
-        graph_dists=jnp.asarray(0, jnp.int32),
-        code_dists=jnp.asarray(0, jnp.int32),
-        i0=i0,
-        refreshed=need_refresh,
-    )
-    return top_v[0], top_i[0], new_sess, stats
-
-
-# ---------------------------------------------------------------------------
-# TopLoc_IVFPQ — centroid cache + PQ-compressed list scan + exact re-rank
-# ---------------------------------------------------------------------------
+# batch-size-stable numeric helpers
 #
-# Identical session machinery to TopLoc_IVF (the ``IVFSession`` centroid
-# cache, Eq. 1 drift proxy, α·np refresh) — only the posting-list scan
-# changes: lists hold m-byte PQ codes, the hot loop is an asymmetric-
-# distance scan (``kernels.ops.pq_adc_scan`` → Pallas on TPU, jnp ref on
-# CPU), and the top-R ADC candidates are re-ranked with exact float dot
-# products against ``index.doc_vecs``.  Work accounting: ``code_dists``
-# counts ADC evaluations (m table gathers + adds each), ``list_dists``
-# counts the exact re-rank dot products (R per turn) — so the float-
-# distance counter drops from O(nprobe·L) to O(R).
-#
-# Numerics follow the batch-size-stability rule from the batched-serving
-# section below: every reduction (LUT build, ADC sum, re-rank dots) is
-# formulated so each row's reduction order is independent of the batch
-# size, keeping sequential and batched engines bit-identical.
+# The one subtlety of batched serving: a ``(B, d) @ (d, p)`` matmul
+# lowers to a tiled reduction whose order differs from the sequential
+# ``(p, d) @ (d,)`` matvec, so results would drift bitwise with batch
+# size.  Broadcasting the static operand into the batch dim instead
+# makes each row's dot_general reduce exactly like the matvec
+# (tests/test_serving_batched.py pins this down).
+# ---------------------------------------------------------------------------
+
+
+def _bcast_centroid_scores(centroids: jax.Array, q: jax.Array) -> jax.Array:
+    """(B, p) centroid scores, bit-identical per row to ``centroids @ q``."""
+    b = q.shape[0]
+    return jnp.einsum("bpd,bd->bp",
+                      jnp.broadcast_to(centroids, (b,) + centroids.shape), q)
+
+
+@functools.partial(jax.jit, static_argnames=("h",))
+def make_cache_batch(index: _ivf.IVFIndex, q: jax.Array, *, h: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Batched ``ivf.make_cache``: C0 = top_h(q, C) per row. q: (B, d)."""
+    cscores = _bcast_centroid_scores(index.centroids, q)
+    _, ids = jax.lax.top_k(cscores, h)
+    ids = ids.astype(jnp.int32)
+    return ids, index.centroids[ids]
 
 
 def _adc_tables(index: _pq.IVFPQIndex, q: jax.Array) -> jax.Array:
@@ -217,503 +146,78 @@ def _scan_lists_pq(index: _pq.IVFPQIndex, q: jax.Array, sel: jax.Array,
     return top_v, top_i, code_d, rerank_d
 
 
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank",
-                                             "scan"))
-def ivf_pq_start(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
-                 nprobe: int, k: int, rerank: int = 32, scan=None
-                 ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
-    """First utterance on the PQ backend: full centroid scan, build C0,
-    ADC-scan + re-rank.  Session layout is exactly ``ivf_start``'s.
-    ``scan`` optionally replaces the whole ADC-scan + re-rank stage
-    (signature of ``_scan_lists_pq``; sharded:
-    ``distributed.retrieval.ShardedPQScan``)."""
-    cache_ids, cache_vecs = _ivf.make_cache(index, q0, h=h)
-    anchor_sel = cache_ids[:nprobe]
-    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
-        index, q0[None], anchor_sel[None], k, rerank)
-    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
-                      jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
-    stats = TurnStats(
-        centroid_dists=jnp.asarray(index.p, jnp.int32),
-        list_dists=rerank_d[0],
-        graph_dists=jnp.asarray(0, jnp.int32),
-        code_dists=code_d[0],
-        i0=jnp.asarray(-1, jnp.int32),
-        refreshed=jnp.asarray(True),
-    )
-    return top_v[0], top_i[0], sess, stats
-
-
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
-                                             "rerank", "scan"))
-def ivf_pq_step(index: _pq.IVFPQIndex, sess: IVFSession, q: jax.Array, *,
-                nprobe: int, k: int, alpha: float = -1.0, rerank: int = 32,
-                scan=None
-                ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
-    """Follow-up utterance on the PQ backend.
-
-    Same control flow as ``ivf_step`` (drift check before any scan;
-    ``alpha < 0`` static cache, ``alpha >= 0`` refresh) with the PQ
-    scan + re-rank in place of the float list scan.
-    """
-    h = sess.cache_ids.shape[0]
-    csims = sess.cache_vecs @ q                      # (h,)
-    _, sel_local = jax.lax.top_k(csims, nprobe)
-    sel_cached = sess.cache_ids[sel_local]
-
-    i0 = intersect_count(sel_cached, sess.anchor_sel)
-    need_refresh = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
-
-    def refreshed(_):
-        cache_ids, cache_vecs = _ivf.make_cache(index, q, h=h)
-        return cache_ids, cache_vecs, cache_ids[:nprobe], cache_ids[:nprobe]
-
-    def kept(_):
-        return sess.cache_ids, sess.cache_vecs, sess.anchor_sel, sel_cached
-
-    cache_ids, cache_vecs, anchor_sel, sel = jax.lax.cond(
-        need_refresh, refreshed, kept, None)
-
-    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
-        index, q[None], sel[None], k, rerank)
-
-    new_sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
-                          sess.refreshes + need_refresh.astype(jnp.int32),
-                          sess.turn + 1)
-    stats = TurnStats(
-        centroid_dists=jnp.asarray(h, jnp.int32)
-        + need_refresh.astype(jnp.int32) * index.p,
-        list_dists=rerank_d[0],
-        graph_dists=jnp.asarray(0, jnp.int32),
-        code_dists=code_d[0],
-        i0=i0,
-        refreshed=need_refresh,
-    )
-    return top_v[0], top_i[0], new_sess, stats
-
-
 # ---------------------------------------------------------------------------
-# TopLoc_HNSW
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "search"))
-def hnsw_start(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int, k: int,
-               up: int = 2, search=None
-               ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
-    """First utterance: plain HNSW with an upscaled candidate list
-    (up · ef_search) so the privileged entry point is reliable.
-    ``search`` optionally replaces ``hnsw.search`` (sharded:
-    ``distributed.retrieval.ShardedHNSWSearch``)."""
-    v, i, nd = (search or _hnsw.search)(index, q0[None], ef=up * ef, k=k)
-    sess = HNSWSession(entry_point=i[0, 0].astype(jnp.int32),
-                       turn=jnp.asarray(1, jnp.int32))
-    stats = _zero_stats()._replace(graph_dists=nd[0],
-                                   refreshed=jnp.asarray(True))
-    return v[0], i[0], sess, stats
-
-
-@functools.partial(jax.jit, static_argnames=("ef", "k", "adaptive",
-                                             "search"))
-def hnsw_step(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array, *,
-              ef: int, k: int, adaptive: bool = False, search=None
-              ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
-    """Follow-up utterance: start the level-0 beam at the privileged entry
-    point — no hierarchy descent (the paper's saving).
-
-    ``adaptive=True`` is a beyond-paper extension: re-anchor the entry
-    point at every turn's top-1 (the paper keeps q0's anchor for the whole
-    conversation).
-    """
-    v, i, nd = (search or _hnsw.search)(
-        index, q[None], ef=ef, k=k,
-        entry_override=sess.entry_point[None],
-        use_entry_override=True)
-    new_entry = i[0, 0].astype(jnp.int32) if adaptive else sess.entry_point
-    sess = HNSWSession(entry_point=new_entry, turn=sess.turn + 1)
-    stats = _zero_stats()._replace(graph_dists=nd[0])
-    return v[0], i[0], sess, stats
-
-
-# ---------------------------------------------------------------------------
-# Batched multi-conversation entry points (serving path)
-#
-# One device dispatch serves a whole micro-batch of concurrent
-# conversations: session pytrees carry a leading batch dim (gathered from
-# a ``serving.sessions.SessionStore`` slab), and mixed first-turn /
-# follow-up batches are handled with an ``is_first`` mask and pure
-# ``jnp.where`` selects — no ``lax.cond`` — so every row runs the same
-# program (TPU-friendly, no divergence).  The select logic means a batch
-# always *executes* the refresh scan when any row might need it; the
-# ``TurnStats`` counters keep reporting the paper's cost model (what a
-# scalar implementation would pay), which is the documented semantics of
-# the work accounting.
-#
-# Numerics: batched results are bit-identical to the sequential
-# ``ivf_start``/``ivf_step``/``hnsw_*`` paths.  The one subtlety is the
-# full centroid scan: ``(B, d) @ (d, p)`` lowers to a tiled matmul whose
-# reduction order differs from the sequential ``(p, d) @ (d,)`` matvec,
-# so ``_bcast_centroid_scores`` broadcasts the centroids into a batch
-# dim instead — a batched dot_general reduces each row exactly like the
-# matvec (tests/test_serving_batched.py pins this down).
+# generic registry drivers — ONE jitted program per (backend, k) pair
 # ---------------------------------------------------------------------------
 
 
-def _bcast_centroid_scores(centroids: jax.Array, q: jax.Array) -> jax.Array:
-    """(B, p) centroid scores, bit-identical per row to ``centroids @ q``."""
-    b = q.shape[0]
-    return jnp.einsum("bpd,bd->bp",
-                      jnp.broadcast_to(centroids, (b,) + centroids.shape), q)
+@functools.partial(jax.jit, static_argnames=("backend", "k"))
+def start(backend, index, q0: jax.Array, *, k: int):
+    """First utterance through any registered backend.
 
-
-@functools.partial(jax.jit, static_argnames=("h",))
-def make_cache_batch(index: _ivf.IVFIndex, q: jax.Array, *, h: int
-                     ) -> Tuple[jax.Array, jax.Array]:
-    """Batched ``ivf.make_cache``: C0 = top_h(q, C) per row. q: (B, d)."""
-    cscores = _bcast_centroid_scores(index.centroids, q)
-    _, ids = jax.lax.top_k(cscores, h)
-    ids = ids.astype(jnp.int32)
-    return ids, index.centroids[ids]
-
-
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "scan"))
-def ivf_start_batch(index: _ivf.IVFIndex, q0: jax.Array, *, h: int,
-                    nprobe: int, k: int, scan=None
-                    ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
-    """Batched ``ivf_start``: B first utterances in one dispatch.
-
-    q0: (B, d).  Returns (scores (B,k), ids (B,k), session pytree with
-    leading batch dim, stats with leading batch dim).
+    q0: (d,).  Returns (scores (k,), doc_ids (k,), session, stats).
     """
-    b = q0.shape[0]
-    cache_ids, cache_vecs = make_cache_batch(index, q0, h=h)
-    anchor_sel = cache_ids[:, :nprobe]
-    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q0, anchor_sel, k)
-    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
-                      jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.int32))
-    stats = TurnStats(
-        centroid_dists=jnp.full((b,), index.p, jnp.int32),
-        list_dists=real,
-        graph_dists=jnp.zeros((b,), jnp.int32),
-        code_dists=jnp.zeros((b,), jnp.int32),
-        i0=jnp.full((b,), -1, jnp.int32),
-        refreshed=jnp.ones((b,), bool),
-    )
-    return top_v, top_i, sess, stats
+    return backend.start(index, q0, k=k)
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
-                                             "scan"))
-def ivf_step_batch(index: _ivf.IVFIndex, sess: IVFSession, q: jax.Array, *,
-                   nprobe: int, k: int, alpha: float = -1.0,
-                   is_first: Optional[jax.Array] = None, scan=None
-                   ) -> Tuple[jax.Array, jax.Array, IVFSession, TurnStats]:
-    """Batched ``ivf_step`` over B concurrent conversations.
+@functools.partial(jax.jit, static_argnames=("backend", "k"))
+def step(backend, index, sess, q: jax.Array, *, k: int):
+    """Follow-up utterance. Returns (scores, doc_ids, session, stats)."""
+    return backend.step(index, sess, q, k=k)
 
-    sess fields carry a leading batch dim; q: (B, d).  ``is_first``
-    ((B,) bool) marks rows whose session slot is fresh (first utterance
-    of a conversation, or a rebuild after eviction): those rows ignore
-    the slot contents, pay a full centroid scan, and re-anchor — exactly
-    ``ivf_start`` semantics, realised as a forced refresh so the whole
-    batch stays one uniform program.
+
+@functools.partial(jax.jit, static_argnames=("backend", "k"))
+def plain(backend, index, q: jax.Array, *, k: int):
+    """Stateless baseline turn. q: (d,). Returns (scores, doc_ids, stats)."""
+    return backend.plain(index, q, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "k"))
+def start_batch(backend, index, q0: jax.Array, *, k: int):
+    """Batched ``start``: B first utterances in one dispatch. q0: (B, d)."""
+    return backend.start_batch(index, q0, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "k"))
+def step_batch(backend, index, sess, q: jax.Array, *, k: int,
+               is_first: Optional[jax.Array] = None):
+    """Batched ``step`` over B concurrent conversations.
+
+    Session fields carry a leading batch dim (gathered from a
+    ``serving.sessions.SessionStore`` slab); ``is_first`` ((B,) bool)
+    marks rows whose slot is fresh — those run first-turn semantics as a
+    forced refresh so the whole batch stays one uniform program.
     """
-    b, h = sess.cache_ids.shape
-    # 1. centroid selection against each row's cached set C0  (cost: h)
-    csims = jnp.einsum("bhd,bd->bh", sess.cache_vecs, q)
-    _, sel_local = jax.lax.top_k(csims, nprobe)
-    sel_cached = jnp.take_along_axis(sess.cache_ids, sel_local, axis=1)
-
-    # 2. drift proxy per row (Eq. 1)
-    i0 = jax.vmap(intersect_count)(sel_cached, sess.anchor_sel)
-    drift = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
-
-    first = (jnp.zeros((b,), bool) if is_first is None else is_first)
-    refresh = first | drift
-
-    # 3. refresh path.  Per-row logic is select-only (no per-row
-    # lax.cond — every row runs the same program), but the scan itself
-    # is gated on the *batch-wide* predicate: a flush with no first
-    # turns and no drift skips the full centroid scan entirely, which
-    # is what keeps steady-state follow-up flushes at O(B·h) instead of
-    # O(B·p).  When the trace can prove no row ever refreshes (pure
-    # follow-up batch, static cache) the branch is dropped altogether.
-    if is_first is not None or alpha >= 0.0:
-        fresh_ids, fresh_vecs = jax.lax.cond(
-            jnp.any(refresh),
-            lambda: make_cache_batch(index, q, h=h),
-            lambda: (jnp.zeros((b, h), jnp.int32),
-                     jnp.zeros((b, h) + index.centroids.shape[1:],
-                               index.centroids.dtype)))
-        r1 = refresh[:, None]
-        cache_ids = jnp.where(r1, fresh_ids, sess.cache_ids)
-        cache_vecs = jnp.where(r1[..., None], fresh_vecs, sess.cache_vecs)
-        anchor_sel = jnp.where(r1, fresh_ids[:, :nprobe], sess.anchor_sel)
-        sel = jnp.where(r1, fresh_ids[:, :nprobe], sel_cached)
-    else:
-        cache_ids, cache_vecs = sess.cache_ids, sess.cache_vecs
-        anchor_sel, sel = sess.anchor_sel, sel_cached
-
-    # 4. one posting-list scan for the whole batch
-    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q, sel, k)
-
-    step_refresh = drift & ~first      # first turns don't count as refreshes
-    new_sess = IVFSession(
-        cache_ids, cache_vecs, anchor_sel,
-        jnp.where(first, 0, sess.refreshes + step_refresh.astype(jnp.int32)),
-        jnp.where(first, 1, sess.turn + 1))
-    stats = TurnStats(
-        centroid_dists=jnp.where(
-            first, index.p,
-            h + step_refresh.astype(jnp.int32) * index.p).astype(jnp.int32),
-        list_dists=real,
-        graph_dists=jnp.zeros((b,), jnp.int32),
-        code_dists=jnp.zeros((b,), jnp.int32),
-        i0=jnp.where(first, -1, i0),
-        refreshed=refresh,
-    )
-    return top_v, top_i, new_sess, stats
+    return backend.step_batch(index, sess, q, k=k, is_first=is_first)
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "scan"))
-def ivf_plain_batch(index: _ivf.IVFIndex, q: jax.Array, *, nprobe: int,
-                    k: int, scan=None
-                    ) -> Tuple[jax.Array, jax.Array, TurnStats]:
-    """Batched plain-IVF baseline turn (stateless; engine parity path)."""
-    b = q.shape[0]
-    cscores = _bcast_centroid_scores(index.centroids, q)
-    _, sel = jax.lax.top_k(cscores, nprobe)
-    top_v, top_i, real = (scan or _ivf._scan_lists)(index, q, sel, k)
-    stats = TurnStats(
-        centroid_dists=jnp.full((b,), index.p, jnp.int32),
-        list_dists=real,
-        graph_dists=jnp.zeros((b,), jnp.int32),
-        code_dists=jnp.zeros((b,), jnp.int32),
-        i0=jnp.full((b,), -1, jnp.int32),
-        refreshed=jnp.zeros((b,), bool),
-    )
-    return top_v, top_i, stats
+@functools.partial(jax.jit, static_argnames=("backend", "k"))
+def plain_batch(backend, index, q: jax.Array, *, k: int):
+    """Batched stateless baseline turn. q: (B, d)."""
+    return backend.plain_batch(index, q, k=k)
 
 
-@functools.partial(jax.jit, static_argnames=("h", "nprobe", "k", "rerank",
-                                             "scan"))
-def ivf_pq_start_batch(index: _pq.IVFPQIndex, q0: jax.Array, *, h: int,
-                       nprobe: int, k: int, rerank: int = 32, scan=None
-                       ) -> Tuple[jax.Array, jax.Array, IVFSession,
-                                  TurnStats]:
-    """Batched ``ivf_pq_start``: B first utterances in one dispatch."""
-    b = q0.shape[0]
-    cache_ids, cache_vecs = make_cache_batch(index, q0, h=h)
-    anchor_sel = cache_ids[:, :nprobe]
-    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
-        index, q0, anchor_sel, k, rerank)
-    sess = IVFSession(cache_ids, cache_vecs, anchor_sel,
-                      jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.int32))
-    stats = TurnStats(
-        centroid_dists=jnp.full((b,), index.p, jnp.int32),
-        list_dists=rerank_d,
-        graph_dists=jnp.zeros((b,), jnp.int32),
-        code_dists=code_d,
-        i0=jnp.full((b,), -1, jnp.int32),
-        refreshed=jnp.ones((b,), bool),
-    )
-    return top_v, top_i, sess, stats
+@functools.partial(jax.jit, static_argnames=("backend", "k", "mode"))
+def conversation(backend, index, utterances: jax.Array, *, k: int,
+                 mode: str = "toploc"):
+    """Run a (T, d) conversation through one strategy (benchmark path).
 
-
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "alpha",
-                                             "rerank", "scan"))
-def ivf_pq_step_batch(index: _pq.IVFPQIndex, sess: IVFSession,
-                      q: jax.Array, *, nprobe: int, k: int,
-                      alpha: float = -1.0, rerank: int = 32,
-                      is_first: Optional[jax.Array] = None, scan=None
-                      ) -> Tuple[jax.Array, jax.Array, IVFSession,
-                                 TurnStats]:
-    """Batched ``ivf_pq_step`` over B concurrent conversations.
-
-    Mirrors ``ivf_step_batch`` — same ``is_first`` forced-refresh
-    semantics, same batch-wide refresh gate — with the PQ scan +
-    re-rank in place of the float list scan.
-    """
-    b, h = sess.cache_ids.shape
-    csims = jnp.einsum("bhd,bd->bh", sess.cache_vecs, q)
-    _, sel_local = jax.lax.top_k(csims, nprobe)
-    sel_cached = jnp.take_along_axis(sess.cache_ids, sel_local, axis=1)
-
-    i0 = jax.vmap(intersect_count)(sel_cached, sess.anchor_sel)
-    drift = (alpha >= 0.0) & (i0 < jnp.asarray(alpha * nprobe))
-
-    first = (jnp.zeros((b,), bool) if is_first is None else is_first)
-    refresh = first | drift
-
-    if is_first is not None or alpha >= 0.0:
-        fresh_ids, fresh_vecs = jax.lax.cond(
-            jnp.any(refresh),
-            lambda: make_cache_batch(index, q, h=h),
-            lambda: (jnp.zeros((b, h), jnp.int32),
-                     jnp.zeros((b, h) + index.centroids.shape[1:],
-                               index.centroids.dtype)))
-        r1 = refresh[:, None]
-        cache_ids = jnp.where(r1, fresh_ids, sess.cache_ids)
-        cache_vecs = jnp.where(r1[..., None], fresh_vecs, sess.cache_vecs)
-        anchor_sel = jnp.where(r1, fresh_ids[:, :nprobe], sess.anchor_sel)
-        sel = jnp.where(r1, fresh_ids[:, :nprobe], sel_cached)
-    else:
-        cache_ids, cache_vecs = sess.cache_ids, sess.cache_vecs
-        anchor_sel, sel = sess.anchor_sel, sel_cached
-
-    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
-        index, q, sel, k, rerank)
-
-    step_refresh = drift & ~first
-    new_sess = IVFSession(
-        cache_ids, cache_vecs, anchor_sel,
-        jnp.where(first, 0, sess.refreshes + step_refresh.astype(jnp.int32)),
-        jnp.where(first, 1, sess.turn + 1))
-    stats = TurnStats(
-        centroid_dists=jnp.where(
-            first, index.p,
-            h + step_refresh.astype(jnp.int32) * index.p).astype(jnp.int32),
-        list_dists=rerank_d,
-        graph_dists=jnp.zeros((b,), jnp.int32),
-        code_dists=code_d,
-        i0=jnp.where(first, -1, i0),
-        refreshed=refresh,
-    )
-    return top_v, top_i, new_sess, stats
-
-
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "rerank",
-                                             "scan"))
-def ivf_pq_plain_batch(index: _pq.IVFPQIndex, q: jax.Array, *, nprobe: int,
-                       k: int, rerank: int = 32, scan=None
-                       ) -> Tuple[jax.Array, jax.Array, TurnStats]:
-    """Batched plain IVF-PQ baseline turn (stateless; full centroid scan
-    every turn — what a sessionless IVFPQ deployment pays)."""
-    b = q.shape[0]
-    cscores = _bcast_centroid_scores(index.centroids, q)
-    _, sel = jax.lax.top_k(cscores, nprobe)
-    top_v, top_i, code_d, rerank_d = (scan or _scan_lists_pq)(
-        index, q, sel, k, rerank)
-    stats = TurnStats(
-        centroid_dists=jnp.full((b,), index.p, jnp.int32),
-        list_dists=rerank_d,
-        graph_dists=jnp.zeros((b,), jnp.int32),
-        code_dists=code_d,
-        i0=jnp.full((b,), -1, jnp.int32),
-        refreshed=jnp.zeros((b,), bool),
-    )
-    return top_v, top_i, stats
-
-
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "search"))
-def hnsw_start_batch(index: _hnsw.HNSWIndex, q0: jax.Array, *, ef: int,
-                     k: int, up: int = 2, search=None
-                     ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
-    """Batched ``hnsw_start``: B first utterances, upscaled ef, one dispatch."""
-    b = q0.shape[0]
-    v, i, nd = (search or _hnsw.search)(index, q0, ef=up * ef, k=k)
-    sess = HNSWSession(entry_point=i[:, 0].astype(jnp.int32),
-                       turn=jnp.ones((b,), jnp.int32))
-    z = jnp.zeros((b,), jnp.int32)
-    stats = TurnStats(z, z, nd, z, jnp.full((b,), -1, jnp.int32),
-                      jnp.ones((b,), bool))
-    return v, i, sess, stats
-
-
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "adaptive",
-                                             "search"))
-def hnsw_step_batch(index: _hnsw.HNSWIndex, sess: HNSWSession, q: jax.Array,
-                    *, ef: int, k: int, up: int = 2, adaptive: bool = False,
-                    is_first: Optional[jax.Array] = None, search=None
-                    ) -> Tuple[jax.Array, jax.Array, HNSWSession, TurnStats]:
-    """Batched ``hnsw_step`` over B concurrent conversations.
-
-    Follow-up rows start the level-0 beam at their privileged entry
-    point.  With ``is_first``, first-turn rows additionally run the
-    full-descent upscaled search (``up·ef``) and the per-row results are
-    selected with ``jnp.where`` — the two beam widths are different
-    static shapes, so a mixed batch executes both programs and selects,
-    rather than diverging per row.
-    """
-    b = q.shape[0]
-    do_search = search or _hnsw.search
-    v, i, nd = do_search(index, q, ef=ef, k=k,
-                         entry_override=sess.entry_point,
-                         use_entry_override=True)
-    if is_first is not None:
-        # batch-wide gate: steady-state flushes (no first turns) skip
-        # the full-descent upscaled search entirely
-        v0, i_0, nd0 = jax.lax.cond(
-            jnp.any(is_first),
-            lambda: do_search(index, q, ef=up * ef, k=k),
-            lambda: (jnp.zeros((b, k), index.vectors.dtype),
-                     jnp.zeros((b, k), jnp.int32),
-                     jnp.zeros((b,), jnp.int32)))
-        f1 = is_first[:, None]
-        v = jnp.where(f1, v0, v)
-        i = jnp.where(f1, i_0, i)
-        nd = jnp.where(is_first, nd0, nd)
-        first = is_first
-    else:
-        first = jnp.zeros((b,), bool)
-
-    top1 = i[:, 0].astype(jnp.int32)
-    new_entry = top1 if adaptive else jnp.where(first, top1,
-                                                sess.entry_point)
-    new_sess = HNSWSession(entry_point=new_entry,
-                           turn=jnp.where(first, 1, sess.turn + 1))
-    z = jnp.zeros((b,), jnp.int32)
-    stats = TurnStats(z, z, nd, z, jnp.full((b,), -1, jnp.int32), first)
-    return v, i, new_sess, stats
-
-
-@functools.partial(jax.jit, static_argnames=("ef", "k", "search"))
-def hnsw_plain_batch(index: _hnsw.HNSWIndex, q: jax.Array, *, ef: int,
-                     k: int, search=None
-                     ) -> Tuple[jax.Array, jax.Array, TurnStats]:
-    """Batched plain-HNSW baseline turn (stateless; engine parity path)."""
-    b = q.shape[0]
-    v, i, nd = (search or _hnsw.search)(index, q, ef=ef, k=k)
-    z = jnp.zeros((b,), jnp.int32)
-    stats = TurnStats(z, z, nd, z, jnp.full((b,), -1, jnp.int32),
-                      jnp.zeros((b,), bool))
-    return v, i, stats
-
-
-# ---------------------------------------------------------------------------
-# Whole-conversation scan (benchmark path)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit,
-                   static_argnames=("h", "nprobe", "k", "alpha", "mode",
-                                    "scan"))
-def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
-                     nprobe: int, k: int, alpha: float = -1.0,
-                     mode: str = "toploc", scan=None
-                     ) -> Tuple[jax.Array, jax.Array, TurnStats]:
-    """Run a (T, d) conversation through one IVF strategy.
-
-    mode: 'toploc' (cache; alpha<0 static, alpha>=0 refresh) or 'plain'
-    (full centroid scan every turn — the baseline).
+    mode: 'toploc' (sessioned; the backend's alpha/adaptive knobs pick
+    the refresh flavour) or 'plain' (the stateless baseline every turn —
+    turns run as one batch, which the batch-size-stable formulations
+    keep bit-identical to per-turn dispatch).
     Returns (scores (T,k), ids (T,k), stats stacked over turns).
     """
     if mode == "plain":
-        def body(carry, q):
-            top_v, top_i, st = _ivf.search(index, q[None], nprobe=nprobe,
-                                           k=k, scan=scan)
-            stats = TurnStats(jnp.asarray(index.p, jnp.int32),
-                              st.list_dists[0], jnp.asarray(0, jnp.int32),
-                              jnp.asarray(0, jnp.int32),
-                              jnp.asarray(-1, jnp.int32), jnp.asarray(False))
-            return carry, (top_v[0], top_i[0], stats)
-        _, (v, i, stats) = jax.lax.scan(body, 0, utterances)
-        return v, i, stats
+        return backend.plain_batch(index, utterances, k=k)
+    if mode != "toploc":
+        raise ValueError(f"mode must be 'toploc' or 'plain', got {mode!r}")
 
     q0, rest = utterances[0], utterances[1:]
-    v0, i0_, sess, st0 = ivf_start(index, q0, h=h, nprobe=nprobe, k=k,
-                                   scan=scan)
+    v0, i0_, sess, st0 = backend.start(index, q0, k=k)
 
     def body(sess, q):
-        v, i, sess, st = ivf_step(index, sess, q, nprobe=nprobe, k=k,
-                                  alpha=alpha, scan=scan)
+        v, i, sess, st = backend.step(index, sess, q, k=k)
         return sess, (v, i, st)
 
     _, (v, i, st) = jax.lax.scan(body, sess, rest)
@@ -723,72 +227,158 @@ def ivf_conversation(index: _ivf.IVFIndex, utterances: jax.Array, *, h: int,
     return v, i, stats
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("h", "nprobe", "k", "alpha", "rerank",
-                                    "mode", "scan"))
-def ivf_pq_conversation(index: _pq.IVFPQIndex, utterances: jax.Array, *,
-                        h: int, nprobe: int, k: int, alpha: float = -1.0,
-                        rerank: int = 32, mode: str = "toploc", scan=None
-                        ) -> Tuple[jax.Array, jax.Array, TurnStats]:
-    """Run a (T, d) conversation through one IVF-PQ strategy.
-
-    mode: 'toploc' (centroid cache; alpha<0 static, alpha>=0 refresh) or
-    'plain' (full centroid scan every turn).
-    """
-    if mode == "plain":
-        def body(carry, q):
-            v, i, st = ivf_pq_plain_batch(index, q[None], nprobe=nprobe,
-                                          k=k, rerank=rerank, scan=scan)
-            return carry, (v[0], i[0], jax.tree.map(lambda a: a[0], st))
-        _, (v, i, stats) = jax.lax.scan(body, 0, utterances)
-        return v, i, stats
-
-    q0, rest = utterances[0], utterances[1:]
-    v0, i0_, sess, st0 = ivf_pq_start(index, q0, h=h, nprobe=nprobe, k=k,
-                                      rerank=rerank, scan=scan)
-
-    def body(sess, q):
-        v, i, sess, st = ivf_pq_step(index, sess, q, nprobe=nprobe, k=k,
-                                     alpha=alpha, rerank=rerank, scan=scan)
-        return sess, (v, i, st)
-
-    _, (v, i, st) = jax.lax.scan(body, sess, rest)
-    v = jnp.concatenate([v0[None], v])
-    i = jnp.concatenate([i0_[None], i])
-    stats = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b]), st0, st)
-    return v, i, stats
+# ---------------------------------------------------------------------------
+# deprecated prefixed aliases (pre-registry API)
+#
+# Every alias forwards to the exact registry driver path — bit-identity
+# is pinned by tests/test_backend_registry.py — and warns so downstream
+# callers migrate.  New code should build a ``core.backend`` dataclass
+# once and call the generic drivers above.
+# ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "k", "up", "mode",
-                                             "search"))
-def hnsw_conversation(index: _hnsw.HNSWIndex, utterances: jax.Array, *,
-                      ef: int, k: int, up: int = 2, mode: str = "toploc",
-                      search=None
-                      ) -> Tuple[jax.Array, jax.Array, TurnStats]:
-    """Run a (T, d) conversation through one HNSW strategy.
+def _warn_deprecated(name: str, repl: str) -> None:
+    warnings.warn(
+        f"toploc.{name} is deprecated; use the core.backend registry: "
+        f"{repl}", DeprecationWarning, stacklevel=3)
 
-    mode: 'plain' | 'toploc' (paper: static q0 anchor) | 'adaptive'
-    (beyond-paper: re-anchor the entry point at every turn's top-1).
-    """
-    if mode == "plain":
-        v, i, nd = (search or _hnsw.search)(index, utterances, ef=ef, k=k)
-        stats = TurnStats(
-            jnp.zeros_like(nd), jnp.zeros_like(nd), nd, jnp.zeros_like(nd),
-            jnp.full_like(nd, -1), jnp.zeros(nd.shape, bool))
-        return v, i, stats
 
-    q0, rest = utterances[0], utterances[1:]
-    v0, i0_, sess, st0 = hnsw_start(index, q0, ef=ef, k=k, up=up,
-                                    search=search)
+def _ivf_backend(**knobs):
+    from repro.core import backend as _backend
+    return _backend.IVFBackend(**knobs)
+
+
+def _pq_backend(**knobs):
+    from repro.core import backend as _backend
+    return _backend.IVFPQBackend(**knobs)
+
+
+def _hnsw_backend(**knobs):
+    from repro.core import backend as _backend
+    return _backend.HNSWBackend(**knobs)
+
+
+def ivf_start(index, q0, *, h, nprobe, k, scan=None):
+    _warn_deprecated("ivf_start", "start(IVFBackend(h=…, nprobe=…), …)")
+    return start(_ivf_backend(h=h, nprobe=nprobe, scan=scan), index, q0,
+                 k=k)
+
+
+def ivf_step(index, sess, q, *, nprobe, k, alpha=-1.0, scan=None):
+    _warn_deprecated("ivf_step", "step(IVFBackend(…, alpha=…), …)")
+    return step(_ivf_backend(h=sess.cache_ids.shape[0], nprobe=nprobe,
+                             alpha=alpha, scan=scan), index, sess, q, k=k)
+
+
+def ivf_start_batch(index, q0, *, h, nprobe, k, scan=None):
+    _warn_deprecated("ivf_start_batch", "start_batch(IVFBackend(…), …)")
+    return start_batch(_ivf_backend(h=h, nprobe=nprobe, scan=scan), index,
+                       q0, k=k)
+
+
+def ivf_step_batch(index, sess, q, *, nprobe, k, alpha=-1.0, is_first=None,
+                   scan=None):
+    _warn_deprecated("ivf_step_batch", "step_batch(IVFBackend(…), …)")
+    return step_batch(_ivf_backend(h=sess.cache_ids.shape[1], nprobe=nprobe,
+                                   alpha=alpha, scan=scan), index, sess, q,
+                      k=k, is_first=is_first)
+
+
+def ivf_plain_batch(index, q, *, nprobe, k, scan=None):
+    _warn_deprecated("ivf_plain_batch", "plain_batch(IVFBackend(…), …)")
+    return plain_batch(_ivf_backend(nprobe=nprobe, scan=scan), index, q,
+                       k=k)
+
+
+def ivf_conversation(index, utterances, *, h, nprobe, k, alpha=-1.0,
+                     mode="toploc", scan=None):
+    _warn_deprecated("ivf_conversation", "conversation(IVFBackend(…), …)")
+    return conversation(_ivf_backend(h=h, nprobe=nprobe, alpha=alpha,
+                                     scan=scan), index, utterances, k=k,
+                        mode=mode)
+
+
+def ivf_pq_start(index, q0, *, h, nprobe, k, rerank=32, scan=None):
+    _warn_deprecated("ivf_pq_start", "start(IVFPQBackend(…), …)")
+    return start(_pq_backend(h=h, nprobe=nprobe, rerank=rerank, scan=scan),
+                 index, q0, k=k)
+
+
+def ivf_pq_step(index, sess, q, *, nprobe, k, alpha=-1.0, rerank=32,
+                scan=None):
+    _warn_deprecated("ivf_pq_step", "step(IVFPQBackend(…), …)")
+    return step(_pq_backend(h=sess.cache_ids.shape[0], nprobe=nprobe,
+                            alpha=alpha, rerank=rerank, scan=scan), index,
+                sess, q, k=k)
+
+
+def ivf_pq_start_batch(index, q0, *, h, nprobe, k, rerank=32, scan=None):
+    _warn_deprecated("ivf_pq_start_batch",
+                     "start_batch(IVFPQBackend(…), …)")
+    return start_batch(_pq_backend(h=h, nprobe=nprobe, rerank=rerank,
+                                   scan=scan), index, q0, k=k)
+
+
+def ivf_pq_step_batch(index, sess, q, *, nprobe, k, alpha=-1.0, rerank=32,
+                      is_first=None, scan=None):
+    _warn_deprecated("ivf_pq_step_batch", "step_batch(IVFPQBackend(…), …)")
+    return step_batch(_pq_backend(h=sess.cache_ids.shape[1], nprobe=nprobe,
+                                  alpha=alpha, rerank=rerank, scan=scan),
+                      index, sess, q, k=k, is_first=is_first)
+
+
+def ivf_pq_plain_batch(index, q, *, nprobe, k, rerank=32, scan=None):
+    _warn_deprecated("ivf_pq_plain_batch",
+                     "plain_batch(IVFPQBackend(…), …)")
+    return plain_batch(_pq_backend(nprobe=nprobe, rerank=rerank, scan=scan),
+                       index, q, k=k)
+
+
+def ivf_pq_conversation(index, utterances, *, h, nprobe, k, alpha=-1.0,
+                        rerank=32, mode="toploc", scan=None):
+    _warn_deprecated("ivf_pq_conversation",
+                     "conversation(IVFPQBackend(…), …)")
+    return conversation(_pq_backend(h=h, nprobe=nprobe, alpha=alpha,
+                                    rerank=rerank, scan=scan), index,
+                        utterances, k=k, mode=mode)
+
+
+def hnsw_start(index, q0, *, ef, k, up=2, search=None):
+    _warn_deprecated("hnsw_start", "start(HNSWBackend(ef=…, up=…), …)")
+    return start(_hnsw_backend(ef=ef, up=up, search=search), index, q0,
+                 k=k)
+
+
+def hnsw_step(index, sess, q, *, ef, k, adaptive=False, search=None):
+    _warn_deprecated("hnsw_step", "step(HNSWBackend(…), …)")
+    return step(_hnsw_backend(ef=ef, adaptive=adaptive, search=search),
+                index, sess, q, k=k)
+
+
+def hnsw_start_batch(index, q0, *, ef, k, up=2, search=None):
+    _warn_deprecated("hnsw_start_batch", "start_batch(HNSWBackend(…), …)")
+    return start_batch(_hnsw_backend(ef=ef, up=up, search=search), index,
+                       q0, k=k)
+
+
+def hnsw_step_batch(index, sess, q, *, ef, k, up=2, adaptive=False,
+                    is_first=None, search=None):
+    _warn_deprecated("hnsw_step_batch", "step_batch(HNSWBackend(…), …)")
+    return step_batch(_hnsw_backend(ef=ef, up=up, adaptive=adaptive,
+                                    search=search), index, sess, q, k=k,
+                      is_first=is_first)
+
+
+def hnsw_plain_batch(index, q, *, ef, k, search=None):
+    _warn_deprecated("hnsw_plain_batch", "plain_batch(HNSWBackend(…), …)")
+    return plain_batch(_hnsw_backend(ef=ef, search=search), index, q, k=k)
+
+
+def hnsw_conversation(index, utterances, *, ef, k, up=2, mode="toploc",
+                      search=None):
+    _warn_deprecated("hnsw_conversation", "conversation(HNSWBackend(…), …)")
     adaptive = mode == "adaptive"
-
-    def body(sess, q):
-        v, i, sess, st = hnsw_step(index, sess, q, ef=ef, k=k,
-                                   adaptive=adaptive, search=search)
-        return sess, (v, i, st)
-
-    _, (v, i, st) = jax.lax.scan(body, sess, rest)
-    v = jnp.concatenate([v0[None], v])
-    i = jnp.concatenate([i0_[None], i])
-    stats = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b]), st0, st)
-    return v, i, stats
+    return conversation(
+        _hnsw_backend(ef=ef, up=up, adaptive=adaptive, search=search),
+        index, utterances, k=k, mode="plain" if mode == "plain" else
+        "toploc")

@@ -336,6 +336,45 @@ class ShardedHNSWSearch:
 
 
 # ---------------------------------------------------------------------------
+# backend-registry wiring
+#
+# A data-driven table — not string branching — maps each registered
+# ``core.backend`` name to (index placement fn, scan plugin class, the
+# backend dataclass field the plugin plugs into).  ``shard_backend`` is
+# the one call the serving engines make; a new backend becomes sharded
+# by one ``register_sharding`` call, with zero engine edits.
+# ---------------------------------------------------------------------------
+
+_SHARDING_REGISTRY: dict = {}
+
+
+def register_sharding(name: str, shard_index, plugin_cls,
+                      field: str = "scan") -> None:
+    """Teach ``shard_backend`` how to place backend ``name`` on a mesh."""
+    _SHARDING_REGISTRY[name] = (shard_index, plugin_cls, field)
+
+
+register_sharding("ivf", shard_ivf_index, ShardedIVFScan, "scan")
+register_sharding("ivf_pq", shard_ivf_pq_index, ShardedPQScan, "scan")
+register_sharding("hnsw", shard_hnsw_index, ShardedHNSWSearch, "search")
+
+
+def shard_backend(mesh: Mesh, backend, index, *, axis: str = "model"):
+    """Place ``index`` on ``mesh`` and plug the matching sharded scan
+    into ``backend``.  Backends with no registered sharding (e.g. the
+    stateless exact backend) pass through unchanged.
+
+    Returns (backend', index').
+    """
+    entry = _SHARDING_REGISTRY.get(backend.name)
+    if entry is None:
+        return backend, index
+    shard_index, plugin_cls, field = entry
+    return (dataclasses.replace(backend, **{field: plugin_cls(mesh, axis)}),
+            shard_index(mesh, index, axis=axis))
+
+
+# ---------------------------------------------------------------------------
 # diagnostics (benchmarks/fig4_sharded.py)
 # ---------------------------------------------------------------------------
 

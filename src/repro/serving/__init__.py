@@ -5,12 +5,14 @@ dispatch).  Batched path: ``engine.BatchedConversationalSearchEngine``
 (micro-batched flushes over a device-resident ``sessions.SessionStore``
 slab).  ``scheduler`` supplies the batching/hedging front door.
 """
-from repro.serving import engine, scheduler, sessions  # noqa: F401
+from repro.serving import engine, result_cache, scheduler, sessions  # noqa: F401,E501
 from repro.serving.engine import (  # noqa: F401
     BatchedConversationalSearchEngine, ConversationalSearchEngine,
     ServingConfig, TurnRecord)
+from repro.serving.result_cache import (  # noqa: F401
+    CacheEntry, ResultCache)
 from repro.serving.scheduler import (  # noqa: F401
     HedgedExecutor, MicroBatcher, Request)
 from repro.serving.sessions import (  # noqa: F401
     SessionStore, hnsw_session_store, ivf_pq_session_store,
-    ivf_session_store)
+    ivf_session_store, store_for_backend)

@@ -3,12 +3,17 @@
 Python-side session orchestration around the jitted core:
   * per-conversation TopLoc state (IVF centroid cache / HNSW entry
     point) held device-resident between turns;
-  * strategy selected per deployment config (plain / toploc / exact,
-    IVF / IVF-PQ / HNSW backend — IVF-PQ scans PQ-compressed lists via
-    ADC and exact-re-ranks the top-R candidates);
-  * work + latency accounting per turn (feeds benchmarks/table1.py);
-  * optional query encoder in front (full paper pipeline), and an item
-    corpus front-end for the two-tower ``retrieval_cand`` serving shape.
+  * the retrieval backend resolved ONCE from the ``core.backend``
+    registry (``ServingConfig.backend`` is just the registry name) —
+    both engines drive it exclusively through the generic
+    ``toploc.start/step/plain(+_batch)`` drivers, so adding a backend
+    to the registry adds it to serving with zero engine edits and zero
+    ``backend == "..."`` branches;
+  * an optional session-level historical-embedding **result cache**
+    (``serving.result_cache``, Frieder et al.): when a turn's query is
+    cosine-close to the session's cached query, the turn is answered
+    from the cached documents without touching the backend;
+  * work + latency accounting per turn (feeds benchmarks/table1.py).
 
 Two engines share the accounting:
 
@@ -20,14 +25,18 @@ path is tested against.
 enter a ``scheduler.MicroBatcher``; each flush drains up to ``max_batch``
 requests, pads to the next shape bucket, gathers the sessions from a
 device-resident ``sessions.SessionStore`` slab, runs ONE jitted batched
-TopLoc step (``toploc.ivf_step_batch`` / ``hnsw_step_batch``) with an
-``is_first`` mask for rows whose conversation has no cached state, and
-scatters the updated sessions back.  A flush containing several turns of
-the same conversation is split into consecutive waves (a later turn must
-observe the earlier turn's updated cache), so one device batch never
-holds a conversation twice.  Per-turn ``TurnStats`` are recorded exactly
-as the sequential engine records them; batched results are bit-identical
-to the sequential path (tests/test_serving_batched.py).
+TopLoc step (``toploc.step_batch``) with an ``is_first`` mask for rows
+whose conversation has no cached state, and scatters the updated
+sessions back.  A flush containing several turns of the same
+conversation is split into consecutive waves (a later turn must observe
+the earlier turn's updated cache), so one device batch never holds a
+conversation twice.  With the result cache enabled, each wave adds one
+fused probe over the cache slab (same slot ids as the session slab);
+hit rows take the cached answer, keep their session untouched, and
+report zero backend work — exactly what the sequential engine does when
+it skips the dispatch, so the two engines stay bit-identical with the
+cache on as well as off.  Per-turn ``TurnStats`` are recorded exactly
+as the sequential engine records them (tests/test_serving_batched.py).
 
 Sessions are sticky: at multi-host scale the router pins a conversation
 to one data-parallel group so its cache stays local (DESIGN.md §2).
@@ -42,18 +51,20 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as _backend
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import pq as _pq
 from repro.core import toploc
 from repro.distributed import retrieval as _retrieval
+from repro.serving import result_cache as _result_cache
 from repro.serving import sessions as _sessions
 from repro.serving.scheduler import MicroBatcher, Request
 
 
 @dataclasses.dataclass
 class ServingConfig:
-    backend: str = "ivf"          # "ivf" | "ivf_pq" | "hnsw" | "exact"
+    backend: str = "ivf"          # any core.backend registry name
     strategy: str = "toploc"      # "toploc" | "toploc+" | "plain"
     k: int = 10
     # IVF / IVF-PQ
@@ -70,6 +81,20 @@ class ServingConfig:
     shards: int = 0               # 0/1 = single device
     mesh: Any = None              # prebuilt jax Mesh (overrides shards)
     shard_axis: str = "model"
+    # session-level historical-embedding result cache
+    # (serving/result_cache.py): a turn whose query reaches this cosine
+    # similarity to the session's cached query is answered from the
+    # cached documents without touching the backend.  <= 0 disables the
+    # cache — runs are then bit-identical to a cache-absent engine.
+    # cache_depth > k over-fetches the backend to that depth and caches
+    # the deeper candidate pool (hits rescore it; only the top-k is ever
+    # served/recorded); 0 caches exactly the top-k.  The depth is
+    # clamped to the backend's fetch limit — the largest request that
+    # still executes the plain-k program (nprobe·Lmax for IVF, the
+    # re-rank depth for IVF-PQ, ef for HNSW) — so miss turns always
+    # serve exactly the uncached top-k.
+    cache_threshold: float = 0.0
+    cache_depth: int = 0
 
 
 @dataclasses.dataclass
@@ -83,6 +108,7 @@ class TurnRecord:
     refreshed: bool
     i0: int
     code_dists: int = 0           # PQ ADC evaluations (ivf_pq backend)
+    cache_hit: bool = False       # answered from the result cache
 
 
 class _EngineAccounting:
@@ -108,73 +134,90 @@ class _EngineAccounting:
                 [r.code_dists for r in self.records])),
             "refresh_rate": float(np.mean(
                 [r.refreshed for r in self.records[1:]] or [0.0])),
+            "cache_hit_rate": float(np.mean(
+                [r.cache_hit for r in self.records])),
         }
 
 
-def _check_indexes(config: ServingConfig, ivf_index, hnsw_index, doc_vecs,
-                   ivf_pq_index=None):
-    if config.backend == "ivf" and ivf_index is None:
-        raise ValueError("ivf backend needs ivf_index")
-    if config.backend == "ivf_pq" and ivf_pq_index is None:
-        raise ValueError("ivf_pq backend needs ivf_pq_index")
-    if config.backend == "hnsw" and hnsw_index is None:
-        raise ValueError("hnsw backend needs hnsw_index")
-    if config.backend == "exact" and doc_vecs is None:
-        raise ValueError("exact backend needs doc_vecs")
+class _EngineBase(_EngineAccounting):
+    """Backend/index/mesh/cache resolution shared by both engines."""
 
-
-class _ShardedRetrievalMixin:
-    """Corpus-mesh wiring shared by both engines.
-
-    ``_setup_sharding`` resolves the ``ServingConfig`` mesh/shards knob,
-    re-places the active backend's index on the mesh (posting lists /
-    vector corpus sharded, centroids + session math replicated) and
-    builds the scan callables the strategy paths inject into
-    ``core.toploc``.  With no mesh configured every ``self._*scan``
-    stays ``None`` and the toploc entry points fall back to their local
-    scans — the single-device behaviour is untouched.
-    """
-
-    def _setup_sharding(self, config: ServingConfig) -> None:
+    def _setup(self, config: ServingConfig, *, ivf_index, hnsw_index,
+               ivf_pq_index, doc_vecs) -> None:
+        self.cfg = config
+        alpha = config.alpha if config.strategy == "toploc+" else -1.0
+        self.backend = _backend.make(
+            config.backend, h=config.h, nprobe=config.nprobe, alpha=alpha,
+            rerank=config.rerank, ef=config.ef_search, up=config.up)
+        provided = {"ivf_index": ivf_index, "hnsw_index": hnsw_index,
+                    "ivf_pq_index": ivf_pq_index, "doc_vecs": doc_vecs}
+        self.index = provided.get(self.backend.index_kwarg)
+        if self.index is None:
+            raise ValueError(f"{config.backend} backend needs "
+                             f"{self.backend.index_kwarg}")
+        self.doc_vecs = doc_vecs
+        # corpus mesh: place the index, plug the sharded scan into the
+        # backend; with no mesh both pass through untouched
         mesh = config.mesh
         if mesh is None and config.shards and config.shards > 1:
             mesh = _retrieval.retrieval_mesh(config.shards,
                                              axis=config.shard_axis)
         self.mesh = mesh
-        self._ivf_scan = self._pq_scan = self._hnsw_search = None
-        if mesh is None or config.backend == "exact":
-            return
-        ax = config.shard_axis
-        if config.backend == "ivf":
-            self.ivf = _retrieval.shard_ivf_index(mesh, self.ivf, axis=ax)
-            self._ivf_scan = _retrieval.ShardedIVFScan(mesh, ax)
-        elif config.backend == "ivf_pq":
-            self.ivf_pq = _retrieval.shard_ivf_pq_index(mesh, self.ivf_pq,
-                                                        axis=ax)
-            self._pq_scan = _retrieval.ShardedPQScan(mesh, ax)
-        elif config.backend == "hnsw":
-            self.hnsw = _retrieval.shard_hnsw_index(mesh, self.hnsw,
-                                                    axis=ax)
-            self._hnsw_search = _retrieval.ShardedHNSWSearch(mesh, ax)
+        if mesh is not None:
+            self.backend, self.index = _retrieval.shard_backend(
+                mesh, self.backend, self.index, axis=config.shard_axis)
+        self.turn_count: Dict[str, int] = {}
+        self.records: List[TurnRecord] = []
+
+    @property
+    def _sessioned(self) -> bool:
+        """Per-conversation state in play this deployment?"""
+        return self.backend.stateful and self.cfg.strategy != "plain"
+
+    def _make_cache(self, n_slots: Optional[int] = None
+                    ) -> Optional[_result_cache.ResultCache]:
+        """Result cache iff enabled and the deployment is sessioned
+        (the cache is session-level state — plain/stateless serving has
+        no session to anchor an entry to)."""
+        cfg = self.cfg
+        if cfg.cache_threshold <= 0.0 or not self._sessioned:
+            return None
+        corpus = (self.doc_vecs if self.doc_vecs is not None
+                  else self.backend.corpus_vectors(self.index))
+        # clamp the over-fetch to the backend's candidate pool: a wider
+        # request would either be unsatisfiable (HNSW: top_k over an
+        # ef-wide beam) or change which candidates the top-k is drawn
+        # from (IVF-PQ: the re-rank pool widens with k)
+        depth = min(max(cfg.cache_depth or cfg.k, cfg.k),
+                    self.backend.fetch_limit(self.index))
+        return _result_cache.ResultCache(
+            d=self.backend.query_dim(self.index), k=cfg.k,
+            threshold=cfg.cache_threshold, depth=depth,
+            corpus=corpus, n_slots=n_slots, mesh=self.mesh)
+
+    @property
+    def _k_fetch(self) -> int:
+        """Result depth requested from the backend: the cache depth when
+        the cache is on (the entry stores the deeper pool; only the
+        top-k is served), plain k otherwise — so disabled-cache runs
+        execute the exact uncached program."""
+        return self._cache.depth if self._cache is not None else self.cfg.k
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Result-cache hit/miss counters ({} when the cache is off)."""
+        return self._cache.stats() if self._cache is not None else {}
 
 
-class ConversationalSearchEngine(_EngineAccounting, _ShardedRetrievalMixin):
+class ConversationalSearchEngine(_EngineBase):
     def __init__(self, config: ServingConfig, *,
                  ivf_index: Optional[_ivf.IVFIndex] = None,
                  hnsw_index: Optional[_hnsw.HNSWIndex] = None,
                  ivf_pq_index: Optional[_pq.IVFPQIndex] = None,
                  doc_vecs: Optional[jax.Array] = None):
-        self.cfg = config
-        self.ivf = ivf_index
-        self.hnsw = hnsw_index
-        self.ivf_pq = ivf_pq_index
-        self.doc_vecs = doc_vecs
-        _check_indexes(config, ivf_index, hnsw_index, doc_vecs,
-                       ivf_pq_index)
-        self._setup_sharding(config)
+        self._setup(config, ivf_index=ivf_index, hnsw_index=hnsw_index,
+                    ivf_pq_index=ivf_pq_index, doc_vecs=doc_vecs)
         self.sessions: Dict[str, Any] = {}
-        self.turn_count: Dict[str, int] = {}
-        self.records: List[TurnRecord] = []
+        self._cache = self._make_cache()
 
     # -- public API ---------------------------------------------------
 
@@ -185,109 +228,47 @@ class ConversationalSearchEngine(_EngineAccounting, _ShardedRetrievalMixin):
         cfg = self.cfg
         turn = self.turn_count.get(conv_id, 0)
 
-        if cfg.backend == "exact":
-            v, i = _ivf.exact_search(self.doc_vecs, qvec[None], cfg.k)
-            v, i = v[0], i[0]
-            stats = None
-        elif cfg.backend == "ivf":
-            v, i, stats = self._ivf_turn(conv_id, qvec, turn)
-        elif cfg.backend == "ivf_pq":
-            v, i, stats = self._ivf_pq_turn(conv_id, qvec, turn)
+        cached = (self._cache.lookup(conv_id, qvec)
+                  if self._cache is not None else None)
+        if cached is not None:
+            v, i = cached
+            stats = toploc._zero_stats()
+        elif not self._sessioned:
+            v, i, stats = toploc.plain(self.backend, self.index, qvec,
+                                       k=self._k_fetch)
+        elif turn == 0 or conv_id not in self.sessions:
+            v, i, sess, stats = toploc.start(self.backend, self.index,
+                                             qvec, k=self._k_fetch)
+            self.sessions[conv_id] = sess
         else:
-            v, i, stats = self._hnsw_turn(conv_id, qvec, turn)
+            v, i, sess, stats = toploc.step(self.backend, self.index,
+                                            self.sessions[conv_id], qvec,
+                                            k=self._k_fetch)
+            self.sessions[conv_id] = sess
+        if cached is None and self._cache is not None:
+            self._cache.update(conv_id, qvec, v, i)
+            v, i = v[:cfg.k], i[:cfg.k]
 
         v = np.asarray(jax.device_get(v))
         i = np.asarray(jax.device_get(i))
         dt = time.perf_counter() - t0
         self.turn_count[conv_id] = turn + 1
-        if stats is not None:
-            self.records.append(TurnRecord(
-                conv_id, turn, dt,
-                int(stats.centroid_dists), int(stats.list_dists),
-                int(stats.graph_dists), bool(stats.refreshed),
-                int(stats.i0), int(stats.code_dists)))
-        else:
-            self.records.append(TurnRecord(conv_id, turn, dt,
-                                           0, 0, 0, False, -1))
+        self.records.append(TurnRecord(
+            conv_id, turn, dt,
+            int(stats.centroid_dists), int(stats.list_dists),
+            int(stats.graph_dists), bool(stats.refreshed),
+            int(stats.i0), int(stats.code_dists),
+            cache_hit=cached is not None))
         return v, i
 
     def end_conversation(self, conv_id: str) -> None:
         self.sessions.pop(conv_id, None)
         self.turn_count.pop(conv_id, None)
+        if self._cache is not None:
+            self._cache.invalidate(conv_id)
 
-    # -- strategy paths -------------------------------------------------
 
-    def _ivf_turn(self, conv_id, qvec, turn):
-        cfg = self.cfg
-        if cfg.strategy == "plain":
-            v, i, st = _ivf.search(self.ivf, qvec[None],
-                                   nprobe=cfg.nprobe, k=cfg.k,
-                                   scan=self._ivf_scan)
-            stats = toploc.TurnStats(
-                jnp.asarray(self.ivf.p, jnp.int32), st.list_dists[0],
-                jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
-                jnp.asarray(-1, jnp.int32), jnp.asarray(False))
-            return v[0], i[0], stats
-        if turn == 0 or conv_id not in self.sessions:
-            v, i, sess, stats = toploc.ivf_start(
-                self.ivf, qvec, h=cfg.h, nprobe=cfg.nprobe, k=cfg.k,
-                scan=self._ivf_scan)
-            self.sessions[conv_id] = sess
-            return v, i, stats
-        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
-        v, i, sess, stats = toploc.ivf_step(
-            self.ivf, self.sessions[conv_id], qvec,
-            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha, scan=self._ivf_scan)
-        self.sessions[conv_id] = sess
-        return v, i, stats
-
-    def _ivf_pq_turn(self, conv_id, qvec, turn):
-        cfg = self.cfg
-        if cfg.strategy == "plain":
-            # B=1 call into the (batch-size-stable) batched path keeps
-            # sequential and batched plain serving bit-identical
-            v, i, st = toploc.ivf_pq_plain_batch(
-                self.ivf_pq, qvec[None], nprobe=cfg.nprobe, k=cfg.k,
-                rerank=cfg.rerank, scan=self._pq_scan)
-            return v[0], i[0], jax.tree.map(lambda a: a[0], st)
-        if turn == 0 or conv_id not in self.sessions:
-            v, i, sess, stats = toploc.ivf_pq_start(
-                self.ivf_pq, qvec, h=cfg.h, nprobe=cfg.nprobe, k=cfg.k,
-                rerank=cfg.rerank, scan=self._pq_scan)
-            self.sessions[conv_id] = sess
-            return v, i, stats
-        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
-        v, i, sess, stats = toploc.ivf_pq_step(
-            self.ivf_pq, self.sessions[conv_id], qvec,
-            nprobe=cfg.nprobe, k=cfg.k, alpha=alpha, rerank=cfg.rerank,
-            scan=self._pq_scan)
-        self.sessions[conv_id] = sess
-        return v, i, stats
-
-    def _hnsw_turn(self, conv_id, qvec, turn):
-        cfg = self.cfg
-        if cfg.strategy == "plain":
-            v, i, nd = (self._hnsw_search or _hnsw.search)(
-                self.hnsw, qvec[None], ef=cfg.ef_search, k=cfg.k)
-            stats = toploc.TurnStats(
-                jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
-                nd[0], jnp.asarray(0, jnp.int32),
-                jnp.asarray(-1, jnp.int32), jnp.asarray(False))
-            return v[0], i[0], stats
-        if turn == 0 or conv_id not in self.sessions:
-            v, i, sess, stats = toploc.hnsw_start(
-                self.hnsw, qvec, ef=cfg.ef_search, k=cfg.k, up=cfg.up,
-                search=self._hnsw_search)
-            self.sessions[conv_id] = sess
-            return v, i, stats
-        v, i, sess, stats = toploc.hnsw_step(
-            self.hnsw, self.sessions[conv_id], qvec,
-            ef=cfg.ef_search, k=cfg.k, search=self._hnsw_search)
-        self.sessions[conv_id] = sess
-        return v, i, stats
-
-class BatchedConversationalSearchEngine(_EngineAccounting,
-                                        _ShardedRetrievalMixin):
+class BatchedConversationalSearchEngine(_EngineBase):
     """Micro-batched multi-conversation serving front door.
 
     Requests flow ``submit() → MicroBatcher queue → flush → one padded
@@ -307,44 +288,31 @@ class BatchedConversationalSearchEngine(_EngineAccounting,
                  n_slots: int = 256, max_batch: int = 32,
                  max_wait_s: float = 0.002,
                  buckets: Sequence[int] = (1, 2, 4, 8, 16, 32)):
-        self.cfg = config
-        self.ivf = ivf_index
-        self.hnsw = hnsw_index
-        self.ivf_pq = ivf_pq_index
-        self.doc_vecs = doc_vecs
-        _check_indexes(config, ivf_index, hnsw_index, doc_vecs,
-                       ivf_pq_index)
-        self._setup_sharding(config)
+        self._setup(config, ivf_index=ivf_index, hnsw_index=hnsw_index,
+                    ivf_pq_index=ivf_pq_index, doc_vecs=doc_vecs)
         # a wave holds up to max_batch distinct conversations, each
         # needing its own live slot — fewer slots would make acquire()
         # evict a conversation acquired earlier in the SAME wave and
         # scatter two rows into one slot (silent session corruption)
-        if config.backend != "exact" and n_slots < max_batch:
+        if self.backend.stateful and n_slots < max_batch:
             raise ValueError(
                 f"n_slots ({n_slots}) must be >= max_batch ({max_batch})")
         # ensure the bucket table covers max_batch so a full wave never
         # pads to a bucket smaller than itself
         buckets = tuple(sorted(set(buckets) | {max_batch}))
-        # session slabs replicate over the corpus mesh (sessions are the
-        # replicated TopLoc state; only the corpus shards)
-        if config.backend == "ivf":
-            self.store = _sessions.ivf_session_store(
-                self.ivf, h=config.h, nprobe=config.nprobe,
-                n_slots=n_slots, mesh=self.mesh)
-        elif config.backend == "ivf_pq":
-            self.store = _sessions.ivf_pq_session_store(
-                self.ivf_pq, h=config.h, nprobe=config.nprobe,
-                n_slots=n_slots, mesh=self.mesh)
-        elif config.backend == "hnsw":
-            self.store = _sessions.hnsw_session_store(
-                self.hnsw, n_slots=n_slots, mesh=self.mesh)
-        else:
-            self.store = None            # exact backend is stateless
+        # session slab replicates over the corpus mesh (sessions are the
+        # replicated TopLoc state; only the corpus shards); stateless
+        # backends get no store
+        self.store = _sessions.store_for_backend(
+            self.backend, self.index, n_slots=n_slots, mesh=self.mesh)
+        self._cache = self._make_cache(n_slots=n_slots)
+        if self._cache is not None:
+            # a freed session slot must also drop its cache row, or the
+            # slot's next conversation could hit another user's entry
+            self.store.add_slot_freed_listener(self._cache.clear_slot)
         self.batcher = MicroBatcher(self._process_batch,
                                     max_batch=max_batch,
                                     max_wait_s=max_wait_s, buckets=buckets)
-        self.turn_count: Dict[str, int] = {}
-        self.records: List[TurnRecord] = []
 
     # -- public API ---------------------------------------------------
 
@@ -415,9 +383,10 @@ class BatchedConversationalSearchEngine(_EngineAccounting,
         qs = [np.asarray(r.payload, np.float32) for _, r in wave]
         q = jnp.asarray(np.stack(qs + [np.zeros_like(qs[0])] * (bb - b)))
 
-        if cfg.backend == "exact":
-            v, i = _ivf.exact_search(self.doc_vecs, q, cfg.k)
-            stats = None
+        hit = None
+        if not self._sessioned:
+            v, i, stats = toploc.plain_batch(self.backend, self.index, q,
+                                             k=cfg.k)
         else:
             # padded rows run against the trash slot with
             # is_first=False: their zeroed trash session never trips the
@@ -430,73 +399,36 @@ class BatchedConversationalSearchEngine(_EngineAccounting,
             is_first = np.zeros((bb,), bool)
             for row, (_, r) in enumerate(wave):
                 slots[row], is_first[row] = self.store.acquire(r.conv_id)
-            if cfg.backend == "ivf":
-                v, i, stats = self._ivf_wave(q, slots, is_first)
-            elif cfg.backend == "ivf_pq":
-                v, i, stats = self._ivf_pq_wave(q, slots, is_first)
-            else:
-                v, i, stats = self._hnsw_wave(q, slots, is_first)
+            sess = self.store.gather(slots)
+            v, i, new_sess, stats = toploc.step_batch(
+                self.backend, self.index, sess, q, k=self._k_fetch,
+                is_first=jnp.asarray(is_first))
+            if self._cache is not None:
+                # fused probe over the cache slab: hit rows take the
+                # cached answer, zero their work counters, and keep the
+                # pre-step session (the sequential engine skips the
+                # dispatch entirely on a hit — same observable state)
+                v, i, new_sess, stats, hit = self._cache.fuse(
+                    slots, q, v, i, sess, new_sess, stats)
+                hit = np.asarray(jax.device_get(hit))
+                self._cache.hits += int(hit[:b].sum())
+                self._cache.misses += int(b - hit[:b].sum())
+            self.store.scatter(slots, new_sess)
 
         v = np.asarray(jax.device_get(v))
         i = np.asarray(jax.device_get(i))
-        stats = (None if stats is None else
-                 jax.tree.map(lambda a: np.asarray(jax.device_get(a)), stats))
+        stats = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), stats)
         now = time.perf_counter()
         for row, (j, r) in enumerate(wave):
             turn = self.turn_count.get(r.conv_id, 0)
             self.turn_count[r.conv_id] = turn + 1
-            if stats is None:
-                rec = TurnRecord(r.conv_id, turn, now - r.enqueue_t,
-                                 0, 0, 0, False, -1)
-            else:
-                rec = TurnRecord(
-                    r.conv_id, turn, now - r.enqueue_t,
-                    int(stats.centroid_dists[row]),
-                    int(stats.list_dists[row]),
-                    int(stats.graph_dists[row]),
-                    bool(stats.refreshed[row]), int(stats.i0[row]),
-                    int(stats.code_dists[row]))
+            rec = TurnRecord(
+                r.conv_id, turn, now - r.enqueue_t,
+                int(stats.centroid_dists[row]),
+                int(stats.list_dists[row]),
+                int(stats.graph_dists[row]),
+                bool(stats.refreshed[row]), int(stats.i0[row]),
+                int(stats.code_dists[row]),
+                cache_hit=bool(hit[row]) if hit is not None else False)
             self.records.append(rec)
             results[j] = (v[row], i[row])
-
-    def _ivf_wave(self, q, slots, is_first):
-        cfg = self.cfg
-        if cfg.strategy == "plain":
-            return toploc.ivf_plain_batch(self.ivf, q, nprobe=cfg.nprobe,
-                                          k=cfg.k, scan=self._ivf_scan)
-        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
-        sess = self.store.gather(slots)
-        v, i, new_sess, stats = toploc.ivf_step_batch(
-            self.ivf, sess, q, nprobe=cfg.nprobe, k=cfg.k, alpha=alpha,
-            is_first=jnp.asarray(is_first), scan=self._ivf_scan)
-        self.store.scatter(slots, new_sess)
-        return v, i, stats
-
-    def _ivf_pq_wave(self, q, slots, is_first):
-        cfg = self.cfg
-        if cfg.strategy == "plain":
-            return toploc.ivf_pq_plain_batch(self.ivf_pq, q,
-                                             nprobe=cfg.nprobe, k=cfg.k,
-                                             rerank=cfg.rerank,
-                                             scan=self._pq_scan)
-        alpha = cfg.alpha if cfg.strategy == "toploc+" else -1.0
-        sess = self.store.gather(slots)
-        v, i, new_sess, stats = toploc.ivf_pq_step_batch(
-            self.ivf_pq, sess, q, nprobe=cfg.nprobe, k=cfg.k, alpha=alpha,
-            rerank=cfg.rerank, is_first=jnp.asarray(is_first),
-            scan=self._pq_scan)
-        self.store.scatter(slots, new_sess)
-        return v, i, stats
-
-    def _hnsw_wave(self, q, slots, is_first):
-        cfg = self.cfg
-        if cfg.strategy == "plain":
-            return toploc.hnsw_plain_batch(self.hnsw, q, ef=cfg.ef_search,
-                                           k=cfg.k,
-                                           search=self._hnsw_search)
-        sess = self.store.gather(slots)
-        v, i, new_sess, stats = toploc.hnsw_step_batch(
-            self.hnsw, sess, q, ef=cfg.ef_search, k=cfg.k, up=cfg.up,
-            is_first=jnp.asarray(is_first), search=self._hnsw_search)
-        self.store.scatter(slots, new_sess)
-        return v, i, stats

@@ -93,6 +93,7 @@ class SessionStore:
             self._zero_row = jax.tree.map(rep, self._zero_row)
         self._free = list(range(n_slots - 1, -1, -1))   # pop() → slot 0 first
         self._slot_of: "OrderedDict[str, int]" = OrderedDict()  # LRU order
+        self._slot_freed_listeners: list = []
         self.allocs = 0
         self.evictions = 0
         self.hits = 0
@@ -103,6 +104,19 @@ class SessionStore:
     def trash_slot(self) -> int:
         """Slot absorbing padded batch rows; never mapped to a conv."""
         return self.n_slots
+
+    def add_slot_freed_listener(self, fn) -> None:
+        """Register ``fn(slot)`` to run whenever a slot leaves its
+        conversation (release or LRU eviction), *after* the slab row has
+        been zeroed.  Companion per-slot state — e.g. the serving
+        result cache's slab (``serving.result_cache``) — hooks in here
+        so a recycled slot can never leak another conversation's
+        entries."""
+        self._slot_freed_listeners.append(fn)
+
+    def _notify_slot_freed(self, slot: int) -> None:
+        for fn in self._slot_freed_listeners:
+            fn(slot)
 
     @property
     def occupancy(self) -> int:
@@ -132,6 +146,7 @@ class SessionStore:
             # wiped before the slot changes hands, so the new occupant
             # can never read the evicted conversation's cache
             self.scatter([lru_slot], self._zero_row)
+            self._notify_slot_freed(lru_slot)
         slot = self._free.pop()
         self._slot_of[conv_id] = slot
         self.allocs += 1
@@ -153,6 +168,7 @@ class SessionStore:
         if slot is not None:
             self._free.append(slot)
             self.scatter([slot], self._zero_row)
+            self._notify_slot_freed(slot)
         return slot
 
     def stats(self) -> Dict[str, int]:
@@ -180,19 +196,31 @@ class SessionStore:
             warnings.filterwarnings("ignore", message=".*[Dd]onat")
             self._slab = _scatter_slab(self._slab, idx, sessions)
 
+    def clear(self, slots: Sequence[int]) -> None:
+        """Zero the given slab rows (scatter the template row over each)."""
+        for slot in slots:
+            self.scatter([slot], self._zero_row)
+
+
+def store_for_backend(backend: Any, index: Any, *, n_slots: int,
+                      mesh: Any = None) -> Optional[SessionStore]:
+    """Slab sized by ``backend.session_template(index)`` — the generic
+    constructor both engines use (``core.backend`` registry).  Returns
+    None for stateless backends (no per-conversation state)."""
+    template = backend.session_template(index)
+    if template is None:
+        return None
+    return SessionStore(template, n_slots, mesh=mesh)
+
 
 def ivf_session_store(index: "_ivf.IVFIndex | _pq.IVFPQIndex", *, h: int,
                       nprobe: int, n_slots: int,
                       mesh: Any = None) -> SessionStore:
     """Slab of ``toploc.IVFSession`` rows sized for ``index`` (reads
     only the ``.d``/``.centroids`` fields both index types share)."""
-    template = toploc.IVFSession(
-        cache_ids=jnp.zeros((h,), jnp.int32),
-        cache_vecs=jnp.zeros((h, index.d), index.centroids.dtype),
-        anchor_sel=jnp.zeros((nprobe,), jnp.int32),
-        refreshes=jnp.zeros((), jnp.int32),
-        turn=jnp.zeros((), jnp.int32))
-    return SessionStore(template, n_slots, mesh=mesh)
+    from repro.core import backend as _backend
+    return store_for_backend(_backend.IVFBackend(h=h, nprobe=nprobe),
+                             index, n_slots=n_slots, mesh=mesh)
 
 
 def ivf_pq_session_store(index: _pq.IVFPQIndex, *, h: int, nprobe: int,
@@ -211,8 +239,6 @@ def ivf_pq_session_store(index: _pq.IVFPQIndex, *, h: int, nprobe: int,
 def hnsw_session_store(index: _hnsw.HNSWIndex, *, n_slots: int,
                        mesh: Any = None) -> SessionStore:
     """Slab of ``toploc.HNSWSession`` rows."""
-    del index  # layout is index-independent; kept for API symmetry
-    template = toploc.HNSWSession(
-        entry_point=jnp.zeros((), jnp.int32),
-        turn=jnp.zeros((), jnp.int32))
-    return SessionStore(template, n_slots, mesh=mesh)
+    from repro.core import backend as _backend
+    return store_for_backend(_backend.HNSWBackend(), index,
+                             n_slots=n_slots, mesh=mesh)

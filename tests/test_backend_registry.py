@@ -1,0 +1,261 @@
+"""RetrievalBackend registry: bit-identity vs the legacy entry points.
+
+The refactor contract (PR-5 acceptance): the generic registry drivers
+``toploc.start/step/plain(+_batch)/conversation`` produce *bit-identical*
+scores, ids, sessions and ``TurnStats`` to the legacy prefixed clones
+they replaced, for all three backends, across sequential, batched and
+whole-conversation paths — and every legacy name now warns.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as B
+from repro.core import toploc
+
+K, H, NPROBE, EF, UP, RR, ALPHA = 10, 16, 4, 16, 2, 32, 0.3
+BATCH = 4
+
+
+def _legacy(fn, *args, **kwargs):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kwargs)
+
+
+def _tree_equal(a, b, ctx=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(ctx))
+
+
+# ----------------------------------------------------------- registry
+
+def test_registry_lists_all_backends():
+    assert set(B.names()) >= {"ivf", "ivf_pq", "hnsw", "exact"}
+    assert B.get("ivf") is B.IVFBackend
+    with pytest.raises(ValueError, match="unknown retrieval backend"):
+        B.get("faiss")
+
+
+def test_make_filters_unknown_knobs():
+    bk = B.make("ivf", h=H, nprobe=NPROBE, alpha=ALPHA, rerank=99,
+                ef=123, up=7)
+    assert bk == B.IVFBackend(h=H, nprobe=NPROBE, alpha=ALPHA)
+    pk = B.make("ivf_pq", h=H, nprobe=NPROBE, alpha=-1.0, rerank=RR,
+                ef=123)
+    assert pk.rerank == RR
+    hk = B.make("hnsw", ef=EF, up=UP, h=H)
+    assert hk == B.HNSWBackend(ef=EF, up=UP)
+
+
+def test_backends_are_hashable_jit_static():
+    """A backend is a static jit argument: equal knobs ⇒ equal hash ⇒
+    one compiled program per configuration."""
+    a = B.IVFBackend(h=H, nprobe=NPROBE)
+    b = B.IVFBackend(h=H, nprobe=NPROBE)
+    assert a == b and hash(a) == hash(b)
+    assert a != B.IVFBackend(h=H, nprobe=NPROBE + 1)
+
+
+def test_every_legacy_alias_warns(ivf_index, small_corpus):
+    q0 = jnp.asarray(small_corpus.conversations[0, 0])
+    with pytest.warns(DeprecationWarning, match="ivf_start is deprecated"):
+        toploc.ivf_start(ivf_index, q0, h=H, nprobe=NPROBE, k=K)
+    with pytest.warns(DeprecationWarning, match="core.backend registry"):
+        toploc.ivf_plain_batch(ivf_index, q0[None], nprobe=NPROBE, k=K)
+    conv = jnp.asarray(small_corpus.conversations[0])
+    with pytest.warns(DeprecationWarning, match="ivf_conversation"):
+        toploc.ivf_conversation(ivf_index, conv, h=H, nprobe=NPROBE, k=K)
+
+
+# ---------------------------------------------- sequential bit-identity
+
+@pytest.mark.parametrize("alpha", [-1.0, ALPHA])
+def test_ivf_registry_matches_legacy_sequential(ivf_index, small_corpus,
+                                                alpha):
+    conv = jnp.asarray(small_corpus.conversations[0])
+    bk = B.IVFBackend(h=H, nprobe=NPROBE, alpha=alpha)
+    ref = _legacy(toploc.ivf_start, ivf_index, conv[0], h=H,
+                  nprobe=NPROBE, k=K)
+    got = toploc.start(bk, ivf_index, conv[0], k=K)
+    _tree_equal(ref, got, "start")
+    sess = got[2]
+    for t in range(1, conv.shape[0]):
+        ref = _legacy(toploc.ivf_step, ivf_index, sess, conv[t],
+                      nprobe=NPROBE, k=K, alpha=alpha)
+        got = toploc.step(bk, ivf_index, sess, conv[t], k=K)
+        _tree_equal(ref, got, ("step", t))
+        sess = got[2]
+
+
+def test_ivf_pq_registry_matches_legacy_sequential(ivf_pq_index,
+                                                   small_corpus):
+    conv = jnp.asarray(small_corpus.conversations[1])
+    bk = B.IVFPQBackend(h=H, nprobe=NPROBE, alpha=ALPHA, rerank=RR)
+    ref = _legacy(toploc.ivf_pq_start, ivf_pq_index, conv[0], h=H,
+                  nprobe=NPROBE, k=K, rerank=RR)
+    got = toploc.start(bk, ivf_pq_index, conv[0], k=K)
+    _tree_equal(ref, got, "pq start")
+    sess = got[2]
+    for t in range(1, conv.shape[0]):
+        ref = _legacy(toploc.ivf_pq_step, ivf_pq_index, sess, conv[t],
+                      nprobe=NPROBE, k=K, alpha=ALPHA, rerank=RR)
+        got = toploc.step(bk, ivf_pq_index, sess, conv[t], k=K)
+        _tree_equal(ref, got, ("pq step", t))
+        sess = got[2]
+
+
+def test_hnsw_registry_matches_legacy_sequential(hnsw_index, small_corpus):
+    conv = jnp.asarray(small_corpus.conversations[2])
+    bk = B.HNSWBackend(ef=EF, up=UP)
+    ref = _legacy(toploc.hnsw_start, hnsw_index, conv[0], ef=EF, k=K,
+                  up=UP)
+    got = toploc.start(bk, hnsw_index, conv[0], k=K)
+    _tree_equal(ref, got, "hnsw start")
+    sess = got[2]
+    for t in range(1, conv.shape[0]):
+        ref = _legacy(toploc.hnsw_step, hnsw_index, sess, conv[t], ef=EF,
+                      k=K)
+        got = toploc.step(bk, hnsw_index, sess, conv[t], k=K)
+        _tree_equal(ref, got, ("hnsw step", t))
+        sess = got[2]
+
+
+# ------------------------------------------------- batched bit-identity
+
+def test_ivf_registry_matches_legacy_batched(ivf_index, small_corpus):
+    q0 = jnp.asarray(small_corpus.conversations[:BATCH, 0])
+    q1 = jnp.asarray(small_corpus.conversations[:BATCH, 1])
+    bk = B.IVFBackend(h=H, nprobe=NPROBE, alpha=ALPHA)
+    ref = _legacy(toploc.ivf_start_batch, ivf_index, q0, h=H,
+                  nprobe=NPROBE, k=K)
+    got = toploc.start_batch(bk, ivf_index, q0, k=K)
+    _tree_equal(ref, got, "start_batch")
+    sess = got[2]
+    first = jnp.asarray([True, False, False, True])
+    ref = _legacy(toploc.ivf_step_batch, ivf_index, sess, q1,
+                  nprobe=NPROBE, k=K, alpha=ALPHA, is_first=first)
+    got = toploc.step_batch(bk, ivf_index, sess, q1, k=K, is_first=first)
+    _tree_equal(ref, got, "step_batch")
+    ref = _legacy(toploc.ivf_plain_batch, ivf_index, q0, nprobe=NPROBE,
+                  k=K)
+    got = toploc.plain_batch(B.IVFBackend(nprobe=NPROBE), ivf_index, q0,
+                             k=K)
+    _tree_equal(ref, got, "plain_batch")
+
+
+def test_ivf_pq_registry_matches_legacy_batched(ivf_pq_index,
+                                                small_corpus):
+    q0 = jnp.asarray(small_corpus.conversations[:BATCH, 0])
+    q1 = jnp.asarray(small_corpus.conversations[:BATCH, 1])
+    bk = B.IVFPQBackend(h=H, nprobe=NPROBE, alpha=ALPHA, rerank=RR)
+    ref = _legacy(toploc.ivf_pq_start_batch, ivf_pq_index, q0, h=H,
+                  nprobe=NPROBE, k=K, rerank=RR)
+    got = toploc.start_batch(bk, ivf_pq_index, q0, k=K)
+    _tree_equal(ref, got, "pq start_batch")
+    sess = got[2]
+    ref = _legacy(toploc.ivf_pq_step_batch, ivf_pq_index, sess, q1,
+                  nprobe=NPROBE, k=K, alpha=ALPHA, rerank=RR)
+    got = toploc.step_batch(bk, ivf_pq_index, sess, q1, k=K)
+    _tree_equal(ref, got, "pq step_batch")
+    ref = _legacy(toploc.ivf_pq_plain_batch, ivf_pq_index, q0,
+                  nprobe=NPROBE, k=K, rerank=RR)
+    got = toploc.plain_batch(B.IVFPQBackend(nprobe=NPROBE, rerank=RR),
+                             ivf_pq_index, q0, k=K)
+    _tree_equal(ref, got, "pq plain_batch")
+
+
+def test_hnsw_registry_matches_legacy_batched(hnsw_index, small_corpus):
+    q0 = jnp.asarray(small_corpus.conversations[:BATCH, 0])
+    q1 = jnp.asarray(small_corpus.conversations[:BATCH, 1])
+    bk = B.HNSWBackend(ef=EF, up=UP)
+    ref = _legacy(toploc.hnsw_start_batch, hnsw_index, q0, ef=EF, k=K,
+                  up=UP)
+    got = toploc.start_batch(bk, hnsw_index, q0, k=K)
+    _tree_equal(ref, got, "hnsw start_batch")
+    sess = got[2]
+    first = jnp.asarray([False, True, True, False])
+    ref = _legacy(toploc.hnsw_step_batch, hnsw_index, sess, q1, ef=EF,
+                  k=K, up=UP, is_first=first)
+    got = toploc.step_batch(bk, hnsw_index, sess, q1, k=K, is_first=first)
+    _tree_equal(ref, got, "hnsw step_batch")
+    ref = _legacy(toploc.hnsw_plain_batch, hnsw_index, q0, ef=EF, k=K)
+    got = toploc.plain_batch(B.HNSWBackend(ef=EF), hnsw_index, q0, k=K)
+    _tree_equal(ref, got, "hnsw plain_batch")
+
+
+# -------------------------------------------- conversation bit-identity
+
+@pytest.mark.parametrize("mode", ["toploc", "plain"])
+def test_ivf_conversation_matches_legacy(ivf_index, small_corpus, mode):
+    conv = jnp.asarray(small_corpus.conversations[0])
+    bk = B.IVFBackend(h=H, nprobe=NPROBE, alpha=ALPHA)
+    ref = _legacy(toploc.ivf_conversation, ivf_index, conv, h=H,
+                  nprobe=NPROBE, k=K, alpha=ALPHA, mode=mode)
+    got = toploc.conversation(bk, ivf_index, conv, k=K, mode=mode)
+    _tree_equal(ref, got, mode)
+
+
+@pytest.mark.parametrize("mode", ["toploc", "plain"])
+def test_ivf_pq_conversation_matches_legacy(ivf_pq_index, small_corpus,
+                                            mode):
+    conv = jnp.asarray(small_corpus.conversations[1])
+    bk = B.IVFPQBackend(h=H, nprobe=NPROBE, alpha=ALPHA, rerank=RR)
+    ref = _legacy(toploc.ivf_pq_conversation, ivf_pq_index, conv, h=H,
+                  nprobe=NPROBE, k=K, alpha=ALPHA, rerank=RR, mode=mode)
+    got = toploc.conversation(bk, ivf_pq_index, conv, k=K, mode=mode)
+    _tree_equal(ref, got, mode)
+
+
+@pytest.mark.parametrize("mode", ["toploc", "plain", "adaptive"])
+def test_hnsw_conversation_matches_legacy(hnsw_index, small_corpus, mode):
+    conv = jnp.asarray(small_corpus.conversations[2])
+    bk = B.HNSWBackend(ef=EF, up=UP, adaptive=mode == "adaptive")
+    ref = _legacy(toploc.hnsw_conversation, hnsw_index, conv, ef=EF, k=K,
+                  up=UP, mode=mode)
+    got = toploc.conversation(bk, hnsw_index, conv, k=K,
+                              mode="plain" if mode == "plain" else
+                              "toploc")
+    _tree_equal(ref, got, mode)
+
+
+# ------------------------------------------------------ exact + shapes
+
+def test_exact_backend_plain(small_corpus):
+    docs = jnp.asarray(small_corpus.doc_vecs)
+    q = jnp.asarray(small_corpus.conversations[0, 0])
+    bk = B.ExactBackend()
+    from repro.core import ivf as _ivf
+    ev, ei = _ivf.exact_search(docs, q[None], K)
+    v, i, st = toploc.plain(bk, docs, q, k=K)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ev[0]))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ei[0]))
+    assert int(st.centroid_dists) == 0 and int(st.i0) == -1
+    assert not bk.stateful and bk.session_template(docs) is None
+
+
+def test_session_templates_match_store_layouts(ivf_index, hnsw_index):
+    t = B.IVFBackend(h=H, nprobe=NPROBE).session_template(ivf_index)
+    assert t.cache_ids.shape == (H,)
+    assert t.cache_vecs.shape == (H, ivf_index.d)
+    assert t.anchor_sel.shape == (NPROBE,)
+    t = B.HNSWBackend().session_template(hnsw_index)
+    assert t.entry_point.shape == () and t.turn.shape == ()
+
+
+def test_corpus_vectors_resolution(ivf_index, ivf_pq_index, hnsw_index,
+                                   small_corpus):
+    docs = jnp.asarray(small_corpus.doc_vecs)
+    assert B.IVFBackend().corpus_vectors(ivf_index) is None
+    assert B.IVFPQBackend().corpus_vectors(ivf_pq_index) is \
+        ivf_pq_index.doc_vecs
+    assert B.HNSWBackend().corpus_vectors(hnsw_index) is \
+        hnsw_index.vectors
+    assert B.ExactBackend().corpus_vectors(docs) is docs

@@ -1,16 +1,22 @@
-"""TopLoc behaviour: the paper's mechanisms (§2) as testable invariants."""
+"""TopLoc behaviour: the paper's mechanisms (§2) as testable invariants.
+
+Driven through the ``core.backend`` registry API (the legacy prefixed
+entry points are pinned against it in tests/test_backend_registry.py).
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import hnsw, ivf, toploc
+from repro.core.backend import HNSWBackend, IVFBackend
 from repro.core.topk import intersect_count
 
 
 def test_ivf_start_builds_top_h_cache(ivf_index, small_corpus):
     q0 = jnp.asarray(small_corpus.conversations[0, 0])
-    _, _, sess, stats = toploc.ivf_start(ivf_index, q0, h=8, nprobe=4, k=10)
+    bk = IVFBackend(h=8, nprobe=4)
+    _, _, sess, stats = toploc.start(bk, ivf_index, q0, k=10)
     csims = np.asarray(ivf_index.centroids @ q0)
     expect = set(np.argsort(-csims)[:8].tolist())
     assert set(np.asarray(sess.cache_ids).tolist()) == expect
@@ -19,18 +25,17 @@ def test_ivf_start_builds_top_h_cache(ivf_index, small_corpus):
 
 def test_ivf_step_cached_work(ivf_index, small_corpus):
     conv = jnp.asarray(small_corpus.conversations[0])
-    _, _, sess, _ = toploc.ivf_start(ivf_index, conv[0], h=8, nprobe=4,
-                                     k=10)
-    _, _, sess, stats = toploc.ivf_step(ivf_index, sess, conv[1],
-                                        nprobe=4, k=10, alpha=-1.0)
+    bk = IVFBackend(h=8, nprobe=4, alpha=-1.0)
+    _, _, sess, _ = toploc.start(bk, ivf_index, conv[0], k=10)
+    _, _, sess, stats = toploc.step(bk, ivf_index, sess, conv[1], k=10)
     assert int(stats.centroid_dists) == 8               # h, not p
     assert not bool(stats.refreshed)
 
 
 def test_ivf_static_cache_never_refreshes(ivf_index, small_corpus):
     conv = jnp.asarray(small_corpus.conversations[1])
-    _, _, stats = toploc.ivf_conversation(ivf_index, conv, h=8, nprobe=4,
-                                          k=10, alpha=-1.0)
+    bk = IVFBackend(h=8, nprobe=4, alpha=-1.0)
+    _, _, stats = toploc.conversation(bk, ivf_index, conv, k=10)
     assert not np.any(np.asarray(stats.refreshed)[1:])
 
 
@@ -41,8 +46,9 @@ def test_ivf_plus_refreshes_on_topic_shift(ivf_index, small_corpus):
     c1 = small_corpus.topic_centers[
         np.argmin(small_corpus.topic_centers @ c0)]      # farthest topic
     conv = np.stack([c0, c0, c1, c1]).astype(np.float32)
-    _, _, stats = toploc.ivf_conversation(
-        ivf_index, jnp.asarray(conv), h=8, nprobe=4, k=10, alpha=0.5)
+    bk = IVFBackend(h=8, nprobe=4, alpha=0.5)
+    _, _, stats = toploc.conversation(bk, ivf_index, jnp.asarray(conv),
+                                      k=10)
     refreshed = np.asarray(stats.refreshed)
     assert refreshed[2] or refreshed[3], (
         f"i0={np.asarray(stats.i0)}, refreshed={refreshed}")
@@ -56,10 +62,9 @@ def test_i0_definition_matches_eq1(ivf_index, small_corpus):
     """|I0| = |top_np(qj, C0) ∩ top_np(q0, C0)| computed independently."""
     conv = jnp.asarray(small_corpus.conversations[2])
     h, npb = 8, 4
-    _, _, sess, _ = toploc.ivf_start(ivf_index, conv[0], h=h, nprobe=npb,
-                                     k=10)
-    _, _, _, stats = toploc.ivf_step(ivf_index, sess, conv[1],
-                                     nprobe=npb, k=10, alpha=-1.0)
+    bk = IVFBackend(h=h, nprobe=npb, alpha=-1.0)
+    _, _, sess, _ = toploc.start(bk, ivf_index, conv[0], k=10)
+    _, _, _, stats = toploc.step(bk, ivf_index, sess, conv[1], k=10)
     cache = np.asarray(sess.cache_ids)
     cvecs = np.asarray(ivf_index.centroids)[cache]
     top_qj = cache[np.argsort(-(cvecs @ np.asarray(conv[1])))[:npb]]
@@ -72,14 +77,14 @@ def test_toploc_reduces_work_and_holds_recall(ivf_index, small_corpus):
     """The paper's core claim, miniature: much less centroid work at
     comparable effectiveness on topically-local conversations."""
     docs = jnp.asarray(small_corpus.doc_vecs)
+    bk = IVFBackend(h=8, nprobe=4, alpha=0.1)
     tot_plain, tot_cached, rec_plain, rec_cached = 0, 0, [], []
     for c in range(small_corpus.conversations.shape[0]):
         conv = jnp.asarray(small_corpus.conversations[c])
         ev, ei = ivf.exact_search(docs, conv, 10)
-        v, i, st = toploc.ivf_conversation(ivf_index, conv, h=8, nprobe=4,
-                                           k=10, alpha=0.1)
-        vp, ip, stp = toploc.ivf_conversation(ivf_index, conv, h=8,
-                                              nprobe=4, k=10, mode="plain")
+        v, i, st = toploc.conversation(bk, ivf_index, conv, k=10)
+        vp, ip, stp = toploc.conversation(bk, ivf_index, conv, k=10,
+                                          mode="plain")
         tot_cached += int(np.asarray(st.centroid_dists).sum())
         tot_plain += int(np.asarray(stp.centroid_dists).sum())
         for t in range(conv.shape[0]):
@@ -92,21 +97,21 @@ def test_toploc_reduces_work_and_holds_recall(ivf_index, small_corpus):
 
 def test_hnsw_entry_point_session(hnsw_index, small_corpus):
     q0 = jnp.asarray(small_corpus.conversations[0, 0])
-    v, i, sess, stats = toploc.hnsw_start(hnsw_index, q0, ef=16, k=5, up=2)
+    bk = HNSWBackend(ef=16, up=2)
+    v, i, sess, stats = toploc.start(bk, hnsw_index, q0, k=5)
     assert int(sess.entry_point) == int(i[0])
     q1 = jnp.asarray(small_corpus.conversations[0, 1])
-    v2, i2, sess2, stats2 = toploc.hnsw_step(hnsw_index, sess, q1,
-                                             ef=16, k=5)
+    v2, i2, sess2, stats2 = toploc.step(bk, hnsw_index, sess, q1, k=5)
     assert int(sess2.entry_point) == int(sess.entry_point)  # static anchor
     assert int(stats2.graph_dists) > 0
 
 
 def test_hnsw_conversation_work_reduction(hnsw_index, small_corpus):
     conv = jnp.asarray(small_corpus.conversations[0][:, :])
-    _, i_t, st = toploc.hnsw_conversation(hnsw_index, conv, ef=16, k=5,
-                                          up=2)
-    _, i_p, st_p = toploc.hnsw_conversation(hnsw_index, conv, ef=16, k=5,
-                                            mode="plain")
+    bk = HNSWBackend(ef=16, up=2)
+    _, i_t, st = toploc.conversation(bk, hnsw_index, conv, k=5)
+    _, i_p, st_p = toploc.conversation(bk, hnsw_index, conv, k=5,
+                                       mode="plain")
     # follow-up turns must do less graph work than plain (no descent)
     t_work = np.asarray(st.graph_dists)[1:].mean()
     p_work = np.asarray(st_p.graph_dists)[1:].mean()

@@ -124,8 +124,9 @@ def test_compressed_psum_under_shard_map(mesh1, rng):
 
 def test_adaptive_entry_point_mode(hnsw_index, small_corpus):
     from repro.core import toploc
+    from repro.core.backend import HNSWBackend
     conv = jnp.asarray(small_corpus.conversations[0])
-    v, i, st = toploc.hnsw_conversation(hnsw_index, conv, ef=16, k=5,
-                                        mode="adaptive")
+    v, i, st = toploc.conversation(HNSWBackend(ef=16, adaptive=True),
+                                   hnsw_index, conv, k=5)
     assert bool(jnp.isfinite(v).all())
     assert np.asarray(st.graph_dists)[1:].min() > 0

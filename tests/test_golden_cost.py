@@ -24,8 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hnsw, ivf, pq, toploc
+from repro.core.backend import HNSWBackend, IVFBackend, IVFPQBackend
 
 H, NPROBE, K, ALPHA, RERANK, EF, UP = 16, 4, 10, 0.3, 32, 16, 2
+IVF_BK = IVFBackend(h=H, nprobe=NPROBE, alpha=ALPHA)
+PQ_BK = IVFPQBackend(h=H, nprobe=NPROBE, alpha=ALPHA, rerank=RERANK)
+HNSW_BK = HNSWBackend(ef=EF, up=UP)
 
 GOLD_IVF = {
     "centroid_dists": [32, 16, 16, 16, 16, 48, 16, 16],
@@ -76,21 +80,19 @@ def _check(stats: toploc.TurnStats, gold: dict) -> None:
 
 def test_golden_ivf_counters(golden_setup):
     conv, fidx, _, _ = golden_setup
-    _, _, st = toploc.ivf_conversation(fidx, conv, h=H, nprobe=NPROBE,
-                                       k=K, alpha=ALPHA)
+    _, _, st = toploc.conversation(IVF_BK, fidx, conv, k=K)
     _check(st, GOLD_IVF)
 
 
 def test_golden_ivf_pq_counters(golden_setup):
     conv, _, pqi, _ = golden_setup
-    _, _, st = toploc.ivf_pq_conversation(pqi, conv, h=H, nprobe=NPROBE,
-                                          k=K, alpha=ALPHA, rerank=RERANK)
+    _, _, st = toploc.conversation(PQ_BK, pqi, conv, k=K)
     _check(st, GOLD_IVF_PQ)
 
 
 def test_golden_hnsw_counters(golden_setup):
     conv, _, _, hidx = golden_setup
-    _, _, st = toploc.hnsw_conversation(hidx, conv, ef=EF, k=K, up=UP)
+    _, _, st = toploc.conversation(HNSW_BK, hidx, conv, k=K)
     _check(st, GOLD_HNSW)
 
 
@@ -99,11 +101,8 @@ def test_golden_pq_cost_identity(golden_setup):
     SAME lists as float IVF (code_dists == float list_dists, same
     refresh schedule) while float work collapses to R per turn."""
     conv, fidx, pqi, _ = golden_setup
-    _, _, st_f = toploc.ivf_conversation(fidx, conv, h=H, nprobe=NPROBE,
-                                         k=K, alpha=ALPHA)
-    _, _, st_q = toploc.ivf_pq_conversation(pqi, conv, h=H, nprobe=NPROBE,
-                                            k=K, alpha=ALPHA,
-                                            rerank=RERANK)
+    _, _, st_f = toploc.conversation(IVF_BK, fidx, conv, k=K)
+    _, _, st_q = toploc.conversation(PQ_BK, pqi, conv, k=K)
     np.testing.assert_array_equal(np.asarray(st_q.code_dists),
                                   np.asarray(st_f.list_dists))
     np.testing.assert_array_equal(np.asarray(st_q.centroid_dists),

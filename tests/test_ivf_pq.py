@@ -12,10 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ivf, pq, toploc
+from repro.core.backend import IVFBackend, IVFPQBackend
 from repro.kernels import ops, ref
 from repro.serving import ConversationalSearchEngine, ServingConfig
 
 K, H, NPROBE, RERANK = 10, 16, 4, 32
+PQBK = IVFPQBackend(h=H, nprobe=NPROBE, rerank=RERANK)
 
 
 # ------------------------------------------------------------- container
@@ -83,16 +85,15 @@ def test_ivf_pq_start_step_accounting(small_corpus, ivf_pq_index):
     counts only the R exact re-rank distances."""
     idx = ivf_pq_index
     conv = jnp.asarray(small_corpus.conversations[0])
-    v, i, sess, st = toploc.ivf_pq_start(idx, conv[0], h=H, nprobe=NPROBE,
-                                         k=K, rerank=RERANK)
+    v, i, sess, st = toploc.start(PQBK, idx, conv[0], k=K)
     assert v.shape == (K,) and i.shape == (K,)
     assert int(st.centroid_dists) == idx.p
     assert int(st.list_dists) == RERANK          # lists are bigger than R
     assert int(st.code_dists) > RERANK           # ADC touched every entry
     assert bool(st.refreshed)
-    v2, i2, sess2, st2 = toploc.ivf_pq_step(idx, sess, conv[1],
-                                            nprobe=NPROBE, k=K, alpha=0.3,
-                                            rerank=RERANK)
+    import dataclasses
+    v2, i2, sess2, st2 = toploc.step(
+        dataclasses.replace(PQBK, alpha=0.3), idx, sess, conv[1], k=K)
     assert int(st2.centroid_dists) in (H, H + idx.p)
     assert int(sess2.turn) == 2
     # both turns return valid doc ids
@@ -104,8 +105,7 @@ def test_ivf_pq_rerank_orders_by_exact_scores(small_corpus, ivf_pq_index):
     descending, and consistent with the returned ids."""
     idx = ivf_pq_index
     q = jnp.asarray(small_corpus.conversations[2, 0])
-    v, i, _, _ = toploc.ivf_pq_start(idx, q, h=H, nprobe=NPROBE, k=K,
-                                     rerank=RERANK)
+    v, i, _, _ = toploc.start(PQBK, idx, q, k=K)
     v, i = np.asarray(v), np.asarray(i)
     assert np.all(np.diff(v) <= 1e-6)
     exact = np.asarray(small_corpus.doc_vecs)[i] @ np.asarray(q)
@@ -121,8 +121,7 @@ def test_ivf_pq_topk_subset_of_adc_candidates(small_corpus, ivf_pq_index):
     tables = toploc._adc_tables(idx, q[None])
     _, cand = ops.pq_adc_scan(tables, idx.list_codes, idx.list_ids,
                               sel[None], RERANK)
-    v, i, _, _ = toploc.ivf_pq_start(idx, q, h=H, nprobe=NPROBE, k=K,
-                                     rerank=RERANK)
+    v, i, _, _ = toploc.start(PQBK, idx, q, k=K)
     assert set(np.asarray(i).tolist()) <= set(np.asarray(cand[0]).tolist())
 
 
@@ -130,14 +129,14 @@ def test_ivf_pq_conversation_modes(small_corpus, ivf_pq_index):
     idx = ivf_pq_index
     conv = jnp.asarray(small_corpus.conversations[0])
     T = conv.shape[0]
-    v, i, st = toploc.ivf_pq_conversation(idx, conv, h=H, nprobe=NPROBE,
-                                          k=K, alpha=0.3, rerank=RERANK)
+    import dataclasses
+    v, i, st = toploc.conversation(dataclasses.replace(PQBK, alpha=0.3),
+                                   idx, conv, k=K)
     assert i.shape == (T, K)
     # turn 0 pays p, follow-ups pay h (+p on refresh)
     cd = np.asarray(st.centroid_dists)
     assert cd[0] == idx.p and np.all(cd[1:] >= H)
-    pv, pi, pst = toploc.ivf_pq_conversation(idx, conv, h=H, nprobe=NPROBE,
-                                             k=K, mode="plain")
+    pv, pi, pst = toploc.conversation(PQBK, idx, conv, k=K, mode="plain")
     assert np.all(np.asarray(pst.centroid_dists) == idx.p)
     assert np.all(np.asarray(pst.code_dists) > 0)
 
@@ -158,10 +157,11 @@ def test_ivf_pq_recall_floor_vs_float(small_corpus, ivf_index,
         return np.mean([len(set(ids[j]) & set(ei[j])) / K
                         for j in range(ei.shape[0])])
 
-    _, fi, _ = jax.vmap(lambda c: toploc.ivf_conversation(
-        ivf_index, c, h=H, nprobe=NPROBE, k=K))(convs)
-    _, qi, _ = jax.vmap(lambda c: toploc.ivf_pq_conversation(
-        ivf_pq_index, c, h=H, nprobe=NPROBE, k=K, rerank=RERANK))(convs)
+    fbk = IVFBackend(h=H, nprobe=NPROBE)
+    _, fi, _ = jax.vmap(lambda c: toploc.conversation(
+        fbk, ivf_index, c, k=K))(convs)
+    _, qi, _ = jax.vmap(lambda c: toploc.conversation(
+        PQBK, ivf_pq_index, c, k=K))(convs)
     r_float, r_pq = recall(fi), recall(qi)
     assert r_pq >= 0.9 * r_float, (r_pq, r_float)
 
@@ -171,9 +171,7 @@ def test_ivf_pq_recall_floor_vs_float(small_corpus, ivf_index,
 def test_ivf_pq_engine_matches_library_path(small_corpus, ivf_pq_index):
     idx = ivf_pq_index
     conv = jnp.asarray(small_corpus.conversations[0])
-    _, ids_lib, _ = toploc.ivf_pq_conversation(idx, conv, h=H,
-                                               nprobe=NPROBE, k=K,
-                                               rerank=RERANK)
+    _, ids_lib, _ = toploc.conversation(PQBK, idx, conv, k=K)
     eng = ConversationalSearchEngine(
         ServingConfig(backend="ivf_pq", strategy="toploc", nprobe=NPROBE,
                       h=H, k=K, rerank=RERANK), ivf_pq_index=idx)

@@ -165,8 +165,9 @@ def test_ivf_pq_topk_subset_of_candidates(ivf_pq_index, seed, nprobe,
     _, cand = ops.pq_adc_scan(tables, idx.list_codes, idx.list_ids,
                               sel[None], max(10, min(rerank,
                                                      nprobe * idx.lmax)))
-    v, i, _, _ = toploc.ivf_pq_start(idx, q, h=16, nprobe=nprobe, k=10,
-                                     rerank=rerank)
+    from repro.core.backend import IVFPQBackend
+    v, i, _, _ = toploc.start(IVFPQBackend(h=16, nprobe=nprobe,
+                                           rerank=rerank), idx, q, k=10)
     returned = set(np.asarray(i).tolist()) - {-1}
     assert returned <= set(np.asarray(cand[0]).tolist()), (
         returned - set(np.asarray(cand[0]).tolist()))

@@ -1,0 +1,329 @@
+"""Session-level historical-embedding result cache (Frieder et al.).
+
+Acceptance contract (PR-5): the cache at ``threshold <= 0`` is exactly
+bit-identical to a cache-absent engine (scores, ids, records); enabled,
+it answers cosine-close turns from cached documents without touching
+the backend, keeps sequential and batched engines bit-identical to each
+other, reports hit/miss counters, and can never leak entries across
+sessions (end_conversation / slot eviction invalidate).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import toploc
+from repro.core.backend import IVFBackend
+from repro.serving import (BatchedConversationalSearchEngine,
+                           ConversationalSearchEngine, ResultCache,
+                           ServingConfig)
+from repro.serving import result_cache as RC
+
+K, H, NPROBE, ALPHA = 10, 16, 4, 0.3
+THRESH = 0.6          # hits real turns on the small_corpus workload
+
+
+def _run_engine(eng, wl, n_conv=4, n_turns=4):
+    out = []
+    for c in range(n_conv):
+        for t in range(n_turns):
+            v, i = eng.query(f"c{c}", jnp.asarray(wl.conversations[c, t]))
+            out.append((np.asarray(v), np.asarray(i)))
+    return out
+
+
+def _cfg(**kw):
+    base = dict(backend="ivf", strategy="toploc+", nprobe=NPROBE, h=H,
+                alpha=ALPHA, k=K)
+    base.update(kw)
+    return ServingConfig(**base)
+
+
+# ------------------------------------------------- disabled == absent
+
+@pytest.mark.parametrize("threshold", [0.0, -1.0])
+def test_cache_off_equals_cache_absent(small_corpus, ivf_index, threshold):
+    """threshold <= 0 must reproduce the uncached engine bit for bit."""
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    ref = _run_engine(ConversationalSearchEngine(
+        _cfg(), ivf_index=ivf_index, doc_vecs=docs), wl)
+    got_eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=threshold, cache_depth=32),
+        ivf_index=ivf_index, doc_vecs=docs)
+    got = _run_engine(got_eng, wl)
+    for (rv, ri), (gv, gi) in zip(ref, got):
+        np.testing.assert_array_equal(rv, gv)
+        np.testing.assert_array_equal(ri, gi)
+    assert got_eng._cache is None
+    assert got_eng.cache_stats() == {}
+    assert not any(r.cache_hit for r in got_eng.records)
+
+
+def test_cache_off_equals_cache_absent_batched(small_corpus, ivf_index):
+    wl = small_corpus
+    ref = _run_engine(BatchedConversationalSearchEngine(
+        _cfg(), ivf_index=ivf_index, max_batch=4, max_wait_s=1e-4), wl)
+    got = _run_engine(BatchedConversationalSearchEngine(
+        _cfg(cache_threshold=0.0), ivf_index=ivf_index, max_batch=4,
+        max_wait_s=1e-4), wl)
+    for (rv, ri), (gv, gi) in zip(ref, got):
+        np.testing.assert_array_equal(rv, gv)
+        np.testing.assert_array_equal(ri, gi)
+
+
+# -------------------------------------------------------- hit behaviour
+
+def test_cache_hits_skip_backend_and_report(small_corpus, ivf_index):
+    """An identical repeated query is a guaranteed hit: same docs back,
+    zero backend work in the record, counters advance."""
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.99), ivf_index=ivf_index, doc_vecs=docs)
+    q = jnp.asarray(wl.conversations[0, 0])
+    v0, i0 = eng.query("c", q)
+    v1, i1 = eng.query("c", q)              # cos(q, q) = 1 >= 0.99
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_allclose(v0, v1, rtol=1e-6)
+    assert eng.records[0].cache_hit is False
+    assert eng.records[1].cache_hit is True
+    assert eng.records[1].centroid_dists == 0
+    assert eng.records[1].list_dists == 0
+    assert eng.cache_stats() == {"hits": 1, "misses": 1, "hit_rate": 0.5}
+    assert eng.summary()["cache_hit_rate"] == 0.5
+    # the session never stepped on the hit
+    assert int(eng.sessions["c"].turn) == 1
+
+
+def test_cache_miss_below_threshold(small_corpus, ivf_index):
+    """A far-off query must fall through to the backend."""
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.9), ivf_index=ivf_index, doc_vecs=docs)
+    q0 = jnp.asarray(wl.conversations[0, 0])
+    eng.query("c", q0)
+    far = jnp.asarray(-np.asarray(q0))      # cosine -1
+    eng.query("c", far)
+    assert eng.cache_stats()["hits"] == 0
+    assert not eng.records[1].cache_hit
+    assert eng.records[1].centroid_dists > 0
+
+
+def test_hit_rescoring_orders_by_new_query(small_corpus, ivf_index):
+    """On a hit with a corpus, cached docs are re-scored under the NEW
+    query — scores are exact dots of the returned docs."""
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.5, cache_depth=32), ivf_index=ivf_index,
+        doc_vecs=docs)
+    q0 = jnp.asarray(wl.conversations[0, 0])
+    q1 = jnp.asarray(wl.conversations[0, 1])
+    eng.query("c", q0)
+    v, i = eng.query("c", q1)
+    if eng.records[1].cache_hit:            # threshold met on this seed
+        exact = np.asarray(docs)[i] @ np.asarray(q1)
+        np.testing.assert_allclose(v, exact, rtol=1e-5, atol=1e-6)
+        assert np.all(np.diff(v) <= 1e-6)   # descending under q1
+
+
+def test_cache_depth_over_fetches_and_serves_topk(small_corpus, ivf_index):
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.99, cache_depth=32), ivf_index=ivf_index,
+        doc_vecs=docs)
+    q = jnp.asarray(wl.conversations[0, 0])
+    v, i = eng.query("c", q)
+    assert v.shape == (K,) and i.shape == (K,)
+    entry = eng._cache._entries["c"]
+    assert entry.doc_ids.shape == (32,)
+    assert entry.doc_vecs.shape == (32, wl.doc_vecs.shape[1])
+
+
+# ------------------------------------------- sequential == batched
+
+@pytest.mark.parametrize("depth", [0, 32])
+def test_cache_sequential_equals_batched(small_corpus, ivf_index, depth):
+    """With the cache ENABLED and hitting, both engines stay
+    bit-identical — hit rows in a wave keep their pre-step session and
+    zeroed counters exactly like the sequential skip."""
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    cfg = _cfg(cache_threshold=THRESH, cache_depth=depth)
+    seq = ConversationalSearchEngine(cfg, ivf_index=ivf_index,
+                                     doc_vecs=docs)
+    bat = BatchedConversationalSearchEngine(
+        cfg, ivf_index=ivf_index, doc_vecs=docs, max_batch=4,
+        max_wait_s=1e-4)
+    for t in range(4):
+        futs = []
+        for c in range(4):
+            qv = jnp.asarray(wl.conversations[c, t])
+            sv, si = seq.query(f"c{c}", qv)
+            futs.append((sv, si, bat.submit(f"c{c}", qv)))
+        bat.drain()
+        for sv, si, fut in futs:
+            bv, bi = fut.result(timeout=5)
+            np.testing.assert_array_equal(sv, bv)
+            np.testing.assert_array_equal(si, bi)
+    assert seq.cache_stats() == bat.cache_stats()
+    assert seq.cache_stats()["hits"] > 0      # the test exercised hits
+    def key(recs):
+        return sorted((r.conv_id, r.turn, r.centroid_dists, r.list_dists,
+                       r.code_dists, r.refreshed, r.i0, r.cache_hit)
+                      for r in recs)
+    assert key(seq.records) == key(bat.records)
+
+
+# ------------------------------------------------- isolation / lifetime
+
+def test_end_conversation_invalidates_entry(small_corpus, ivf_index):
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.99), ivf_index=ivf_index, doc_vecs=docs)
+    q = jnp.asarray(wl.conversations[0, 0])
+    eng.query("c", q)
+    eng.end_conversation("c")
+    eng.query("c", q)                        # same query, fresh session
+    assert eng.cache_stats()["hits"] == 0    # no stale hit
+    assert not eng.records[-1].cache_hit
+
+
+def test_slot_eviction_wipes_cache_row(small_corpus, ivf_index):
+    """LRU-evicting a session slot must also clear its cache row: the
+    slot's next conversation can never hit another user's entry, and the
+    evicted conversation re-misses on return."""
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    bat = BatchedConversationalSearchEngine(
+        _cfg(cache_threshold=0.99), ivf_index=ivf_index, doc_vecs=docs,
+        n_slots=1, max_batch=1, max_wait_s=1e-4)
+    qa = jnp.asarray(wl.conversations[0, 0])
+    bat.query("a", qa)
+    slot = bat.store.lookup("a")
+    entry = bat._cache.gather([slot])
+    assert bool(np.asarray(entry.valid)[0])
+    bat.query("b", jnp.asarray(wl.conversations[1, 0]))   # evicts 'a'
+    # 'a' repeats its exact query: entry is gone → miss, not a stale hit
+    bat.query("a", qa)
+    assert bat.cache_stats()["hits"] == 0
+    assert not any(r.cache_hit for r in bat.records)
+
+
+def test_cache_disabled_for_plain_and_stateless(small_corpus, ivf_index):
+    """The cache is session-level state: plain strategy and stateless
+    backends run uncached even with a threshold set."""
+    wl = small_corpus
+    docs = jnp.asarray(wl.doc_vecs)
+    eng = ConversationalSearchEngine(
+        _cfg(strategy="plain", cache_threshold=0.9), ivf_index=ivf_index,
+        doc_vecs=docs)
+    assert eng._cache is None
+    eng = ConversationalSearchEngine(
+        ServingConfig(backend="exact", k=K, cache_threshold=0.9),
+        doc_vecs=docs)
+    assert eng._cache is None
+
+
+def test_static_mode_without_corpus_replays_ranking(small_corpus,
+                                                    hnsw_index, ivf_index):
+    """IVF keeps no flat corpus and none was passed: hits replay the
+    cached ranking instead of re-scoring."""
+    wl = small_corpus
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.99), ivf_index=ivf_index)
+    assert eng._cache is not None and not eng._cache.rescore
+    q = jnp.asarray(wl.conversations[0, 0])
+    v0, i0 = eng.query("c", q)
+    v1, i1 = eng.query("c", q)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(v0, v1)
+    assert eng.records[1].cache_hit
+    # HNSW auto-resolves its own corpus → rescoring on
+    eng = ConversationalSearchEngine(
+        ServingConfig(backend="hnsw", strategy="toploc", ef_search=16,
+                      k=5, cache_threshold=0.99), hnsw_index=hnsw_index)
+    assert eng._cache is not None and eng._cache.rescore
+
+
+# ----------------------------------------------------------- unit level
+
+def test_probe_requires_valid_entry():
+    d, k = 8, 4
+    entries = jax.tree.map(lambda a: a[None],
+                           RC.entry_template(d, k))
+    q = jnp.ones((1, d), jnp.float32)
+    hit, v, ids = RC.probe(entries, q, out_k=k, threshold=0.0,
+                           rescore=True)
+    assert not bool(hit[0])                  # invalid entry never hits
+    assert ids.shape == (1, k)
+
+
+def test_probe_threshold_boundary():
+    d, k = 4, 2
+    q0 = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    entry = RC.CacheEntry(
+        q_vec=q0, doc_ids=jnp.asarray([3, 7], jnp.int32),
+        doc_scores=jnp.asarray([2.0, 1.0]),
+        doc_vecs=jnp.zeros((k, d)), valid=jnp.asarray(True))
+    entries = jax.tree.map(lambda a: a[None], entry)
+    # cos = 1 exactly at the anchor query
+    hit, v, ids = RC.probe(entries, q0[None], out_k=k, threshold=1.0,
+                           rescore=False)
+    assert bool(hit[0])
+    np.testing.assert_array_equal(np.asarray(ids[0]), [3, 7])
+    # orthogonal query: cos 0 < 0.5
+    q_orth = jnp.asarray([[0.0, 1.0, 0.0, 0.0]])
+    hit, _, _ = RC.probe(entries, q_orth, out_k=k, threshold=0.5,
+                         rescore=False)
+    assert not bool(hit[0])
+
+
+def test_result_cache_depth_floor():
+    cache = ResultCache(d=8, k=10, threshold=0.5, depth=4)
+    assert cache.depth == 10                 # depth never below k
+
+
+def test_cache_depth_clamped_to_hnsw_beam(small_corpus, hnsw_index):
+    """cache_depth beyond ef must clamp to the beam width instead of
+    crashing the follow-up search (top_k over an ef-wide pool)."""
+    wl = small_corpus
+    eng = ConversationalSearchEngine(
+        ServingConfig(backend="hnsw", strategy="toploc", ef_search=16,
+                      up=2, k=5, cache_threshold=0.5, cache_depth=64),
+        hnsw_index=hnsw_index)
+    assert eng._cache.depth == 16            # ef, not 64
+    for t in range(3):                       # miss+hit turns both survive
+        v, i = eng.query("c", jnp.asarray(wl.conversations[0, t]))
+        assert v.shape == (5,) and i.shape == (5,)
+
+
+def test_cache_depth_clamped_to_pq_rerank(small_corpus, ivf_pq_index):
+    """cache_depth beyond the IVF-PQ re-rank depth would widen the exact
+    re-rank pool on miss turns (different candidates, inflated
+    counters); it must clamp to rerank so misses serve exactly the
+    uncached top-k."""
+    wl = small_corpus
+    cfg = ServingConfig(backend="ivf_pq", strategy="toploc+",
+                        nprobe=NPROBE, h=H, alpha=ALPHA, k=K, rerank=32)
+    ref = ConversationalSearchEngine(cfg, ivf_pq_index=ivf_pq_index)
+    cached = ConversationalSearchEngine(
+        ServingConfig(**{**cfg.__dict__, "cache_threshold": 0.5,
+                         "cache_depth": 128}),
+        ivf_pq_index=ivf_pq_index)
+    assert cached._cache.depth == 32         # rerank, not 128
+    for t in range(4):
+        qv = jnp.asarray(wl.conversations[0, t])
+        rv, ri = ref.query("c", qv)
+        cv, ci = cached.query("c", qv)
+        if cached.records[-1].cache_hit:
+            break                             # sessions legitimately fork
+        # miss turns serve exactly the uncached top-k, same counters
+        np.testing.assert_array_equal(rv, cv)
+        np.testing.assert_array_equal(ri, ci)
+        assert (cached.records[-1].list_dists
+                == ref.records[-1].list_dists)

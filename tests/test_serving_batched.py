@@ -1,11 +1,12 @@
 """Batched multi-conversation serving: equivalence + SessionStore.
 
 The contract under test: serving B concurrent conversations through one
-batched dispatch (``toploc.*_batch`` / ``BatchedConversationalSearchEngine``)
-is *bit-identical* — scores, ids, and every ``TurnStats`` field — to
-serving them one at a time through the sequential path.  This is what
-makes the batched path a drop-in: no effectiveness re-evaluation is
-needed when the only change is the batching.
+batched dispatch (``toploc.*_batch`` registry drivers /
+``BatchedConversationalSearchEngine``) is *bit-identical* — scores, ids,
+and every ``TurnStats`` field — to serving them one at a time through
+the sequential path.  This is what makes the batched path a drop-in: no
+effectiveness re-evaluation is needed when the only change is the
+batching.
 """
 import numpy as np
 import pytest
@@ -13,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hnsw, ivf, toploc
+from repro.core.backend import HNSWBackend, IVFBackend, IVFPQBackend
 from repro.serving import (BatchedConversationalSearchEngine,
                            ConversationalSearchEngine, ServingConfig,
                            SessionStore, hnsw_session_store,
@@ -42,29 +44,27 @@ def _stats_equal(seq_stats_rows, batched_stats):
 @pytest.mark.parametrize("alpha", [-1.0, 0.3])
 def test_ivf_batch_equals_sequential(ivf_index, convs, alpha):
     idx = ivf_index
+    bk = IVFBackend(h=H, nprobe=NPROBE, alpha=alpha)
     # sequential: B independent conversations
     sess, vs, is_, sts = [], [], [], []
     for b in range(B):
-        v, i, s, st = toploc.ivf_start(idx, convs[b, 0], h=H, nprobe=NPROBE,
-                                       k=K)
+        v, i, s, st = toploc.start(bk, idx, convs[b, 0], k=K)
         sess.append(s)
         vs.append([v]); is_.append([i]); sts.append([st])
     for t in range(1, T):
         for b in range(B):
-            v, i, s, st = toploc.ivf_step(idx, sess[b], convs[b, t],
-                                          nprobe=NPROBE, k=K, alpha=alpha)
+            v, i, s, st = toploc.step(bk, idx, sess[b], convs[b, t], k=K)
             sess[b] = s
             vs[b].append(v); is_[b].append(i); sts[b].append(st)
 
     # batched: one dispatch per turn over all B conversations
-    bv, bi, bsess, bst = toploc.ivf_start_batch(idx, convs[:, 0], h=H,
-                                                nprobe=NPROBE, k=K)
+    bv, bi, bsess, bst = toploc.start_batch(bk, idx, convs[:, 0], k=K)
     assert bool((jnp.stack([vs[b][0] for b in range(B)]) == bv).all())
     assert bool((jnp.stack([is_[b][0] for b in range(B)]) == bi).all())
     assert _stats_equal([sts[b][0] for b in range(B)], bst)
     for t in range(1, T):
-        bv, bi, bsess, bst = toploc.ivf_step_batch(
-            idx, bsess, convs[:, t], nprobe=NPROBE, k=K, alpha=alpha)
+        bv, bi, bsess, bst = toploc.step_batch(bk, idx, bsess, convs[:, t],
+                                               k=K)
         assert bool((jnp.stack([vs[b][t] for b in range(B)]) == bv).all()), t
         assert bool((jnp.stack([is_[b][t] for b in range(B)]) == bi).all()), t
         assert _stats_equal([sts[b][t] for b in range(B)], bst), t
@@ -76,24 +76,20 @@ def test_ivf_batch_equals_sequential(ivf_index, convs, alpha):
 
 def test_ivf_mixed_first_and_followup_batch(ivf_index, convs):
     """One batch mixing first turns and follow-ups via the is_first mask
-    reproduces ivf_start rows and ivf_step rows exactly."""
+    reproduces start rows and step rows exactly."""
     idx = ivf_index
-    alpha = 0.3
-    v0, i0_, sess0, st0 = toploc.ivf_start_batch(idx, convs[:, 0], h=H,
-                                                 nprobe=NPROBE, k=K)
+    bk = IVFBackend(h=H, nprobe=NPROBE, alpha=0.3)
+    v0, i0_, sess0, st0 = toploc.start_batch(bk, idx, convs[:, 0], k=K)
     first = jnp.asarray([True, False, True, False])
     qmix = jnp.where(first[:, None], convs[:, 0], convs[:, 1])
-    mv, mi, msess, mst = toploc.ivf_step_batch(
-        idx, sess0, qmix, nprobe=NPROBE, k=K, alpha=alpha, is_first=first)
+    mv, mi, msess, mst = toploc.step_batch(bk, idx, sess0, qmix, k=K,
+                                           is_first=first)
     for b in range(B):
         if bool(first[b]):
-            rv, ri, rs, rst = toploc.ivf_start(idx, convs[b, 0], h=H,
-                                               nprobe=NPROBE, k=K)
+            rv, ri, rs, rst = toploc.start(bk, idx, convs[b, 0], k=K)
         else:
             sb = jax.tree.map(lambda a: a[b], sess0)
-            rv, ri, rs, rst = toploc.ivf_step(idx, sb, convs[b, 1],
-                                              nprobe=NPROBE, k=K,
-                                              alpha=alpha)
+            rv, ri, rs, rst = toploc.step(bk, idx, sb, convs[b, 1], k=K)
         assert bool((mv[b] == rv).all()) and bool((mi[b] == ri).all()), b
         for f in toploc.TurnStats._fields:
             assert bool((getattr(mst, f)[b] == getattr(rst, f)).all()), (b, f)
@@ -107,31 +103,25 @@ def test_ivf_mixed_first_and_followup_batch(ivf_index, convs):
 @pytest.mark.parametrize("alpha", [-1.0, 0.3])
 def test_ivf_pq_batch_equals_sequential(ivf_pq_index, convs, alpha):
     idx = ivf_pq_index
-    RR = 32
+    bk = IVFPQBackend(h=H, nprobe=NPROBE, alpha=alpha, rerank=32)
     sess, vs, is_, sts = [], [], [], []
     for b in range(B):
-        v, i, s, st = toploc.ivf_pq_start(idx, convs[b, 0], h=H,
-                                          nprobe=NPROBE, k=K, rerank=RR)
+        v, i, s, st = toploc.start(bk, idx, convs[b, 0], k=K)
         sess.append(s)
         vs.append([v]); is_.append([i]); sts.append([st])
     for t in range(1, T):
         for b in range(B):
-            v, i, s, st = toploc.ivf_pq_step(idx, sess[b], convs[b, t],
-                                             nprobe=NPROBE, k=K,
-                                             alpha=alpha, rerank=RR)
+            v, i, s, st = toploc.step(bk, idx, sess[b], convs[b, t], k=K)
             sess[b] = s
             vs[b].append(v); is_[b].append(i); sts[b].append(st)
 
-    bv, bi, bsess, bst = toploc.ivf_pq_start_batch(idx, convs[:, 0], h=H,
-                                                   nprobe=NPROBE, k=K,
-                                                   rerank=RR)
+    bv, bi, bsess, bst = toploc.start_batch(bk, idx, convs[:, 0], k=K)
     assert bool((jnp.stack([vs[b][0] for b in range(B)]) == bv).all())
     assert bool((jnp.stack([is_[b][0] for b in range(B)]) == bi).all())
     assert _stats_equal([sts[b][0] for b in range(B)], bst)
     for t in range(1, T):
-        bv, bi, bsess, bst = toploc.ivf_pq_step_batch(
-            idx, bsess, convs[:, t], nprobe=NPROBE, k=K, alpha=alpha,
-            rerank=RR)
+        bv, bi, bsess, bst = toploc.step_batch(bk, idx, bsess, convs[:, t],
+                                               k=K)
         assert bool((jnp.stack([vs[b][t] for b in range(B)]) == bv).all()), t
         assert bool((jnp.stack([is_[b][t] for b in range(B)]) == bi).all()), t
         assert _stats_equal([sts[b][t] for b in range(B)], bst), t
@@ -142,25 +132,18 @@ def test_ivf_pq_batch_equals_sequential(ivf_pq_index, convs, alpha):
 
 def test_ivf_pq_mixed_first_and_followup_batch(ivf_pq_index, convs):
     idx = ivf_pq_index
-    alpha, RR = 0.3, 32
-    _, _, sess0, _ = toploc.ivf_pq_start_batch(idx, convs[:, 0], h=H,
-                                               nprobe=NPROBE, k=K,
-                                               rerank=RR)
+    bk = IVFPQBackend(h=H, nprobe=NPROBE, alpha=0.3, rerank=32)
+    _, _, sess0, _ = toploc.start_batch(bk, idx, convs[:, 0], k=K)
     first = jnp.asarray([True, False, True, False])
     qmix = jnp.where(first[:, None], convs[:, 0], convs[:, 1])
-    mv, mi, msess, mst = toploc.ivf_pq_step_batch(
-        idx, sess0, qmix, nprobe=NPROBE, k=K, alpha=alpha, rerank=RR,
-        is_first=first)
+    mv, mi, msess, mst = toploc.step_batch(bk, idx, sess0, qmix, k=K,
+                                           is_first=first)
     for b in range(B):
         if bool(first[b]):
-            rv, ri, rs, rst = toploc.ivf_pq_start(idx, convs[b, 0], h=H,
-                                                  nprobe=NPROBE, k=K,
-                                                  rerank=RR)
+            rv, ri, rs, rst = toploc.start(bk, idx, convs[b, 0], k=K)
         else:
             sb = jax.tree.map(lambda a: a[b], sess0)
-            rv, ri, rs, rst = toploc.ivf_pq_step(idx, sb, convs[b, 1],
-                                                 nprobe=NPROBE, k=K,
-                                                 alpha=alpha, rerank=RR)
+            rv, ri, rs, rst = toploc.step(bk, idx, sb, convs[b, 1], k=K)
         assert bool((mv[b] == rv).all()) and bool((mi[b] == ri).all()), b
         for f in toploc.TurnStats._fields:
             assert bool((getattr(mst, f)[b] == getattr(rst, f)).all()), (b, f)
@@ -173,26 +156,25 @@ def test_ivf_pq_mixed_first_and_followup_batch(ivf_pq_index, convs):
 
 def test_hnsw_batch_equals_sequential(hnsw_index, convs):
     idx = hnsw_index
+    bk = HNSWBackend(ef=EF, up=UP)
     sess, vs, is_, sts = [], [], [], []
     for b in range(B):
-        v, i, s, st = toploc.hnsw_start(idx, convs[b, 0], ef=EF, k=K, up=UP)
+        v, i, s, st = toploc.start(bk, idx, convs[b, 0], k=K)
         sess.append(s)
         vs.append([v]); is_.append([i]); sts.append([st])
     for t in range(1, T):
         for b in range(B):
-            v, i, s, st = toploc.hnsw_step(idx, sess[b], convs[b, t],
-                                           ef=EF, k=K)
+            v, i, s, st = toploc.step(bk, idx, sess[b], convs[b, t], k=K)
             sess[b] = s
             vs[b].append(v); is_[b].append(i); sts[b].append(st)
 
-    bv, bi, bsess, bst = toploc.hnsw_start_batch(idx, convs[:, 0], ef=EF,
-                                                 k=K, up=UP)
+    bv, bi, bsess, bst = toploc.start_batch(bk, idx, convs[:, 0], k=K)
     assert bool((jnp.stack([vs[b][0] for b in range(B)]) == bv).all())
     assert bool((jnp.stack([is_[b][0] for b in range(B)]) == bi).all())
     assert _stats_equal([sts[b][0] for b in range(B)], bst)
     for t in range(1, T):
-        bv, bi, bsess, bst = toploc.hnsw_step_batch(idx, bsess, convs[:, t],
-                                                    ef=EF, k=K)
+        bv, bi, bsess, bst = toploc.step_batch(bk, idx, bsess, convs[:, t],
+                                               k=K)
         assert bool((jnp.stack([vs[b][t] for b in range(B)]) == bv).all()), t
         assert bool((jnp.stack([is_[b][t] for b in range(B)]) == bi).all()), t
         assert _stats_equal([sts[b][t] for b in range(B)], bst), t
@@ -202,20 +184,18 @@ def test_hnsw_batch_equals_sequential(hnsw_index, convs):
 
 def test_hnsw_mixed_first_and_followup_batch(hnsw_index, convs):
     idx = hnsw_index
-    _, _, sess0, _ = toploc.hnsw_start_batch(idx, convs[:, 0], ef=EF, k=K,
-                                             up=UP)
+    bk = HNSWBackend(ef=EF, up=UP)
+    _, _, sess0, _ = toploc.start_batch(bk, idx, convs[:, 0], k=K)
     first = jnp.asarray([False, True, False, True])
     qmix = jnp.where(first[:, None], convs[:, 0], convs[:, 1])
-    mv, mi, msess, mst = toploc.hnsw_step_batch(
-        idx, sess0, qmix, ef=EF, k=K, up=UP, is_first=first)
+    mv, mi, msess, mst = toploc.step_batch(bk, idx, sess0, qmix, k=K,
+                                           is_first=first)
     for b in range(B):
         if bool(first[b]):
-            rv, ri, rs, rst = toploc.hnsw_start(idx, convs[b, 0], ef=EF,
-                                                k=K, up=UP)
+            rv, ri, rs, rst = toploc.start(bk, idx, convs[b, 0], k=K)
         else:
             sb = jax.tree.map(lambda a: a[b], sess0)
-            rv, ri, rs, rst = toploc.hnsw_step(idx, sb, convs[b, 1],
-                                               ef=EF, k=K)
+            rv, ri, rs, rst = toploc.step(bk, idx, sb, convs[b, 1], k=K)
         assert bool((mv[b] == rv).all()) and bool((mi[b] == ri).all()), b
         assert int(mst.graph_dists[b]) == int(rst.graph_dists)
         assert bool(mst.refreshed[b]) == bool(rst.refreshed)
@@ -310,6 +290,22 @@ def test_eviction_zeroes_slab_row_before_slot_reuse(ivf_index):
         assert bool((getattr(row, f) == 0).all()), f
 
 
+def test_slot_freed_listeners_fire_on_release_and_eviction(ivf_index):
+    """Companion state (e.g. the result-cache slab) keys off the same
+    slots; it must observe every slot hand-over."""
+    store = ivf_session_store(ivf_index, h=H, nprobe=NPROBE, n_slots=1)
+    freed = []
+    store.add_slot_freed_listener(freed.append)
+    slot, _ = store.acquire("a")
+    store.release("a")
+    assert freed == [slot]
+    slot2, _ = store.acquire("b")
+    store.acquire("c")                       # evicts "b"
+    assert freed == [slot, slot2]
+    store.release("nope")                    # no-op: no notification
+    assert freed == [slot, slot2]
+
+
 def test_release_then_reacquire_never_leaks_prior_cache(small_corpus,
                                                         ivf_index):
     """Engine-level: end_conversation() wipes the slot, so the next
@@ -330,9 +326,8 @@ def test_release_then_reacquire_never_leaks_prior_cache(small_corpus,
     # the freed slot's next occupant is served as a clean first turn
     v, i = bat.query("b", jnp.asarray(wl.conversations[1, 0]))
     assert bat.store.lookup("b") == slot
-    rv, ri, _, _ = toploc.ivf_start(ivf_index,
-                                    jnp.asarray(wl.conversations[1, 0]),
-                                    h=H, nprobe=NPROBE, k=K)
+    rv, ri, _, _ = toploc.start(IVFBackend(h=H, nprobe=NPROBE), ivf_index,
+                                jnp.asarray(wl.conversations[1, 0]), k=K)
     np.testing.assert_array_equal(v, np.asarray(rv))
     np.testing.assert_array_equal(i, np.asarray(ri))
 
@@ -430,16 +425,18 @@ def test_batched_engine_waves_same_conversation(small_corpus, ivf_index):
 def test_evicted_live_conversation_resumes_as_first_turn(
         small_corpus, ivf_index, ivf_pq_index, backend):
     """LRU-evicting a live conversation then resuming it must re-run the
-    first-turn path: a fresh ``ivf_start`` on the *current* utterance,
-    not a follow-up step against another conversation's slot contents."""
+    first-turn path: a fresh start on the *current* utterance, not a
+    follow-up step against another conversation's slot contents."""
     wl = small_corpus
     cfg = ServingConfig(backend=backend, strategy="toploc+", nprobe=NPROBE,
                         h=H, alpha=0.3, k=K, rerank=32)
     bat = BatchedConversationalSearchEngine(
         cfg, ivf_index=ivf_index, ivf_pq_index=ivf_pq_index,
         n_slots=2, max_batch=2, max_wait_s=1e-4)
-    idx = ivf_index if backend == "ivf" else ivf_pq_index
-    start = toploc.ivf_start if backend == "ivf" else toploc.ivf_pq_start
+    if backend == "ivf":
+        idx, bk = ivf_index, IVFBackend(h=H, nprobe=NPROBE)
+    else:
+        idx, bk = ivf_pq_index, IVFPQBackend(h=H, nprobe=NPROBE, rerank=32)
 
     qa0, qa1 = jnp.asarray(wl.conversations[0, 0]), \
         jnp.asarray(wl.conversations[0, 1])
@@ -450,8 +447,7 @@ def test_evicted_live_conversation_resumes_as_first_turn(
     assert bat.store.lookup("a") is None
     # 'a' returns mid-conversation: must be served as a first turn
     v, i = bat.query("a", qa1)
-    kw = {"rerank": 32} if backend == "ivf_pq" else {}
-    rv, ri, _, rst = start(idx, qa1, h=H, nprobe=NPROBE, k=K, **kw)
+    rv, ri, _, rst = toploc.start(bk, idx, qa1, k=K)
     np.testing.assert_array_equal(v, np.asarray(rv))
     np.testing.assert_array_equal(i, np.asarray(ri))
     rec = bat.records[-1]
@@ -483,15 +479,15 @@ def test_trash_slot_never_leaks_into_live_rows(small_corpus, ivf_index):
                                    key=lambda r: (r.conv_id, r.turn))] \
         == [0, 1, 2] * 3
     # live slab rows equal the sequential per-conversation sessions
+    bk = IVFBackend(h=H, nprobe=NPROBE, alpha=0.3)
     seq_sess = {}
     for c in range(3):
-        v, i, s, _ = toploc.ivf_start(ivf_index,
-                                      jnp.asarray(wl.conversations[c, 0]),
-                                      h=H, nprobe=NPROBE, k=K)
+        v, i, s, _ = toploc.start(bk, ivf_index,
+                                  jnp.asarray(wl.conversations[c, 0]), k=K)
         for t in (1, 2):
-            v, i, s, _ = toploc.ivf_step(ivf_index, s,
-                                         jnp.asarray(wl.conversations[c, t]),
-                                         nprobe=NPROBE, k=K, alpha=0.3)
+            v, i, s, _ = toploc.step(bk, ivf_index, s,
+                                     jnp.asarray(wl.conversations[c, t]),
+                                     k=K)
         seq_sess[f"c{c}"] = s
     for c in range(3):
         slot = bat.store.lookup(f"c{c}")

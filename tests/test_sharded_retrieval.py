@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hnsw, ivf, pq, toploc
+from repro.core.backend import HNSWBackend, IVFBackend, IVFPQBackend
 from repro.core.topk import distributed_topk_ordered
 from repro.distributed import retrieval as R
 from repro.serving.engine import (BatchedConversationalSearchEngine,
@@ -65,19 +66,16 @@ def _assert_stats_equal(ref, got, ctx):
 @pytest.mark.parametrize("shards", SHARD_COUNTS)
 def test_ivf_sharded_conversation_bit_identical(idx8, wl8, shards):
     mesh = R.retrieval_mesh(shards)
-    sidx = R.shard_ivf_index(mesh, idx8)
-    scan = R.ShardedIVFScan(mesh)
+    bk = IVFBackend(h=H, nprobe=NPROBE, alpha=ALPHA)
+    sbk, sidx = R.shard_backend(mesh, bk, idx8)
     conv = jnp.asarray(wl8.conversations[0])
-    v, i, s, st = toploc.ivf_start(idx8, conv[0], h=H, nprobe=NPROBE, k=K)
-    sv, si, ss, sst = toploc.ivf_start(sidx, conv[0], h=H, nprobe=NPROBE,
-                                       k=K, scan=scan)
+    v, i, s, st = toploc.start(bk, idx8, conv[0], k=K)
+    sv, si, ss, sst = toploc.start(sbk, sidx, conv[0], k=K)
     assert bool((v == sv).all()) and bool((i == si).all())
     _assert_stats_equal(st, sst, ("start", shards))
     for t in range(1, T):
-        v, i, s, st = toploc.ivf_step(idx8, s, conv[t], nprobe=NPROBE,
-                                      k=K, alpha=ALPHA)
-        sv, si, ss, sst = toploc.ivf_step(sidx, ss, conv[t], nprobe=NPROBE,
-                                          k=K, alpha=ALPHA, scan=scan)
+        v, i, s, st = toploc.step(bk, idx8, s, conv[t], k=K)
+        sv, si, ss, sst = toploc.step(sbk, sidx, ss, conv[t], k=K)
         assert bool((v == sv).all()) and bool((i == si).all()), t
         _assert_stats_equal(st, sst, (t, shards))
     for f in toploc.IVFSession._fields:
@@ -87,23 +85,16 @@ def test_ivf_sharded_conversation_bit_identical(idx8, wl8, shards):
 @pytest.mark.parametrize("shards", SHARD_COUNTS)
 def test_ivf_pq_sharded_conversation_bit_identical(pq8, wl8, shards):
     mesh = R.retrieval_mesh(shards)
-    sidx = R.shard_ivf_pq_index(mesh, pq8)
-    scan = R.ShardedPQScan(mesh)
+    bk = IVFPQBackend(h=H, nprobe=NPROBE, alpha=ALPHA, rerank=RR)
+    sbk, sidx = R.shard_backend(mesh, bk, pq8)
     conv = jnp.asarray(wl8.conversations[1])
-    v, i, s, st = toploc.ivf_pq_start(pq8, conv[0], h=H, nprobe=NPROBE,
-                                      k=K, rerank=RR)
-    sv, si, ss, sst = toploc.ivf_pq_start(sidx, conv[0], h=H,
-                                          nprobe=NPROBE, k=K, rerank=RR,
-                                          scan=scan)
+    v, i, s, st = toploc.start(bk, pq8, conv[0], k=K)
+    sv, si, ss, sst = toploc.start(sbk, sidx, conv[0], k=K)
     assert bool((v == sv).all()) and bool((i == si).all())
     _assert_stats_equal(st, sst, ("start", shards))
     for t in range(1, T):
-        v, i, s, st = toploc.ivf_pq_step(pq8, s, conv[t], nprobe=NPROBE,
-                                         k=K, alpha=ALPHA, rerank=RR)
-        sv, si, ss, sst = toploc.ivf_pq_step(sidx, ss, conv[t],
-                                             nprobe=NPROBE, k=K,
-                                             alpha=ALPHA, rerank=RR,
-                                             scan=scan)
+        v, i, s, st = toploc.step(bk, pq8, s, conv[t], k=K)
+        sv, si, ss, sst = toploc.step(sbk, sidx, ss, conv[t], k=K)
         assert bool((v == sv).all()) and bool((i == si).all()), t
         _assert_stats_equal(st, sst, (t, shards))
 
@@ -111,18 +102,16 @@ def test_ivf_pq_sharded_conversation_bit_identical(pq8, wl8, shards):
 @pytest.mark.parametrize("shards", SHARD_COUNTS)
 def test_hnsw_sharded_conversation_bit_identical(hnsw8, wl8, shards):
     mesh = R.retrieval_mesh(shards)
-    sidx = R.shard_hnsw_index(mesh, hnsw8)
-    search = R.ShardedHNSWSearch(mesh)
+    bk = HNSWBackend(ef=EF, up=UP)
+    sbk, sidx = R.shard_backend(mesh, bk, hnsw8)
     conv = jnp.asarray(wl8.conversations[2])
-    v, i, s, st = toploc.hnsw_start(hnsw8, conv[0], ef=EF, k=K, up=UP)
-    sv, si, ss, sst = toploc.hnsw_start(sidx, conv[0], ef=EF, k=K, up=UP,
-                                        search=search)
+    v, i, s, st = toploc.start(bk, hnsw8, conv[0], k=K)
+    sv, si, ss, sst = toploc.start(sbk, sidx, conv[0], k=K)
     assert bool((v == sv).all()) and bool((i == si).all())
     _assert_stats_equal(st, sst, ("start", shards))
     for t in range(1, T):
-        v, i, s, st = toploc.hnsw_step(hnsw8, s, conv[t], ef=EF, k=K)
-        sv, si, ss, sst = toploc.hnsw_step(sidx, ss, conv[t], ef=EF, k=K,
-                                           search=search)
+        v, i, s, st = toploc.step(bk, hnsw8, s, conv[t], k=K)
+        sv, si, ss, sst = toploc.step(sbk, sidx, ss, conv[t], k=K)
         assert bool((v == sv).all()) and bool((i == si).all()), t
         _assert_stats_equal(st, sst, (t, shards))
     assert int(s.entry_point) == int(ss.entry_point)
@@ -133,25 +122,21 @@ def test_sharded_batched_step_matches_sequential(idx8, wl8):
     sharded sequential rows (the is_first select logic composes with
     shard_map inside the batch-wide lax.cond gate)."""
     mesh = R.retrieval_mesh(SHARD_COUNTS[-1])
-    sidx = R.shard_ivf_index(mesh, idx8)
-    scan = R.ShardedIVFScan(mesh)
+    bk = IVFBackend(h=H, nprobe=NPROBE, alpha=ALPHA)
+    sbk, sidx = R.shard_backend(mesh, bk, idx8)
     q0 = jnp.asarray(wl8.conversations[:4, 0])
-    _, _, sess0, _ = toploc.ivf_start_batch(sidx, q0, h=H, nprobe=NPROBE,
-                                            k=K, scan=scan)
+    _, _, sess0, _ = toploc.start_batch(sbk, sidx, q0, k=K)
     first = jnp.asarray([True, False, True, False])
     qmix = jnp.where(first[:, None], q0, jnp.asarray(wl8.conversations[:4, 1]))
-    mv, mi, _, mst = toploc.ivf_step_batch(sidx, sess0, qmix, nprobe=NPROBE,
-                                           k=K, alpha=ALPHA, is_first=first,
-                                           scan=scan)
+    mv, mi, _, mst = toploc.step_batch(sbk, sidx, sess0, qmix, k=K,
+                                       is_first=first)
     for b in range(4):
         if bool(first[b]):
-            rv, ri, _, rst = toploc.ivf_start(idx8, q0[b], h=H,
-                                              nprobe=NPROBE, k=K)
+            rv, ri, _, rst = toploc.start(bk, idx8, q0[b], k=K)
         else:
             sb = jax.tree.map(lambda a: a[b], sess0)
-            rv, ri, _, rst = toploc.ivf_step(
-                idx8, sb, jnp.asarray(wl8.conversations[b, 1]),
-                nprobe=NPROBE, k=K, alpha=ALPHA)
+            rv, ri, _, rst = toploc.step(
+                bk, idx8, sb, jnp.asarray(wl8.conversations[b, 1]), k=K)
         assert bool((mv[b] == rv).all()) and bool((mi[b] == ri).all()), b
 
 

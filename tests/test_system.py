@@ -35,8 +35,9 @@ def _run_all(index, wl, mode, alpha, h=16, nprobe=4):
     refreshes = 0
     for c in range(wl.conversations.shape[0]):
         conv = jnp.asarray(wl.conversations[c])
-        _, ids, st = toploc.ivf_conversation(
-            index, conv, h=h, nprobe=nprobe, k=10, alpha=alpha, mode=mode)
+        from repro.core.backend import IVFBackend
+        bk = IVFBackend(h=h, nprobe=nprobe, alpha=alpha)
+        _, ids, st = toploc.conversation(bk, index, conv, k=10, mode=mode)
         ids_all.append(np.asarray(ids))
         work += int(np.asarray(st.centroid_dists).sum())
         refreshes += int(np.asarray(st.refreshed)[1:].sum())
@@ -80,10 +81,11 @@ def test_end_to_end_hnsw(system):
     work_t = work_p = 0
     for c in range(3):
         conv = jnp.asarray(wl.conversations[c])
-        _, it, st = toploc.hnsw_conversation(index, conv, ef=24, k=10,
-                                             up=2)
-        _, ip, sp = toploc.hnsw_conversation(index, conv, ef=24, k=10,
-                                             mode="plain")
+        from repro.core.backend import HNSWBackend
+        bk = HNSWBackend(ef=24, up=2)
+        _, it, st = toploc.conversation(bk, index, conv, k=10)
+        _, ip, sp = toploc.conversation(bk, index, conv, k=10,
+                                        mode="plain")
         ids_t.append(np.asarray(it))
         ids_p.append(np.asarray(ip))
         work_t += int(np.asarray(st.graph_dists)[1:].sum())
@@ -102,8 +104,9 @@ def test_serving_engine_matches_library_path(system):
                                       ServingConfig)
     wl, index = system
     conv = jnp.asarray(wl.conversations[0])
-    _, ids_lib, _ = toploc.ivf_conversation(index, conv, h=16, nprobe=8,
-                                            k=10, alpha=-1.0)
+    from repro.core.backend import IVFBackend
+    _, ids_lib, _ = toploc.conversation(IVFBackend(h=16, nprobe=8),
+                                        index, conv, k=10)
     eng = ConversationalSearchEngine(
         ServingConfig(backend="ivf", strategy="toploc", nprobe=8, h=16,
                       k=10), ivf_index=index)
