@@ -15,11 +15,10 @@ binary blobs in the repo.
 """
 from __future__ import annotations
 
-import functools
 import os
 import pickle
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import numpy as np
 import jax

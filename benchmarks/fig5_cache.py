@@ -37,7 +37,6 @@ import sys
 from typing import Dict, List
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import ivf as IV

@@ -21,7 +21,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import hnsw as HN
 from repro.core import ivf as IV
 from repro.core import toploc as TL
 from repro.core.backend import HNSWBackend, IVFBackend, IVFPQBackend

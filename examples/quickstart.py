@@ -6,7 +6,6 @@ identical (or nearly) results.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,62 @@
+"""repro.analysis — jit/Pallas/shard_map invariant linter (ISSUE 6).
+
+Six passes over the tree (``python -m repro.analysis``), each encoding
+an invariant the test suite could only catch after the fact:
+
+  ============  =======================================================
+  trace-safety  AST: host `if`/`while`/`bool()`/`np.*`/clock/RNG in
+                functions reachable from a jit boundary  (TS1xx)
+  contract      live registry: backends frozen/hashable/array-free
+                with the full driver surface              (SC2xx)
+  retrace       abstract tracing: cache-key churn, dtype/weak-type
+                drift across batch sizes and engines      (RT3xx)
+  kernels       recorded pallas_call: per-step VMEM budget and
+                (8,128) tile alignment                    (PK4xx)
+  shard         recorded shard_map: placements vs in_specs, replicated
+                TopLoc state never partitioned            (SS5xx)
+  deprecated    AST: internal use of legacy toploc.* aliases (DA6xx)
+  ============  =======================================================
+
+See DESIGN.md §8 for the invariant catalogue and
+``analysis-baseline.txt`` for the (empty) suppression baseline.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.analysis.findings import (            # noqa: F401
+    Finding, apply_baseline, load_baseline)
+from repro.analysis.project import Project       # noqa: F401
+
+
+def all_passes() -> Dict[str, Callable]:
+    """pass name → ``run(project) -> List[Finding]`` (import-lazy)."""
+    from repro.analysis import (deprecation, kernel_budget, retrace,
+                                shard_specs, static_contract,
+                                trace_safety)
+    return {
+        "trace-safety": trace_safety.run,
+        "contract": static_contract.run,
+        "retrace": retrace.run,
+        "kernels": kernel_budget.run,
+        "shard": shard_specs.run,
+        "deprecated": deprecation.run,
+    }
+
+
+def run_all(project: Project = None,
+            select: List[str] = None) -> List[Finding]:
+    """Run the selected (default: all) passes over the tree."""
+    passes = all_passes()
+    if select:
+        unknown = set(select) - set(passes)
+        if unknown:
+            raise ValueError(
+                f"unknown pass(es) {sorted(unknown)}; available: "
+                f"{sorted(passes)}")
+        passes = {k: v for k, v in passes.items() if k in select}
+    proj = project if project is not None else Project()
+    findings: List[Finding] = []
+    for name, fn in passes.items():
+        findings.extend(fn(proj))
+    return findings

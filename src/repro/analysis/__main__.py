@@ -1,0 +1,75 @@
+"""CLI: ``python -m repro.analysis [--strict] [--select PASS …]``.
+
+Exit codes: 0 clean (all findings suppressed or none), 1 active
+findings, 2 (``--strict`` only) stale baseline entries — so CI can gate
+on ``--strict`` while a local run stays informative.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import (all_passes, apply_baseline, load_baseline,
+                            run_all)
+from repro.analysis.project import Project, repo_root
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jit/Pallas/shard_map invariant linter")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale baseline entries")
+    ap.add_argument("--baseline", default=None,
+                    help="suppression file (default: "
+                         "<repo>/analysis-baseline.txt)")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="PASS",
+                    help=f"run only these passes (repeatable); "
+                         f"available: {', '.join(sorted(all_passes()))}")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="list pass names and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for name in sorted(all_passes()):
+            print(name)
+        return 0
+
+    baseline_path = args.baseline or str(
+        repo_root() / "analysis-baseline.txt")
+    patterns = load_baseline(baseline_path)
+
+    findings = run_all(Project(), select=args.select)
+    active, suppressed, stale = apply_baseline(findings, patterns)
+
+    if args.as_json:
+        print(json.dumps({
+            "active": [vars(f) for f in active],
+            "suppressed": [vars(f) for f in suppressed],
+            "stale_baseline": stale,
+        }, indent=2))
+    else:
+        for f in active:
+            print(f.render())
+        if suppressed:
+            print(f"-- {len(suppressed)} finding(s) suppressed by "
+                  f"baseline")
+        for pat in stale:
+            print(f"-- stale baseline entry (matches nothing): {pat}")
+        n_passes = len(args.select or all_passes())
+        print(f"{len(active)} finding(s) from {n_passes} pass(es)"
+              + (" [strict]" if args.strict else ""))
+
+    if active:
+        return 1
+    if args.strict and stale:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Finding/baseline plumbing shared by every analysis pass.
+
+A *finding* is one diagnostic: ``path:line: CODE message``.  The
+baseline file (``analysis-baseline.txt`` at the repo root) holds
+``fnmatch`` patterns, one per line, matched against that rendered form;
+a finding matching any pattern is *suppressed* (reported separately,
+never fatal).  The tree's contract (ISSUE 6) is that the baseline stays
+empty — the suppression machinery exists so a future regression can be
+landed under a dated entry instead of reverting, and so ``--strict``
+can flag stale entries the moment the underlying violation is fixed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic emitted by an analysis pass."""
+
+    pass_id: str      # e.g. "trace-safety"
+    code: str         # e.g. "TS101"
+    path: str         # repo-relative posix path ("" for live checks)
+    line: int         # 1-based; 0 when no source location applies
+    message: str
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.path else "<live>"
+        return f"{loc}: {self.code} {self.message}"
+
+
+def load_baseline(path: str) -> List[str]:
+    """Suppression patterns from ``path`` (missing file ⇒ empty)."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except FileNotFoundError:
+        return []
+    out = []
+    for raw in lines:
+        s = raw.strip()
+        if s and not s.startswith("#"):
+            out.append(s)
+    return out
+
+
+def apply_baseline(
+    findings: Sequence[Finding], patterns: Sequence[str],
+) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Split findings into (active, suppressed); also return the
+    baseline patterns that matched nothing (stale entries)."""
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    used = set()
+    for f in findings:
+        rendered = f.render()
+        hit = None
+        for pat in patterns:
+            if fnmatch.fnmatch(rendered, pat) or fnmatch.fnmatch(
+                    rendered, f"*{pat}*"):
+                hit = pat
+                break
+        if hit is None:
+            active.append(f)
+        else:
+            used.add(hit)
+            suppressed.append(f)
+    stale = [p for p in patterns if p not in used]
+    return active, suppressed, stale

@@ -1,0 +1,312 @@
+"""Pass 4 — Pallas kernel VMEM-budget / tile-alignment checker.
+
+Rather than re-parsing kernel sources, this pass *captures the real
+BlockSpecs*: it monkeypatches ``jax.experimental.pallas.pallas_call``
+with a recorder and drives every ``kernels.ops`` dispatch wrapper
+through ``jax.eval_shape`` under ``jax.disable_jit()`` on
+representative shapes (the paper's serving regime plus a high-dim
+stress point).  Nothing is lowered or executed — the recorder sees the
+exact grid/BlockSpecs/scratch each wrapper would hand to Mosaic and
+returns zeros of the declared out_shape.
+
+  PK401  per-step VMEM footprint over budget: Σ in/out block bytes ×2
+         (the pipeline double-buffers every HBM↔VMEM stream) + scratch
+         bytes must fit the ~16 MiB/core VMEM.  An over-budget tile is
+         a guaranteed Mosaic allocation failure on hardware — the CPU
+         interpret path hides it.
+  PK402  a *split* grid dimension whose block tile is misaligned to
+         the (sublane, lane) = (8, 128) float32 register tiling
+         (sublane 16/32 for 2-/1-byte dtypes).  Degenerate size-1
+         blocks are exempt (single-row gather is the canonical
+         scalar-prefetch pattern); so are unsplit dims (Mosaic pads
+         the final partial tile itself).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "kernel-budget"
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024      # per-core VMEM (TPU guide)
+LANE = 128
+
+
+def _sublane(itemsize: int) -> int:
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call recorder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PallasCallRecord:
+    """One captured ``pallas_call`` invocation."""
+
+    kernel_name: str
+    grid: Tuple[int, ...]
+    in_blocks: List[Tuple[Tuple[int, ...], Tuple[int, ...], Any]]
+    out_blocks: List[Tuple[Tuple[int, ...], Tuple[int, ...], Any]]
+    scratch: List[Tuple[Tuple[int, ...], Any]]
+
+    def vmem_bytes(self) -> int:
+        total = 0
+        for block, _shape, dtype in self.in_blocks + self.out_blocks:
+            total += 2 * _block_bytes(block, dtype)   # double-buffered
+        for shape, dtype in self.scratch:
+            total += _block_bytes(shape, dtype)
+        return total
+
+
+def _block_bytes(shape: Sequence[int], dtype) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * jnp.dtype(dtype).itemsize
+
+
+def _kernel_name(kernel) -> str:
+    f = kernel
+    while isinstance(f, functools.partial):
+        f = f.func
+    return getattr(f, "__name__", repr(f))
+
+
+def _spec_fields(spec) -> Tuple[Optional[Tuple[int, ...]], Any]:
+    return getattr(spec, "block_shape", None), spec
+
+
+def _zeros_like_out(out_shape):
+    is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)  # noqa: E731
+    leaves, treedef = jax.tree.flatten(out_shape, is_leaf=is_sds)
+    outs = [jnp.zeros(s.shape, s.dtype) for s in leaves]
+    return jax.tree.unflatten(treedef, outs)
+
+
+@contextlib.contextmanager
+def record_pallas_calls(records: List[PallasCallRecord]):
+    """Swap ``pallas_call`` for a recorder returning declared zeros."""
+    import jax.experimental.pallas as pl_mod
+
+    real = pl_mod.pallas_call
+
+    def fake(kernel, out_shape=None, **kw):
+        grid_spec = kw.get("grid_spec")
+        if grid_spec is not None:
+            grid = tuple(getattr(grid_spec, "grid", ()) or ())
+            in_specs = list(getattr(grid_spec, "in_specs", ()) or ())
+            out_specs = getattr(grid_spec, "out_specs", ())
+            scratch = list(getattr(grid_spec, "scratch_shapes", ())
+                           or ())
+            n_prefetch = int(getattr(grid_spec, "num_scalar_prefetch",
+                                     0) or 0)
+        else:
+            g = kw.get("grid", ())
+            grid = tuple(g) if isinstance(g, (tuple, list)) else (g,)
+            in_specs = list(kw.get("in_specs", ()) or ())
+            out_specs = kw.get("out_specs", ())
+            scratch = list(kw.get("scratch_shapes", ()) or ())
+            n_prefetch = 0
+        if not isinstance(out_specs, (tuple, list)):
+            out_specs = [out_specs]
+        out_specs = list(out_specs)
+
+        def runner(*args):
+            # scalar-prefetch operands live in SMEM: skip them
+            arr_args = args[n_prefetch:]
+            in_blocks = []
+            for spec, a in zip(in_specs, arr_args):
+                block, _ = _spec_fields(spec)
+                shape = tuple(getattr(a, "shape", ()))
+                blk = tuple(shape[i] if (block is None
+                                         or block[i] is None)
+                            else int(block[i])
+                            for i in range(len(shape))) if shape else ()
+                in_blocks.append((blk, shape,
+                                  getattr(a, "dtype", jnp.float32)))
+            is_sds = lambda x: isinstance(  # noqa: E731
+                x, jax.ShapeDtypeStruct)
+            out_leaves = jax.tree.leaves(out_shape, is_leaf=is_sds)
+            out_blocks = []
+            for spec, s in zip(out_specs, out_leaves):
+                block, _ = _spec_fields(spec)
+                shape = tuple(s.shape)
+                blk = tuple(shape[i] if (block is None
+                                         or block[i] is None)
+                            else int(block[i])
+                            for i in range(len(shape))) if shape else ()
+                out_blocks.append((blk, shape, s.dtype))
+            scratch_info = []
+            for sc in scratch:
+                shp = tuple(getattr(sc, "shape", ()) or ())
+                dt = getattr(sc, "dtype", jnp.float32)
+                scratch_info.append((shp, dt))
+            records.append(PallasCallRecord(
+                kernel_name=_kernel_name(kernel), grid=grid,
+                in_blocks=in_blocks, out_blocks=out_blocks,
+                scratch=scratch_info))
+            return _zeros_like_out(out_shape)
+
+        return runner
+
+    pl_mod.pallas_call = fake
+    try:
+        yield
+    finally:
+        pl_mod.pallas_call = real
+
+
+# ---------------------------------------------------------------------------
+# representative probes (ops-layer entry points)
+# ---------------------------------------------------------------------------
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def default_probes() -> List[Tuple[str, Callable[[], Any]]]:
+    """(label, thunk) pairs; each thunk runs one ops wrapper under
+    eval_shape with the recorder active."""
+    from repro.kernels import ops
+
+    def ivf(d):
+        return lambda: jax.eval_shape(
+            lambda q, lv, li, sel: ops.ivf_scan(
+                q, lv, li, sel, 32, mode="interpret"),
+            _f32(8, d), _f32(64, 2048, d), _i32(64, 2048), _i32(8, 8))
+
+    def pq():
+        return jax.eval_shape(
+            lambda t, c, li, sel: ops.pq_adc_scan(
+                t, c, li, sel, 32, mode="interpret"),
+            _f32(8, 16, 256),
+            jax.ShapeDtypeStruct((64, 4096, 16), jnp.uint8),
+            _i32(64, 4096), _i32(8, 8))
+
+    def ctk():
+        return jax.eval_shape(
+            lambda q, c: ops.centroid_topk(q, c, 64, mode="interpret"),
+            _f32(32, 128), _f32(4096, 128))
+
+    def fa():
+        return jax.eval_shape(
+            lambda q, k, v: ops.flash_attention(
+                q, k, v, causal=True, mode="interpret"),
+            _f32(1, 4, 1024, 128), _f32(1, 4, 1024, 128),
+            _f32(1, 4, 1024, 128))
+
+    def fd():
+        return jax.eval_shape(
+            lambda q, k, v, n: ops.flash_decode(
+                q, k, v, n, mode="interpret"),
+            _f32(4, 8, 128), _f32(4, 2, 2048, 128),
+            _f32(4, 2, 2048, 128), _i32(4))
+
+    def eb():
+        return jax.eval_shape(
+            lambda t, ids: ops.embedding_bag(
+                t, ids, mode="interpret"),
+            _f32(50000, 256), _i32(8, 16))
+
+    return [
+        ("ops.ivf_scan[d=128]", ivf(128)),
+        ("ops.ivf_scan[d=1024]", ivf(1024)),
+        ("ops.pq_adc_scan", pq),
+        ("ops.centroid_topk", ctk),
+        ("ops.flash_attention", fa),
+        ("ops.flash_decode", fd),
+        ("ops.embedding_bag", eb),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+
+def _check_alignment(rec: PallasCallRecord, label: str,
+                     findings: List[Finding]) -> None:
+    for kind, blocks in (("in", rec.in_blocks), ("out",
+                                                 rec.out_blocks)):
+        for bi, (block, shape, dtype) in enumerate(blocks):
+            if len(block) < 1 or len(shape) != len(block):
+                continue
+            itemsize = jnp.dtype(dtype).itemsize
+            sub = _sublane(itemsize)
+            for axis in range(len(block)):
+                blk, full = block[axis], shape[axis]
+                if blk >= full or blk == 1:
+                    continue          # unsplit or degenerate gather dim
+                from_last = len(block) - 1 - axis
+                need = LANE if from_last == 0 else (
+                    sub if from_last == 1 else None)
+                if need is not None and blk % need:
+                    findings.append(Finding(
+                        PASS_ID, "PK402", "", 0,
+                        f"{label} kernel `{rec.kernel_name}` "
+                        f"{kind}[{bi}]: split axis {axis} tile {blk} "
+                        f"of {full} is not a multiple of {need} "
+                        f"({jnp.dtype(dtype).name} needs "
+                        f"({sub}, {LANE}) tiles) — Mosaic will pad "
+                        f"every step"))
+
+
+def _check_budget(rec: PallasCallRecord, label: str,
+                  findings: List[Finding],
+                  budget: int = VMEM_BUDGET_BYTES) -> None:
+    used = rec.vmem_bytes()
+    if used > budget:
+        detail = ", ".join(
+            f"{name}={_block_bytes(b, dt) // 1024}KiB×2"
+            for name, (b, _s, dt) in
+            [(f"in{i}", t) for i, t in enumerate(rec.in_blocks)]
+            + [(f"out{i}", t) for i, t in enumerate(rec.out_blocks)])
+        findings.append(Finding(
+            PASS_ID, "PK401", "", 0,
+            f"{label} kernel `{rec.kernel_name}`: per-step VMEM "
+            f"footprint {used / 2**20:.1f} MiB exceeds the "
+            f"{budget / 2**20:.0f} MiB/core budget "
+            f"(double-buffered blocks: {detail}; grid={rec.grid}) — "
+            f"shrink the block tiles"))
+
+
+def run(project=None,
+        probes: Optional[Sequence[Tuple[str, Callable]]] = None,
+        budget: int = VMEM_BUDGET_BYTES) -> List[Finding]:
+    findings: List[Finding] = []
+    for label, thunk in (probes if probes is not None
+                         else default_probes()):
+        records: List[PallasCallRecord] = []
+        try:
+            with record_pallas_calls(records), jax.disable_jit():
+                thunk()
+        except Exception as e:  # noqa: BLE001 - surface, don't abort
+            findings.append(Finding(
+                PASS_ID, "PK400", "", 0,
+                f"{label}: kernel probe failed: "
+                f"{type(e).__name__}: {e}"))
+            continue
+        if not records:
+            findings.append(Finding(
+                PASS_ID, "PK400", "", 0,
+                f"{label}: no pallas_call reached the recorder — the "
+                f"dispatch wrapper silently fell back to the ref "
+                f"path, so the kernel is unchecked"))
+        for rec in records:
+            _check_budget(rec, label, findings, budget)
+            _check_alignment(rec, label, findings)
+    return findings

@@ -1,0 +1,105 @@
+"""Source discovery + parsed-module model for the AST passes.
+
+The scanned tree is ``src/repro`` + ``benchmarks`` + ``examples`` — the
+code that must honour the jit/registry contracts.  ``tests/`` is out of
+scope (tests legitimately poke legacy aliases, host branches, etc.), as
+are the seeded-violation fixtures under ``tests/analysis_fixtures/``
+(they exist precisely to violate the contracts).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+SCAN_DIRS = ("src/repro", "benchmarks", "examples")
+
+
+def repo_root() -> Path:
+    """The repo checkout containing this package (…/src/repro/analysis)."""
+    return Path(__file__).resolve().parents[3]
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file."""
+
+    path: Path            # absolute
+    rel: str              # repo-relative posix path
+    modname: str          # dotted module name ("repro.core.ivf", …)
+    tree: ast.Module
+
+    @classmethod
+    def parse(cls, path: Path, root: Path) -> Optional["Module"]:
+        try:
+            src = path.read_text(encoding="utf-8")
+            tree = ast.parse(src, filename=str(path))
+        except (OSError, SyntaxError):
+            return None
+        rel = path.relative_to(root).as_posix()
+        return cls(path=path, rel=rel, modname=_modname(rel), tree=tree)
+
+
+def _modname(rel: str) -> str:
+    """Dotted import name for a repo-relative path (best effort)."""
+    parts = rel[:-3].split("/") if rel.endswith(".py") else rel.split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class Project:
+    """The set of modules an AST pass runs over."""
+
+    def __init__(self, root: Optional[Path] = None,
+                 scan_dirs: Sequence[str] = SCAN_DIRS):
+        self.root = Path(root) if root is not None else repo_root()
+        self.scan_dirs = tuple(scan_dirs)
+        self._modules: Optional[List[Module]] = None
+
+    @property
+    def modules(self) -> List[Module]:
+        if self._modules is None:
+            self._modules = self._discover()
+        return self._modules
+
+    def by_modname(self) -> Dict[str, Module]:
+        return {m.modname: m for m in self.modules}
+
+    def _discover(self) -> List[Module]:
+        out: List[Module] = []
+        for d in self.scan_dirs:
+            base = self.root / d
+            if not base.exists():
+                continue
+            for dirpath, dirnames, filenames in os.walk(base):
+                dirnames[:] = [n for n in dirnames
+                               if n not in ("__pycache__",)]
+                for fn in sorted(filenames):
+                    if not fn.endswith(".py"):
+                        continue
+                    mod = Module.parse(Path(dirpath) / fn, self.root)
+                    if mod is not None:
+                        out.append(mod)
+        return out
+
+
+def modules_from_paths(paths: Sequence[Path],
+                       root: Optional[Path] = None) -> List[Module]:
+    """Parse an explicit file list (used by the fixture tests)."""
+    r = Path(root) if root is not None else repo_root()
+    out = []
+    for p in paths:
+        p = Path(p)
+        try:
+            rel_root = r if p.resolve().is_relative_to(r) else p.parent
+        except AttributeError:  # pragma: no cover - py<3.9
+            rel_root = p.parent
+        mod = Module.parse(p, rel_root)
+        if mod is not None:
+            out.append(mod)
+    return out

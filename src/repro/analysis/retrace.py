@@ -1,0 +1,217 @@
+"""Pass 3 — retrace / promotion analyzer (abstract tracing).
+
+Abstractly evaluates every registered backend through the generic
+``toploc`` drivers across batch sizes {1, 8} on a tiny synthetic index
+(milliseconds; nothing is compiled to XLA, ``jax.eval_shape`` only):
+
+  RT301  avoidable recompile: calling a driver with a *fresh but
+         equal* backend instance (or the same shapes twice) grows the
+         jit cache — the static argument churns the cache key, so
+         sustained serving would retrace per request.
+  RT302  dtype drift between the sequential and batched paths (or
+         between B=1 and B=8), and between ``start``'s session and the
+         backend's ``session_template`` — either silently breaks the
+         bit-identity contract / the SessionStore slab layout.
+  RT303  weak-typed output leaf: a weakly-typed score array takes the
+         *other* operand's dtype at the next op, so downstream math
+         can diverge between the sequential and batched engines.
+
+The tiny-index workload is built once per run with plain numpy (host)
+and exercised via ``jax.eval_shape`` so no kernels execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "retrace"
+
+_BATCH_SIZES = (1, 8)
+
+
+# ---------------------------------------------------------------------------
+# tiny synthetic workload (host-built, milliseconds)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_corpus(n: int = 96, d: int = 16) -> np.ndarray:
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@functools.lru_cache(maxsize=None)
+def _tiny_indexes() -> Dict[str, Any]:
+    """One small index per registered index kind."""
+    from repro.core import hnsw as _hnsw
+    from repro.core import ivf as _ivf
+    from repro.core import pq as _pq
+
+    docs = _tiny_corpus()
+    ivf_index = _ivf.build(docs, 8, iters=4)
+    out: Dict[str, Any] = {
+        "ivf_index": ivf_index,
+        "ivf_pq_index": _pq.build_ivf_pq(ivf_index, docs, 4, iters=4,
+                                         n_codes=16),
+        "hnsw_index": _hnsw.build(docs, m=4, seed=0),
+        "doc_vecs": jnp.asarray(docs),
+    }
+    return out
+
+
+def _tiny_knobs(name: str) -> Dict[str, Any]:
+    """Knobs scaled to the tiny corpus (h ≤ p, nprobe ≤ h, …)."""
+    return {"h": 8, "nprobe": 4, "alpha": 0.5, "rerank": 8, "ef": 8,
+            "up": 2}
+
+
+def _queries(b: int, d: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, d), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+
+def _leaf_dtypes(tree: Any) -> List[Tuple[str, str, bool]]:
+    """(keypath, dtype, weak_type) per leaf of an eval_shape result."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        key = jax.tree_util.keystr(path)
+        out.append((key, str(getattr(leaf, "dtype", "?")),
+                    bool(getattr(leaf, "weak_type", False))))
+    return out
+
+
+def _eval(fn, be, *args, **kwargs):
+    # the backend is a jit-static argument: bind it (and k) in the
+    # partial so eval_shape only abstracts the array operands
+    return jax.eval_shape(functools.partial(fn, be, **kwargs), *args)
+
+
+def _cache_size(fn) -> Optional[int]:
+    try:
+        return fn._cache_size()
+    except AttributeError:
+        return None
+
+
+def _check_backend(name: str, findings: List[Finding],
+                   k: int = 4) -> None:
+    from repro.core import backend as _backend
+    from repro.core import toploc as _tl
+
+    cls = _backend.get(name)
+    knobs = _tiny_knobs(name)
+    be = _backend.make(name, **knobs)
+    index = _tiny_indexes()[cls.index_kwarg]
+    d = be.query_dim(index)
+    where = f"backend {name!r}"
+
+    # ---- RT302: sequential vs batched dtype agreement ----------------
+    per_b: Dict[int, Any] = {}
+    for b in _BATCH_SIZES:
+        per_b[b] = _eval(_tl.plain_batch, be, index, _queries(b, d),
+                         k=k)
+    seq = _eval(_tl.plain, be, index,
+                jax.ShapeDtypeStruct((d,), jnp.float32), k=k)
+
+    d1 = _leaf_dtypes(per_b[_BATCH_SIZES[0]])
+    for b in _BATCH_SIZES[1:]:
+        db = _leaf_dtypes(per_b[b])
+        for (k1, t1, _), (k2, t2, _) in zip(d1, db):
+            if t1 != t2:
+                findings.append(Finding(
+                    PASS_ID, "RT302", "", 0,
+                    f"{where}: `plain_batch` leaf `{k2}` is {t1} at "
+                    f"B={_BATCH_SIZES[0]} but {t2} at B={b} — dtype "
+                    f"must be batch-size-stable for bit-identity"))
+    for (k1, t1, _), (k2, t2, _) in zip(_leaf_dtypes(seq), d1):
+        if t1 != t2:
+            findings.append(Finding(
+                PASS_ID, "RT302", "", 0,
+                f"{where}: sequential `plain` leaf `{k1}` is {t1} but "
+                f"the batched path yields {t2} — promotion drift "
+                f"between engines"))
+
+    # ---- RT303: weak-typed outputs -----------------------------------
+    for key, dt, weak in _leaf_dtypes(per_b[_BATCH_SIZES[-1]]):
+        if weak:
+            findings.append(Finding(
+                PASS_ID, "RT303", "", 0,
+                f"{where}: `plain_batch` leaf `{key}` ({dt}) is "
+                f"weak-typed — it will adopt the other operand's "
+                f"dtype downstream; anchor it with an explicit "
+                f"`jnp.asarray(…, dtype)`"))
+
+    # ---- stateful surface: start/step + session_template -------------
+    if getattr(cls, "stateful", True):
+        q0 = jax.ShapeDtypeStruct((d,), jnp.float32)
+        v, i, sess, stats = _eval(_tl.start, be, index, q0, k=k)
+        tmpl = be.session_template(index)
+        t_sess = _leaf_dtypes(sess)
+        t_tmpl = _leaf_dtypes(tmpl)
+        for (k1, t1, _), (k2, t2, _) in zip(t_sess, t_tmpl):
+            if t1 != t2:
+                findings.append(Finding(
+                    PASS_ID, "RT302", "", 0,
+                    f"{where}: `start` session leaf `{k1}` is {t1} "
+                    f"but `session_template` declares {t2} — the "
+                    f"SessionStore slab would promote on scatter"))
+        # step must preserve the session layout exactly
+        _, _, sess2, _ = _eval(_tl.step, be, index, sess, q0, k=k)
+        for (k1, t1, _), (k2, t2, _) in zip(t_sess,
+                                            _leaf_dtypes(sess2)):
+            if t1 != t2:
+                findings.append(Finding(
+                    PASS_ID, "RT302", "", 0,
+                    f"{where}: `step` changes session leaf `{k1}` "
+                    f"from {t1} to {t2} — sessions must be "
+                    f"layout-stable across turns"))
+
+    # ---- RT301: cache-key churn --------------------------------------
+    # Drivers are jitted with backend/k static.  A fresh-but-equal
+    # backend instance and a repeat same-shape call must both hit the
+    # existing cache entry; growth means the static key churns.
+    driver = _tl.plain_batch
+    before = _cache_size(driver)
+    if before is not None:
+        q = jnp.zeros((2, d), jnp.float32)
+        driver(be, index, q, k=k)
+        warm = _cache_size(driver)
+        be_fresh = _backend.make(name, **knobs)
+        driver(be_fresh, index, q, k=k)
+        driver(be, index, jnp.ones((2, d), jnp.float32), k=k)
+        after = _cache_size(driver)
+        if after > warm:
+            findings.append(Finding(
+                PASS_ID, "RT301", "", 0,
+                f"{where}: re-calling `toploc.plain_batch` with a "
+                f"fresh equal backend (or equal shapes) grew the jit "
+                f"cache {warm}→{after} — static-arg churn forces a "
+                f"retrace per instance"))
+
+
+def run(project=None,
+        names: Optional[Sequence[str]] = None) -> List[Finding]:
+    from repro.core import backend as _backend
+
+    todo = list(names) if names is not None else list(_backend.names())
+    findings: List[Finding] = []
+    for name in sorted(todo):
+        try:
+            _check_backend(name, findings)
+        except Exception as e:  # noqa: BLE001 - surface, don't abort
+            findings.append(Finding(
+                PASS_ID, "RT300", "", 0,
+                f"backend {name!r}: retrace probe itself failed: "
+                f"{type(e).__name__}: {e}"))
+    return findings

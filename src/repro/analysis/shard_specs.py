@@ -1,0 +1,266 @@
+"""Pass 5 — shard_map spec checker (live, 1-device mesh).
+
+Cross-checks ``distributed/sharding.py`` placement specs against what
+the registered scan plugins (``register_sharding`` consumers) actually
+hand to ``shard_map``.  For every entry in ``_SHARDING_REGISTRY`` the
+pass builds a tiny index, runs ``shard_backend`` on a 1-device mesh,
+patches ``repro.compat.shard_map`` with a recording wrapper, and
+drives the plugin once with concrete arrays — so the captured
+``in_specs`` can be identity-matched to the placed index leaves:
+
+  SS501  an array argument without a placement: an index leaf with no
+         ``NamedSharding``, an ``in_specs`` tuple whose arity differs
+         from the plugin's argument list, or a plugin ``in_spec`` that
+         contradicts the placement the index leaf actually has (the
+         resulting mid-jit reshard is a silent all-gather per call).
+  SS502  replicated state partitioned (or vice versa): centroids /
+         codebooks / adjacency / entry metadata must stay replicated;
+         corpus-sized arrays (posting lists, code lists, doc rows)
+         must shard over the mesh axis; non-index operands (queries,
+         selections, ADC tables) and every output must be replicated —
+         TopLoc session math runs identically on every device.
+         ``SessionStore`` slabs built with a mesh must replicate too.
+  SS503  plugin not jit-static (not a frozen hashable dataclass) or
+         registered against a field the backend dataclass lacks.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "shard-specs"
+
+# index fields that must stay replicated / must shard (dim 0)
+REPLICATED_FIELDS = {"centroids", "codewords", "adj0", "upper_adj",
+                     "entry_point", "node_level"}
+SHARDED_FIELDS = {"list_vecs", "list_ids", "list_sizes", "list_codes",
+                  "doc_vecs", "vectors"}
+
+
+def _spec_tuple(spec) -> Tuple:
+    """PartitionSpec → comparable tuple, trailing Nones stripped."""
+    t = tuple(spec) if spec is not None else ()
+    while t and t[-1] is None:
+        t = t[:-1]
+    return t
+
+
+def _is_replicated(spec) -> bool:
+    return _spec_tuple(spec) == ()
+
+
+@dataclasses.dataclass
+class ShardMapRecord:
+    in_specs: Tuple
+    out_specs: Any
+    args: Tuple
+
+
+@contextlib.contextmanager
+def record_shard_maps(records: List[ShardMapRecord]):
+    """Wrap ``repro.compat.shard_map`` to capture (specs, args)."""
+    from repro import compat
+
+    real = compat.shard_map
+
+    def fake(fn, *, mesh, in_specs, out_specs, **kw):
+        wrapped = real(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, **kw)
+
+        def runner(*args):
+            records.append(ShardMapRecord(
+                in_specs=tuple(in_specs) if isinstance(
+                    in_specs, (tuple, list)) else (in_specs,),
+                out_specs=out_specs, args=args))
+            return wrapped(*args)
+
+        return runner
+
+    compat.shard_map = fake
+    try:
+        yield
+    finally:
+        compat.shard_map = real
+
+
+def _leaf_sharding_spec(leaf) -> Optional[Tuple]:
+    sh = getattr(leaf, "sharding", None)
+    if isinstance(sh, NamedSharding):
+        return _spec_tuple(sh.spec)
+    return None
+
+
+def _call_plugin(name: str, backend, index, d: int):
+    """Drive the plugged-in scan/search once with concrete operands."""
+    q = jnp.zeros((4, d), jnp.float32)
+    if name == "hnsw":
+        return backend.search(index, q, ef=8, k=4)
+    sel = jnp.zeros((4, 4), jnp.int32)
+    if name == "ivf_pq":
+        return backend.scan(index, q, sel, 4, 8)
+    return backend.scan(index, q, sel, 4)
+
+
+def _check_entry(name: str, entry, mesh, axis: str,
+                 findings: List[Finding]) -> None:
+    from repro.analysis.retrace import _tiny_indexes, _tiny_knobs
+    from repro.core import backend as _backend
+    from repro.serving.sessions import store_for_backend
+
+    shard_index, plugin_cls, field = entry
+    where = f"sharding[{name!r}]"
+
+    # ---- SS503: plugin is a jit-static plug for a real field ---------
+    if not (dataclasses.is_dataclass(plugin_cls)
+            and plugin_cls.__dataclass_params__.frozen):
+        findings.append(Finding(
+            PASS_ID, "SS503", "", 0,
+            f"{where}: plugin {plugin_cls.__name__} is not a frozen "
+            f"dataclass — it cannot ride through jit on the backend"))
+    cls = _backend.get(name)
+    if field not in {f.name for f in dataclasses.fields(cls)}:
+        findings.append(Finding(
+            PASS_ID, "SS503", "", 0,
+            f"{where}: registered field {field!r} does not exist on "
+            f"backend class {cls.__name__} — shard_backend would "
+            f"raise at replace()"))
+        return
+
+    be = _backend.make(name, **_tiny_knobs(name))
+    index = _tiny_indexes()[cls.index_kwarg]
+    # wire the *entry under check* (mirrors shard_backend, but honours
+    # an injected registry — the fixture tests pass seeded-bad entries)
+    idx2 = shard_index(mesh, index, axis=axis)
+    be2 = dataclasses.replace(be, **{field: plugin_cls(mesh, axis)})
+    try:
+        hash(be2)
+    except TypeError as e:
+        findings.append(Finding(
+            PASS_ID, "SS503", "", 0,
+            f"{where}: backend with plugged {plugin_cls.__name__} is "
+            f"unhashable ({e}) — the sharded drivers cannot jit it"))
+        return
+
+    # ---- placement of every index leaf + replication policy ----------
+    field_names = getattr(type(idx2), "_fields",
+                          tuple(range(len(jax.tree.leaves(idx2)))))
+    by_id: Dict[int, str] = {}
+    for fname in field_names:
+        leaf = getattr(idx2, fname, None)
+        if leaf is None:
+            continue
+        by_id[id(leaf)] = str(fname)
+        spec = _leaf_sharding_spec(leaf)
+        if spec is None:
+            findings.append(Finding(
+                PASS_ID, "SS501", "", 0,
+                f"{where}: index leaf `{fname}` has no NamedSharding "
+                f"after shard_backend — it would be re-placed on "
+                f"every dispatch"))
+            continue
+        if fname in REPLICATED_FIELDS and spec != ():
+            findings.append(Finding(
+                PASS_ID, "SS502", "", 0,
+                f"{where}: `{fname}` is replicated TopLoc state but "
+                f"is placed with spec {spec} — partitioning it "
+                f"breaks the every-device-identical session math"))
+        if fname in SHARDED_FIELDS and spec == ():
+            findings.append(Finding(
+                PASS_ID, "SS502", "", 0,
+                f"{where}: corpus-sized `{fname}` is fully "
+                f"replicated — the placement buys no memory scaling; "
+                f"expected dim-0 sharding over {axis!r}"))
+
+    # ---- drive the plugin, capture the shard_map it builds -----------
+    records: List[ShardMapRecord] = []
+    try:
+        with record_shard_maps(records):
+            _call_plugin(name, be2, idx2, be.query_dim(index))
+    except Exception as e:  # noqa: BLE001 - surface, don't abort
+        findings.append(Finding(
+            PASS_ID, "SS500", "", 0,
+            f"{where}: plugin probe failed: {type(e).__name__}: {e}"))
+        return
+    if not records:
+        findings.append(Finding(
+            PASS_ID, "SS500", "", 0,
+            f"{where}: plugin never called compat.shard_map — the "
+            f"sharded path is unchecked"))
+        return
+
+    for rec in records:
+        if len(rec.in_specs) != len(rec.args):
+            findings.append(Finding(
+                PASS_ID, "SS501", "", 0,
+                f"{where}: shard_map in_specs arity "
+                f"{len(rec.in_specs)} != {len(rec.args)} arguments — "
+                f"an array operand is missing its placement"))
+            continue
+        for pos, (spec, arg) in enumerate(zip(rec.in_specs, rec.args)):
+            declared = _spec_tuple(spec)
+            fname = by_id.get(id(arg))
+            if fname is not None:
+                placed = _leaf_sharding_spec(arg)
+                if placed is not None and placed != declared:
+                    findings.append(Finding(
+                        PASS_ID, "SS501", "", 0,
+                        f"{where}: `{fname}` is placed as {placed} "
+                        f"but the plugin declares in_spec "
+                        f"{declared} — every call pays a silent "
+                        f"reshard"))
+            elif declared != ():
+                findings.append(Finding(
+                    PASS_ID, "SS502", "", 0,
+                    f"{where}: non-index operand #{pos} (queries/"
+                    f"selection/tables) declared with partitioned "
+                    f"in_spec {declared} — per-turn TopLoc inputs "
+                    f"must be replicated"))
+        outs = (rec.out_specs if isinstance(rec.out_specs,
+                                            (tuple, list))
+                else (rec.out_specs,))
+        for pos, ospec in enumerate(outs):
+            if not _is_replicated(ospec):
+                findings.append(Finding(
+                    PASS_ID, "SS502", "", 0,
+                    f"{where}: out_specs[{pos}] = "
+                    f"{_spec_tuple(ospec)} is partitioned — merged "
+                    f"top-k results must come back replicated"))
+
+    # ---- session slab replication ------------------------------------
+    store = store_for_backend(be2, idx2, n_slots=2, mesh=mesh)
+    if store is not None:
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                store._slab)[0]:
+            spec = _leaf_sharding_spec(leaf)
+            if spec is None or spec != ():
+                findings.append(Finding(
+                    PASS_ID, "SS502", "", 0,
+                    f"{where}: SessionStore slab leaf "
+                    f"`{jax.tree_util.keystr(path)}` is not "
+                    f"replicated over the mesh (spec={spec}) — "
+                    f"sessions are replicated TopLoc state"))
+
+
+def run(project=None, registry: Optional[Dict] = None,
+        axis: str = "model") -> List[Finding]:
+    from repro.distributed import retrieval as _ret
+
+    reg = registry if registry is not None else _ret._SHARDING_REGISTRY
+    mesh = _ret.retrieval_mesh(1, axis=axis)
+    findings: List[Finding] = []
+    for name in sorted(reg):
+        try:
+            _check_entry(name, reg[name], mesh, axis, findings)
+        except Exception as e:  # noqa: BLE001 - surface, don't abort
+            findings.append(Finding(
+                PASS_ID, "SS500", "", 0,
+                f"sharding[{name!r}]: probe failed: "
+                f"{type(e).__name__}: {e}"))
+    return findings

@@ -1,0 +1,159 @@
+"""Pass 2 — jit-static contract checker for registered backends.
+
+Every class in the ``core.backend`` registry rides through ``jax.jit``
+as a *static argument* (the generic drivers declare
+``static_argnames=("backend", "k")``).  That only works if the instance
+is hashable, equality-stable, and array-free — an unhashable backend
+raises at dispatch, an identity-hashed one silently retraces per
+instance, and an array-valued field would bake device data into the
+jit cache key.  Checked by *introspecting the live registry* (import,
+construct, hash), never by string-matching source:
+
+  SC201  registered class is not a frozen dataclass
+  SC202  instances are not hashable, or two equal default instances
+         hash differently (cache-key churn)
+  SC203  a field holds (or is annotated as) a jax/numpy array
+  SC204  driver surface incomplete: ``plain_batch`` missing, stateful
+         backends missing ``start``/``step``/``start_batch``/
+         ``step_batch``/``session_template``, ``step_batch`` not
+         accepting ``is_first``, or ``name``/``index_kwarg`` left at
+         the base-class placeholder
+  SC205  backend not constructible via ``make(name)`` with defaults
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Dict, List, Optional, Type
+
+import jax
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "static-contract"
+
+_STATEFUL_SURFACE = ("start", "step", "start_batch", "step_batch")
+
+
+def _is_array(x) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
+def _check_class(name: str, cls: type, base: type,
+                 findings: List[Finding]) -> None:
+    where = f"backend {name!r} ({cls.__module__}.{cls.__qualname__})"
+
+    if not (dataclasses.is_dataclass(cls)
+            and cls.__dataclass_params__.frozen):
+        findings.append(Finding(
+            PASS_ID, "SC201", "", 0,
+            f"{where} must be a frozen dataclass to be jit-static"))
+        return  # downstream checks assume dataclass machinery
+
+    # SC205 — default-constructible (make() with no knobs)
+    try:
+        inst = cls()
+        inst2 = cls()
+    except Exception as e:  # noqa: BLE001 - report, don't crash the pass
+        findings.append(Finding(
+            PASS_ID, "SC205", "", 0,
+            f"{where} is not default-constructible: {e!r}"))
+        return
+
+    # SC202 — hashable and equality/hash-consistent across instances
+    try:
+        h1, h2 = hash(inst), hash(inst2)
+    except TypeError as e:
+        findings.append(Finding(
+            PASS_ID, "SC202", "", 0,
+            f"{where} is unhashable ({e}); it cannot be a jit static "
+            f"argument"))
+    else:
+        if inst != inst2 or h1 != h2:
+            findings.append(Finding(
+                PASS_ID, "SC202", "", 0,
+                f"{where}: two default instances are not equal with "
+                f"equal hashes — every instance would retrace the "
+                f"driver (jit cache-key churn)"))
+
+    # SC203 — array-free fields (values and annotations)
+    for f in dataclasses.fields(cls):
+        v = getattr(inst, f.name, None)
+        leaves = jax.tree.leaves(v)
+        if _is_array(v) or any(_is_array(x) for x in leaves):
+            findings.append(Finding(
+                PASS_ID, "SC203", "", 0,
+                f"{where}: field `{f.name}` holds an array — device "
+                f"data must flow as a traced argument, not live on "
+                f"the static backend"))
+        elif "Array" in str(f.type) or "ndarray" in str(f.type):
+            findings.append(Finding(
+                PASS_ID, "SC203", "", 0,
+                f"{where}: field `{f.name}` is annotated as an array "
+                f"type; backends must be array-free to stay "
+                f"jit-static"))
+
+    # SC204 — driver surface
+    if getattr(cls, "name", "?") in ("?", "", None):
+        findings.append(Finding(
+            PASS_ID, "SC204", "", 0,
+            f"{where}: ClassVar `name` left at the base placeholder"))
+    if getattr(cls, "index_kwarg", "?") in ("?", "", None):
+        findings.append(Finding(
+            PASS_ID, "SC204", "", 0,
+            f"{where}: ClassVar `index_kwarg` left at the base "
+            f"placeholder — the engines cannot route an index to it"))
+
+    if not callable(getattr(cls, "plain_batch", None)):
+        findings.append(Finding(
+            PASS_ID, "SC204", "", 0,
+            f"{where}: missing `plain_batch` — every backend must "
+            f"serve stateless batched turns"))
+    if not callable(getattr(cls, "plain", None)):
+        findings.append(Finding(
+            PASS_ID, "SC204", "", 0, f"{where}: missing `plain`"))
+
+    if getattr(cls, "stateful", True):
+        for meth in _STATEFUL_SURFACE:
+            impl = getattr(cls, meth, None)
+            if impl is None or impl is getattr(base, meth, None):
+                findings.append(Finding(
+                    PASS_ID, "SC204", "", 0,
+                    f"{where}: stateful backend does not override "
+                    f"`{meth}` (base raises NotImplementedError at "
+                    f"trace time)"))
+        sb = getattr(cls, "step_batch", None)
+        if sb is not None and sb is not getattr(base, "step_batch",
+                                                None):
+            try:
+                params = inspect.signature(sb).parameters
+            except (TypeError, ValueError):
+                params = {}
+            if "is_first" not in params:
+                findings.append(Finding(
+                    PASS_ID, "SC204", "", 0,
+                    f"{where}: `step_batch` does not accept "
+                    f"`is_first` — the batched engine cannot route "
+                    f"first turns through it"))
+        st = getattr(cls, "session_template", None)
+        if st is None or st is getattr(base, "session_template", None):
+            findings.append(Finding(
+                PASS_ID, "SC204", "", 0,
+                f"{where}: stateful backend does not override "
+                f"`session_template` — SessionStore cannot size its "
+                f"slab"))
+
+
+def run(project=None,
+        registry: Optional[Dict[str, type]] = None,
+        base: Optional[type] = None) -> List[Finding]:
+    """Check every registered backend (or an injected ``registry``)."""
+    from repro.core import backend as _backend
+    reg: Dict[str, Type] = (dict(registry) if registry is not None
+                            else dict(_backend._REGISTRY))
+    base_cls = base if base is not None else _backend.RetrievalBackend
+    findings: List[Finding] = []
+    for name in sorted(reg):
+        _check_class(name, reg[name], base_cls, findings)
+    return findings

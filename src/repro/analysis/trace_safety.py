@@ -1,0 +1,547 @@
+"""Pass 1 — trace-safety lint (pure AST).
+
+Finds host-side Python that silently misbehaves under ``jax.jit``
+tracing, *scoped to functions actually reachable from a jit boundary*:
+
+  TS101  Python ``if``/``while`` branching on a traced value (a
+         non-static parameter of a jitted function, or the result of a
+         ``jnp``/``jax.lax`` call) — under trace this raises
+         ``TracerBoolConversionError`` or, worse, bakes one branch in.
+  TS102  ``bool()``/``int()``/``float()`` materialisation of a traced
+         expression.
+  TS103  ``np.*`` calls inside traced code — numpy silently forces the
+         tracer to a concrete array (ConcretizationError) or computes
+         on the host at trace time, freezing the value into the jaxpr.
+  TS104  wall-clock / RNG reads (``time.*``, ``random.*``,
+         ``np.random.*``) inside traced code — evaluated once at trace
+         time, then constant-folded into every later call.
+
+Reachability: seeds are (a) functions decorated with ``jax.jit`` /
+``functools.partial(jax.jit, …)`` / ``jax.custom_vjp``, (b) callables
+handed to tracing higher-order ops (``pallas_call``, ``lax.cond`` /
+``scan`` / ``while_loop`` / ``fori_loop`` / ``switch``, ``vmap``,
+``shard_map``, ``defvjp``, …), and (c) methods of ``RetrievalBackend``
+subclasses and of frozen-dataclass scan/search plugins (both ride
+through jit as static arguments, so their methods are traced).  From
+the seeds, reachability propagates through plain calls and callable
+references (``list_scan=self._list_scan``) across module boundaries via
+import-alias resolution.
+
+Precision model: for directly-jitted seeds the decorator's
+``static_argnames`` are known, so branching on a *non-static* parameter
+is flagged; for transitively-traced helpers parameter staticness is
+unknown, so only the conservative rules fire (``jnp``/``jax`` call
+results, ``np.*``, clocks/RNG).  ``x is None`` tests, ``.shape`` /
+``.ndim`` / ``.dtype`` / ``.size`` reads, ``len()`` and
+``isinstance()`` stay exempt everywhere — those are static under
+tracing by construction.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.project import Module, Project
+
+PASS_ID = "trace-safety"
+
+# higher-order ops whose callable arguments are traced
+_TRACING_HOFS = {
+    "pallas_call", "cond", "scan", "while_loop", "fori_loop", "switch",
+    "vmap", "pmap", "shard_map", "custom_vjp", "defvjp", "checkpoint",
+    "remat", "associative_scan", "map", "custom_jvp", "defjvp",
+    "eval_shape", "grad", "value_and_grad", "make_jaxpr",
+}
+
+# attribute reads that stay static under tracing
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "weak_type"}
+# jnp helpers returning static (python) values
+_STATIC_JNP_FNS = {"shape", "ndim", "size", "result_type", "issubdtype",
+                   "iinfo", "finfo", "dtype"}
+# np attribute *calls* that are trace-safe (dtype constructors on host
+# literals)
+_SAFE_NP_CALLS = {"dtype", "float16", "float32", "float64", "int8",
+                  "int16", "int32", "int64", "uint8", "uint16", "uint32",
+                  "bool_"}
+_EXEMPT_CALLS = {"len", "isinstance", "issubclass", "getattr", "hasattr",
+                 "type", "range"}
+
+_BACKEND_DRIVER_METHODS = {
+    "start", "step", "plain", "start_batch", "step_batch", "plain_batch",
+}
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` → ["a", "b", "c"]; None for non-name-rooted chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+class _ModuleIndex:
+    """Per-module symbol tables used by the reachability analysis."""
+
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.imports: Dict[str, str] = {}        # alias -> dotted module
+        self.from_imports: Dict[str, Tuple[str, str]] = {}
+        self.functions: Dict[str, ast.AST] = {}  # qualname -> def node
+        self.func_class: Dict[str, Optional[str]] = {}
+        self.classes: Dict[str, ast.ClassDef] = {}
+        self._collect()
+
+    def _collect(self) -> None:
+        for node in self.mod.tree.body:
+            self._top(node)
+
+    def _top(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                self.imports[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.level == 0:
+                for a in node.names:
+                    local = a.asname or a.name
+                    self.from_imports[local] = (node.module, a.name)
+                    # ``from repro.core import ivf as _ivf`` imports a
+                    # *module* under an alias — treat it like an import
+                    self.imports.setdefault(
+                        local, f"{node.module}.{a.name}")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.functions[node.name] = node
+            self.func_class[node.name] = None
+        elif isinstance(node, ast.ClassDef):
+            self.classes[node.name] = node
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                    q = f"{node.name}.{sub.name}"
+                    self.functions[q] = sub
+                    self.func_class[q] = node.name
+
+    def resolve_alias(self, name: str) -> Optional[str]:
+        """Local name → dotted module it refers to (or None)."""
+        return self.imports.get(name)
+
+
+FuncKey = Tuple[str, str]        # (modname, qualname)
+
+
+class _Reachability:
+    """Fixed-point propagation of 'traced' across the project."""
+
+    def __init__(self, indexes: Dict[str, _ModuleIndex]):
+        self.indexes = indexes
+        # traced functions → known static param names (None = unknown)
+        self.traced: Dict[FuncKey, Optional[Set[str]]] = {}
+        self._work: List[FuncKey] = []
+
+    def mark(self, key: FuncKey,
+             static: Optional[Set[str]] = None) -> None:
+        if key in self.traced:
+            if static is not None and self.traced[key] is None:
+                self.traced[key] = static
+            return
+        self.traced[key] = static
+        self._work.append(key)
+
+    # -- seed discovery ------------------------------------------------
+
+    def seed(self) -> None:
+        for modname, idx in self.indexes.items():
+            for qual, fn in idx.functions.items():
+                static = self._jit_decorator_static(fn, idx)
+                if static is not None:
+                    self.mark((modname, qual), static)
+                    # positional static/nondiff argnums → param names
+                    posns = self._static_positions(fn, idx)
+                    if posns:
+                        args = _BodyChecker._all_args(fn)
+                        static.update(args[i].arg for i in posns
+                                      if i < len(args))
+            for cname, cnode in idx.classes.items():
+                if self._is_traced_class(cnode, idx):
+                    for qual, cls in idx.func_class.items():
+                        if cls == cname:
+                            self.mark((modname, qual), None)
+            # callables handed to tracing HOFs anywhere in the module
+            for call in ast.walk(idx.mod.tree):
+                if isinstance(call, ast.Call):
+                    self._seed_hof_args(call, modname, idx)
+
+    def _jit_decorator_static(self, fn: ast.AST,
+                              idx: _ModuleIndex) -> Optional[Set[str]]:
+        """Static-argname set if ``fn`` is jit-decorated, else None."""
+        for dec in getattr(fn, "decorator_list", []):
+            found = self._jit_expr_static(dec, idx)
+            if found is not None:
+                return found
+        return None
+
+    def _jit_expr_static(self, expr: ast.AST,
+                         idx: _ModuleIndex) -> Optional[Set[str]]:
+        chain = _attr_chain(expr)
+        if chain and chain[-1] in ("jit", "custom_vjp", "custom_jvp"):
+            return set()
+        if isinstance(expr, ast.Call):
+            fchain = _attr_chain(expr.func) or []
+            if fchain and fchain[-1] in ("jit", "custom_vjp",
+                                         "custom_jvp"):
+                return self._static_names(expr)
+            if fchain and fchain[-1] == "partial" and expr.args:
+                inner = _attr_chain(expr.args[0]) or []
+                if inner and inner[-1] in ("jit", "custom_vjp",
+                                           "custom_jvp"):
+                    return self._static_names(expr)
+        return None
+
+    @staticmethod
+    def _static_names(call: ast.Call) -> Set[str]:
+        names: Set[str] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                v = kw.value
+                elts = (v.elts if isinstance(v, (ast.Tuple, ast.List))
+                        else [v])
+                for e in elts:
+                    if isinstance(e, ast.Constant) and isinstance(
+                            e.value, str):
+                        names.add(e.value)
+        return names
+
+    def _static_positions(self, fn: ast.AST,
+                          idx: _ModuleIndex) -> Set[int]:
+        """``static_argnums``/``nondiff_argnums`` positions from any
+        jit/custom_vjp decorator on ``fn``."""
+        posns: Set[int] = set()
+        for dec in getattr(fn, "decorator_list", []):
+            if not isinstance(dec, ast.Call):
+                continue
+            if self._jit_expr_static(dec, idx) is None:
+                continue
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnums", "nondiff_argnums"):
+                    v = kw.value
+                    elts = (v.elts if isinstance(v, (ast.Tuple,
+                                                     ast.List))
+                            else [v])
+                    for e in elts:
+                        if isinstance(e, ast.Constant) and isinstance(
+                                e.value, int):
+                            posns.add(e.value)
+        return posns
+
+    def _is_traced_class(self, cnode: ast.ClassDef,
+                         idx: _ModuleIndex) -> bool:
+        """Backend subclasses and frozen-dataclass callables are jit-
+        static values whose methods execute under trace."""
+        for base in cnode.bases:
+            chain = _attr_chain(base) or []
+            if chain and chain[-1].endswith("Backend"):
+                return True
+        has_call = any(
+            isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name == "__call__" for n in cnode.body)
+        if not has_call:
+            return False
+        for dec in cnode.decorator_list:
+            chain = _attr_chain(dec if not isinstance(dec, ast.Call)
+                                else dec.func) or []
+            if chain and chain[-1] == "dataclass":
+                return True
+        return False
+
+    def _seed_hof_args(self, call: ast.Call, modname: str,
+                       idx: _ModuleIndex) -> None:
+        fchain = _attr_chain(call.func) or []
+        if not fchain or fchain[-1] not in _TRACING_HOFS:
+            return
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            self._mark_callable_ref(arg, modname, idx)
+
+    def _mark_callable_ref(self, node: ast.AST, modname: str,
+                           idx: _ModuleIndex) -> None:
+        if isinstance(node, ast.Call):
+            # pallas_call(functools.partial(kernel, …), …) and friends
+            chain = _attr_chain(node.func) or []
+            if chain and chain[-1] == "partial" and node.args:
+                self._mark_callable_ref(node.args[0], modname, idx)
+            return
+        if isinstance(node, ast.Name):
+            if node.id in idx.functions:
+                self.mark((modname, node.id), None)
+            elif node.id in idx.from_imports:
+                srcmod, orig = idx.from_imports[node.id]
+                self._mark_external(srcmod, orig)
+        elif isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if chain and len(chain) == 2:
+                target = idx.resolve_alias(chain[0])
+                if target:
+                    self._mark_external(target, chain[1])
+
+    def _mark_external(self, modname: str, qual: str) -> None:
+        idx = self.indexes.get(modname)
+        if idx is not None and qual in idx.functions:
+            self.mark((modname, qual), None)
+
+    # -- propagation ---------------------------------------------------
+
+    def propagate(self) -> None:
+        while self._work:
+            modname, qual = self._work.pop()
+            idx = self.indexes.get(modname)
+            if idx is None:
+                continue
+            fn = idx.functions.get(qual)
+            if fn is None:
+                continue
+            cls = idx.func_class.get(qual)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    self._follow_call(node, modname, idx, cls)
+                elif isinstance(node, (ast.Name, ast.Attribute)):
+                    self._follow_ref(node, modname, idx, cls)
+
+    def _follow_call(self, call: ast.Call, modname: str,
+                     idx: _ModuleIndex, cls: Optional[str]) -> None:
+        f = call.func
+        if isinstance(f, ast.Name):
+            if f.id in idx.functions:
+                self.mark((modname, f.id), None)
+            elif f.id in idx.from_imports:
+                srcmod, orig = idx.from_imports[f.id]
+                self._mark_external(srcmod, orig)
+        elif isinstance(f, ast.Attribute):
+            chain = _attr_chain(f)
+            if chain is None:
+                return
+            if chain[0] == "self" and cls and len(chain) == 2:
+                q = f"{cls}.{chain[1]}"
+                if q in idx.functions:
+                    self.mark((modname, q), None)
+            elif len(chain) == 2:
+                target = idx.resolve_alias(chain[0])
+                if target:
+                    self._mark_external(target, chain[1])
+
+    def _follow_ref(self, node: ast.AST, modname: str,
+                    idx: _ModuleIndex, cls: Optional[str]) -> None:
+        """Callable *references* (``list_scan=self._list_scan``,
+        ``kern = functools.partial(_kernel, …)``, ``self.scan or
+        _ivf._scan_lists``) flow into traced code."""
+        if isinstance(node, ast.Name) and node.id in idx.functions \
+                and idx.func_class.get(node.id) is None:
+            self.mark((modname, node.id), None)
+            return
+        if isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if chain and chain[0] == "self" and cls and len(chain) == 2:
+                q = f"{cls}.{chain[1]}"
+                if q in idx.functions:
+                    self.mark((modname, q), None)
+            elif chain and len(chain) == 2:
+                target = idx.resolve_alias(chain[0])
+                if target:
+                    self._mark_external(target, chain[1])
+
+
+class _BodyChecker(ast.NodeVisitor):
+    """Emit TS1xx findings for one traced function body."""
+
+    def __init__(self, mod: Module, idx: _ModuleIndex, qual: str,
+                 static: Optional[Set[str]],
+                 findings: List[Finding]):
+        self.mod = mod
+        self.idx = idx
+        self.qual = qual
+        self.static = static
+        self.findings = findings
+        fn = idx.functions[qual]
+        self.params = {a.arg for a in self._all_args(fn)}
+
+    @staticmethod
+    def _all_args(fn) -> list:
+        a = fn.args
+        return (list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+                + ([a.vararg] if a.vararg else [])
+                + ([a.kwarg] if a.kwarg else []))
+
+    def run(self) -> None:
+        fn = self.idx.functions[self.qual]
+        for stmt in fn.body:
+            self.visit(stmt)
+
+    def _emit(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            pass_id=PASS_ID, code=code, path=self.mod.rel,
+            line=getattr(node, "lineno", 0),
+            message=f"in traced `{self.qual}`: {msg}"))
+
+    # -- classification helpers ---------------------------------------
+
+    def _module_of(self, root: str) -> Optional[str]:
+        return self.idx.resolve_alias(root)
+
+    def _is_jax_call(self, node: ast.AST) -> bool:
+        """A call whose result is a traced array (jnp/jax.lax/...)."""
+        if not isinstance(node, ast.Call):
+            return False
+        chain = _attr_chain(node.func)
+        if not chain:
+            return False
+        target = self._module_of(chain[0]) or chain[0]
+        if target.startswith("jax") or target == "jnp":
+            return chain[-1] not in _STATIC_JNP_FNS
+        return False
+
+    def _tracer_names(self, expr: ast.AST) -> List[ast.Name]:
+        """Occurrences of non-static params used as array values."""
+        if self.static is None:
+            return []
+        out: List[ast.Name] = []
+        parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(expr):
+            for child in ast.iter_child_nodes(parent):
+                parents[child] = parent
+        for node in ast.walk(expr):
+            if not (isinstance(node, ast.Name)
+                    and node.id in self.params
+                    and node.id not in self.static
+                    and node.id != "self"):
+                continue
+            if self._exempt_occurrence(node, parents):
+                continue
+            out.append(node)
+        return out
+
+    @staticmethod
+    def _exempt_occurrence(node: ast.AST,
+                           parents: Dict[ast.AST, ast.AST]) -> bool:
+        cur = node
+        while cur in parents:
+            p = parents[cur]
+            if isinstance(p, ast.Attribute) and p.attr in _SHAPE_ATTRS:
+                return True
+            if isinstance(p, ast.Subscript) and p.value is not cur:
+                return True          # x only used as an *index* source
+            if isinstance(p, ast.Call):
+                chain = _attr_chain(p.func) or []
+                if chain and (chain[-1] in _EXEMPT_CALLS
+                              or chain[-1] in _STATIC_JNP_FNS):
+                    return True
+            if isinstance(p, ast.Compare) and any(
+                    isinstance(op, (ast.Is, ast.IsNot))
+                    for op in p.ops):
+                return True
+            cur = p
+        return False
+
+    def _condition_issue(self, test: ast.AST) -> Optional[str]:
+        for sub in ast.walk(test):
+            if self._is_jax_call(sub):
+                chain = _attr_chain(sub.func) or ["?"]
+                return f"`{'.'.join(chain)}(…)` result"
+        names = self._tracer_names(test)
+        if names:
+            return f"traced parameter `{names[0].id}`"
+        return None
+
+    # -- visitors ------------------------------------------------------
+
+    def visit_If(self, node: ast.If) -> None:
+        what = self._condition_issue(node.test)
+        if what is not None:
+            self._emit("TS101", node,
+                       f"Python `if` on {what}; use `jnp.where` / "
+                       f"`jax.lax.cond` instead")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        what = self._condition_issue(node.test)
+        if what is not None:
+            self._emit("TS101", node,
+                       f"Python `while` on {what}; use "
+                       f"`jax.lax.while_loop` instead")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        what = self._condition_issue(node.test)
+        if what is not None:
+            self._emit("TS101", node,
+                       f"conditional expression on {what}; use "
+                       f"`jnp.where` instead")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        # TS102 — bool()/int()/float() materialisation
+        if (isinstance(func, ast.Name)
+                and func.id in ("bool", "int", "float") and node.args):
+            arg = node.args[0]
+            if self._is_jax_call(arg) or any(
+                    self._is_jax_call(s) for s in ast.walk(arg)) or \
+                    self._tracer_names(arg):
+                self._emit("TS102", node,
+                           f"`{func.id}()` forces a traced value to a "
+                           f"host scalar (ConcretizationError under "
+                           f"jit)")
+        chain = _attr_chain(func)
+        if chain:
+            root_target = self._module_of(chain[0]) or chain[0]
+            # TS104 — clocks / RNG first (np.random.* is also an np call)
+            if (root_target in ("time", "datetime")
+                    or root_target == "random"
+                    or (root_target in ("numpy", "np")
+                        and len(chain) >= 2 and chain[1] == "random")):
+                self._emit("TS104", node,
+                           f"`{'.'.join(chain)}()` read inside traced "
+                           f"code is evaluated once at trace time and "
+                           f"constant-folded into the jaxpr")
+            # TS103 — numpy ops on (potentially) traced operands
+            elif root_target == "numpy" and len(chain) >= 2 \
+                    and chain[-1] not in _SAFE_NP_CALLS:
+                self._emit("TS103", node,
+                           f"`{'.'.join(chain)}()` inside traced code "
+                           f"runs on the host at trace time; use the "
+                           f"`jnp` equivalent")
+        self.generic_visit(node)
+
+    # nested defs/lambdas inside a traced function are traced too —
+    # generic_visit already descends into them.
+
+
+def run(project: Optional[Project] = None,
+        modules: Optional[Sequence[Module]] = None) -> List[Finding]:
+    """Run the pass over ``project`` (or an explicit module list)."""
+    mods = list(modules) if modules is not None else (
+        project or Project()).modules
+    indexes = {m.modname: _ModuleIndex(m) for m in mods}
+    reach = _Reachability(indexes)
+    reach.seed()
+    reach.propagate()
+
+    findings: List[Finding] = []
+    for (modname, qual), static in sorted(reach.traced.items()):
+        idx = indexes[modname]
+        if qual not in idx.functions:
+            continue
+        _BodyChecker(idx.mod, idx, qual, static, findings).run()
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+def traced_functions(
+        modules: Iterable[Module]) -> Dict[FuncKey, Optional[Set[str]]]:
+    """Expose the reachability result (used by tests/debugging)."""
+    indexes = {m.modname: _ModuleIndex(m) for m in modules}
+    reach = _Reachability(indexes)
+    reach.seed()
+    reach.propagate()
+    return reach.traced

@@ -19,7 +19,7 @@ from __future__ import annotations
 import os
 import re
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 import jax

@@ -10,7 +10,6 @@ MODEL_FLOPS, scan trip count for the while-body cost adjustment).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -52,7 +52,6 @@ import jax.numpy as jnp
 
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
-from repro.core import pq as _pq
 from repro.core import toploc as _tl
 from repro.core.topk import intersect_count
 

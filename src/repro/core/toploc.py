@@ -33,13 +33,13 @@ The legacy prefixed entry points (``ivf_start``, ``ivf_pq_step_batch``,
 from __future__ import annotations
 
 import functools
+import sys
 import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import pq as _pq
 from repro.kernels import ops as _kops
@@ -234,13 +234,35 @@ def conversation(backend, index, utterances: jax.Array, *, k: int,
 # is pinned by tests/test_backend_registry.py — and warns so downstream
 # callers migrate.  New code should build a ``core.backend`` dataclass
 # once and call the generic drivers above.
+#
+# Warning policy: once per *call site* (caller filename:lineno), with
+# ``stacklevel=2`` so the warning points at the caller, not the alias.
+# A serving loop hammering one legacy entry point logs a single line
+# instead of one per request; distinct call sites each still get their
+# warning.  The ``__deprecated_alias__`` marker is what the analyzer's
+# deprecated-alias pass keys on (``repro.analysis.deprecation``).
 # ---------------------------------------------------------------------------
 
+_warned_sites: set = set()
 
-def _warn_deprecated(name: str, repl: str) -> None:
-    warnings.warn(
-        f"toploc.{name} is deprecated; use the core.backend registry: "
-        f"{repl}", DeprecationWarning, stacklevel=3)
+
+def _deprecated_alias(repl: str):
+    """Mark a legacy ``toploc.*`` entry point; warn once per call site."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            frame = sys._getframe(1)
+            site = (frame.f_code.co_filename, frame.f_lineno)
+            if site not in _warned_sites:
+                _warned_sites.add(site)
+                warnings.warn(
+                    f"toploc.{fn.__name__} is deprecated; use the "
+                    f"core.backend registry: {repl}",
+                    DeprecationWarning, stacklevel=2)
+            return fn(*args, **kwargs)
+        wrapper.__deprecated_alias__ = True
+        return wrapper
+    return deco
 
 
 def _ivf_backend(**knobs):
@@ -258,125 +280,122 @@ def _hnsw_backend(**knobs):
     return _backend.HNSWBackend(**knobs)
 
 
+@_deprecated_alias("start(IVFBackend(h=…, nprobe=…), …)")
 def ivf_start(index, q0, *, h, nprobe, k, scan=None):
-    _warn_deprecated("ivf_start", "start(IVFBackend(h=…, nprobe=…), …)")
     return start(_ivf_backend(h=h, nprobe=nprobe, scan=scan), index, q0,
                  k=k)
 
 
+@_deprecated_alias("step(IVFBackend(…, alpha=…), …)")
 def ivf_step(index, sess, q, *, nprobe, k, alpha=-1.0, scan=None):
-    _warn_deprecated("ivf_step", "step(IVFBackend(…, alpha=…), …)")
     return step(_ivf_backend(h=sess.cache_ids.shape[0], nprobe=nprobe,
                              alpha=alpha, scan=scan), index, sess, q, k=k)
 
 
+@_deprecated_alias("start_batch(IVFBackend(…), …)")
 def ivf_start_batch(index, q0, *, h, nprobe, k, scan=None):
-    _warn_deprecated("ivf_start_batch", "start_batch(IVFBackend(…), …)")
     return start_batch(_ivf_backend(h=h, nprobe=nprobe, scan=scan), index,
                        q0, k=k)
 
 
+@_deprecated_alias("step_batch(IVFBackend(…), …)")
 def ivf_step_batch(index, sess, q, *, nprobe, k, alpha=-1.0, is_first=None,
                    scan=None):
-    _warn_deprecated("ivf_step_batch", "step_batch(IVFBackend(…), …)")
     return step_batch(_ivf_backend(h=sess.cache_ids.shape[1], nprobe=nprobe,
                                    alpha=alpha, scan=scan), index, sess, q,
                       k=k, is_first=is_first)
 
 
+@_deprecated_alias("plain_batch(IVFBackend(…), …)")
 def ivf_plain_batch(index, q, *, nprobe, k, scan=None):
-    _warn_deprecated("ivf_plain_batch", "plain_batch(IVFBackend(…), …)")
     return plain_batch(_ivf_backend(nprobe=nprobe, scan=scan), index, q,
                        k=k)
 
 
+@_deprecated_alias("conversation(IVFBackend(…), …)")
 def ivf_conversation(index, utterances, *, h, nprobe, k, alpha=-1.0,
                      mode="toploc", scan=None):
-    _warn_deprecated("ivf_conversation", "conversation(IVFBackend(…), …)")
     return conversation(_ivf_backend(h=h, nprobe=nprobe, alpha=alpha,
                                      scan=scan), index, utterances, k=k,
                         mode=mode)
 
 
+@_deprecated_alias("start(IVFPQBackend(…), …)")
 def ivf_pq_start(index, q0, *, h, nprobe, k, rerank=32, scan=None):
-    _warn_deprecated("ivf_pq_start", "start(IVFPQBackend(…), …)")
     return start(_pq_backend(h=h, nprobe=nprobe, rerank=rerank, scan=scan),
                  index, q0, k=k)
 
 
+@_deprecated_alias("step(IVFPQBackend(…), …)")
 def ivf_pq_step(index, sess, q, *, nprobe, k, alpha=-1.0, rerank=32,
                 scan=None):
-    _warn_deprecated("ivf_pq_step", "step(IVFPQBackend(…), …)")
     return step(_pq_backend(h=sess.cache_ids.shape[0], nprobe=nprobe,
                             alpha=alpha, rerank=rerank, scan=scan), index,
                 sess, q, k=k)
 
 
+@_deprecated_alias("start_batch(IVFPQBackend(…), …)")
 def ivf_pq_start_batch(index, q0, *, h, nprobe, k, rerank=32, scan=None):
-    _warn_deprecated("ivf_pq_start_batch",
-                     "start_batch(IVFPQBackend(…), …)")
     return start_batch(_pq_backend(h=h, nprobe=nprobe, rerank=rerank,
                                    scan=scan), index, q0, k=k)
 
 
+@_deprecated_alias("step_batch(IVFPQBackend(…), …)")
 def ivf_pq_step_batch(index, sess, q, *, nprobe, k, alpha=-1.0, rerank=32,
                       is_first=None, scan=None):
-    _warn_deprecated("ivf_pq_step_batch", "step_batch(IVFPQBackend(…), …)")
     return step_batch(_pq_backend(h=sess.cache_ids.shape[1], nprobe=nprobe,
                                   alpha=alpha, rerank=rerank, scan=scan),
                       index, sess, q, k=k, is_first=is_first)
 
 
+@_deprecated_alias("plain_batch(IVFPQBackend(…), …)")
 def ivf_pq_plain_batch(index, q, *, nprobe, k, rerank=32, scan=None):
-    _warn_deprecated("ivf_pq_plain_batch",
-                     "plain_batch(IVFPQBackend(…), …)")
     return plain_batch(_pq_backend(nprobe=nprobe, rerank=rerank, scan=scan),
                        index, q, k=k)
 
 
+@_deprecated_alias("conversation(IVFPQBackend(…), …)")
 def ivf_pq_conversation(index, utterances, *, h, nprobe, k, alpha=-1.0,
                         rerank=32, mode="toploc", scan=None):
-    _warn_deprecated("ivf_pq_conversation",
-                     "conversation(IVFPQBackend(…), …)")
     return conversation(_pq_backend(h=h, nprobe=nprobe, alpha=alpha,
                                     rerank=rerank, scan=scan), index,
                         utterances, k=k, mode=mode)
 
 
+@_deprecated_alias("start(HNSWBackend(ef=…, up=…), …)")
 def hnsw_start(index, q0, *, ef, k, up=2, search=None):
-    _warn_deprecated("hnsw_start", "start(HNSWBackend(ef=…, up=…), …)")
     return start(_hnsw_backend(ef=ef, up=up, search=search), index, q0,
                  k=k)
 
 
+@_deprecated_alias("step(HNSWBackend(…), …)")
 def hnsw_step(index, sess, q, *, ef, k, adaptive=False, search=None):
-    _warn_deprecated("hnsw_step", "step(HNSWBackend(…), …)")
     return step(_hnsw_backend(ef=ef, adaptive=adaptive, search=search),
                 index, sess, q, k=k)
 
 
+@_deprecated_alias("start_batch(HNSWBackend(…), …)")
 def hnsw_start_batch(index, q0, *, ef, k, up=2, search=None):
-    _warn_deprecated("hnsw_start_batch", "start_batch(HNSWBackend(…), …)")
     return start_batch(_hnsw_backend(ef=ef, up=up, search=search), index,
                        q0, k=k)
 
 
+@_deprecated_alias("step_batch(HNSWBackend(…), …)")
 def hnsw_step_batch(index, sess, q, *, ef, k, up=2, adaptive=False,
                     is_first=None, search=None):
-    _warn_deprecated("hnsw_step_batch", "step_batch(HNSWBackend(…), …)")
     return step_batch(_hnsw_backend(ef=ef, up=up, adaptive=adaptive,
                                     search=search), index, sess, q, k=k,
                       is_first=is_first)
 
 
+@_deprecated_alias("plain_batch(HNSWBackend(…), …)")
 def hnsw_plain_batch(index, q, *, ef, k, search=None):
-    _warn_deprecated("hnsw_plain_batch", "plain_batch(HNSWBackend(…), …)")
     return plain_batch(_hnsw_backend(ef=ef, search=search), index, q, k=k)
 
 
+@_deprecated_alias("conversation(HNSWBackend(…), …)")
 def hnsw_conversation(index, utterances, *, ef, k, up=2, mode="toploc",
                       search=None):
-    _warn_deprecated("hnsw_conversation", "conversation(HNSWBackend(…), …)")
     adaptive = mode == "adaptive"
     return conversation(
         _hnsw_backend(ef=ef, up=up, adaptive=adaptive, search=search),

@@ -8,7 +8,7 @@ pipeline — emitting fixed-shape padded subgraphs for the JAX step.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Tuple
 
 import numpy as np
 

@@ -23,7 +23,7 @@ build index, serve conversations — runs end to end on learned embeddings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import numpy as np
 

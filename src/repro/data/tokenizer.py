@@ -6,7 +6,7 @@ subword vocab cannot ship. Ids: 0 = PAD, 1 = CLS, 2 = UNK, 3+ = hashed.
 from __future__ import annotations
 
 import hashlib
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 
 def choose_mesh_shape(n_devices: int, *, preferred_model: int = 16,

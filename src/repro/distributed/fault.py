@@ -11,7 +11,7 @@ by tests/test_fault_tolerance.py and launch/train.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 
 class SimulatedFailure(RuntimeError):

@@ -18,7 +18,7 @@ structural zip failure here fails loudly at dry-run time, not silently.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -42,6 +42,16 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _pow2_floor(n: int) -> int:
+    return max(_next_pow2(n + 1) // 2, 1)
+
+
+# per-stream VMEM slice for the dominant (blk_l, d) list tile: the
+# pipeline double-buffers it, and queries/ids/outputs/scratch share the
+# ~16 MiB core budget, so one buffer gets at most a quarter
+_VMEM_TILE_BYTES = 4 * 1024 * 1024
+
+
 def _pad_axis(x: jax.Array, axis: int, to: int, value) -> jax.Array:
     n = x.shape[axis]
     if n == to:
@@ -93,6 +103,11 @@ def ivf_scan(queries: jax.Array, list_vecs: jax.Array, list_ids: jax.Array,
     kp = _next_pow2(k)
     lpad = _next_pow2(lmax)
     blk_l = min(lpad, max_tile)
+    # VMEM-aware cap: the (blk_l, d) f32 list tile is double-buffered
+    # by the pipeline, so a row cap of max_tile alone over-allocates at
+    # large d (d=1024 → 8 MiB tile → 16 MiB in flight).  Bound the tile
+    # by bytes, keeping it a power of two so it still divides lpad.
+    blk_l = min(blk_l, _pow2_floor(_VMEM_TILE_BYTES // (d * 4)))
     blk_l = max(blk_l, kp)
     lpad = ((lpad + blk_l - 1) // blk_l) * blk_l
     lv = _pad_axis(list_vecs, 1, lpad, 0.0)

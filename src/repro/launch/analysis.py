@@ -26,9 +26,8 @@ where ``bytes`` is the op's *result* buffer size in the per-device HLO.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # TPU v5e-class hardware constants (per chip)
 PEAK_FLOPS = 197e12          # bf16

@@ -28,7 +28,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

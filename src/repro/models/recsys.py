@@ -14,7 +14,7 @@ force, and serving/engine.py swaps in TopLoc_IVF over the item corpus.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ config; the equivalence trend is tested in tests/test_optim.py.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,7 @@ difference between grok-1 fitting a 256-chip pod or not (EXPERIMENTS.md
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -52,7 +52,6 @@ from jax.sharding import NamedSharding, PartitionSpec as _P
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import pq as _pq
-from repro.core import toploc
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

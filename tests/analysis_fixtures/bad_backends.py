@@ -1,0 +1,111 @@
+"""Seeded jit-static-contract / retrace violations (analyzer fixtures).
+
+Imported by ``tests/test_analysis.py`` and handed to the analyzer's
+injection points — ``static_contract.run(registry=...)`` for the SC
+classes, a scoped ``core.backend.register`` + ``retrace.run(names=...)``
+for the RT classes.  Never part of the real registry.
+"""
+import dataclasses
+from typing import Any, ClassVar
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.backend import IVFBackend, RetrievalBackend
+
+
+# ---------------------------------------------------------------------------
+# static-contract violations (checked without ever tracing them)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass  # not frozen -> SC201
+class UnfrozenBackend(RetrievalBackend):
+    name: ClassVar[str] = "fx_unfrozen"
+    index_kwarg: ClassVar[str] = "ivf_index"
+    h: int = 4
+
+
+class _StubPlainBatch:
+    """Satisfies the `plain_batch` surface so only the seeded defect
+    of each class below is reported."""
+
+    def plain_batch(self, index, q, *, k):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash -> SC202
+class IdentityHashBackend(_StubPlainBatch, RetrievalBackend):
+    name: ClassVar[str] = "fx_identity"
+    index_kwarg: ClassVar[str] = "ivf_index"
+    stateful: ClassVar[bool] = False
+
+
+@dataclasses.dataclass(frozen=True)  # array-valued field -> SC203
+class ArrayFieldBackend(_StubPlainBatch, RetrievalBackend):
+    name: ClassVar[str] = "fx_array"
+    index_kwarg: ClassVar[str] = "ivf_index"
+    stateful: ClassVar[bool] = False
+    boost: Any = dataclasses.field(
+        default_factory=lambda: np.ones(3, np.float32),
+        hash=False, compare=False)
+
+
+@dataclasses.dataclass(frozen=True)  # no stateful surface -> SC204
+class MissingSurfaceBackend(RetrievalBackend):
+    name: ClassVar[str] = "fx_missing"
+    index_kwarg: ClassVar[str] = "ivf_index"
+
+
+@dataclasses.dataclass(frozen=True)  # required knob -> SC205
+class NoDefaultBackend(RetrievalBackend):
+    name: ClassVar[str] = "fx_nodefault"
+    index_kwarg: ClassVar[str] = "ivf_index"
+    stateful: ClassVar[bool] = False
+    h: int
+
+
+# ---------------------------------------------------------------------------
+# retrace / promotion violations (traced abstractly on the tiny index)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypeDriftBackend(IVFBackend):
+    """Sequential path downcasts scores -> RT302 (engine drift)."""
+
+    name: ClassVar[str] = "fx_drift"
+
+    def plain(self, index, q, *, k):
+        v, i, st = super().plain(index, q, k=k)
+        return v.astype(jnp.bfloat16), i, st
+
+
+@dataclasses.dataclass(frozen=True)
+class WeakTypeBackend(IVFBackend):
+    """``plain_batch`` emits a weak-typed score leaf -> RT303."""
+
+    name: ClassVar[str] = "fx_weak"
+
+    def plain_batch(self, index, q, *, k):
+        v, i, st = super().plain_batch(index, q, k=k)
+        return jnp.broadcast_to(jnp.asarray(0.0), v.shape), i, st
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CacheChurnBackend(IVFBackend):
+    """Identity-hashed: every fresh instance retraces -> RT301.
+
+    ``eq=False`` alone would *inherit* IVFBackend's value-based
+    ``__eq__``/``__hash__``; the explicit identity pair below is what
+    actually churns the jit cache key per instance.
+    """
+
+    name: ClassVar[str] = "fx_churn"
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other

@@ -1,0 +1,52 @@
+"""Seeded Pallas BlockSpec violations (kernel-budget fixtures).
+
+Each probe is handed to ``kernel_budget.run(probes=[(label, thunk)])``;
+the thunks run under the pass's ``pallas_call`` recorder, so nothing is
+lowered or executed — only the declared grid/BlockSpecs are inspected.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def overbudget_probe():
+    """(1, 4096, 1024) f32 blocks: 16 MiB each, double-buffered in+out
+    puts 64 MiB in flight -> PK401."""
+    import jax.experimental.pallas as pl
+
+    shape = (8, 4096, 1024)
+
+    def call(x):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(8,),
+            in_specs=[pl.BlockSpec((1, 4096, 1024),
+                                   lambda i: (i, 0, 0))],
+            out_specs=pl.BlockSpec((1, 4096, 1024),
+                                   lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+        )(x)
+
+    return jax.eval_shape(call, jax.ShapeDtypeStruct(shape, jnp.float32))
+
+
+def misaligned_probe():
+    """Splits the 96-wide lane dim into 48-wide tiles (f32 wants
+    multiples of 128 on the last axis) -> PK402."""
+    import jax.experimental.pallas as pl
+
+    shape = (512, 96)
+
+    def call(x):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(64, 2),
+            in_specs=[pl.BlockSpec((8, 48), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((8, 48), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+        )(x)
+
+    return jax.eval_shape(call, jax.ShapeDtypeStruct(shape, jnp.float32))

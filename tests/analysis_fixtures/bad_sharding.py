@@ -1,0 +1,66 @@
+"""Seeded shard_map placement violations (shard-spec fixtures).
+
+Imported by ``tests/test_analysis.py`` and handed to
+``shard_specs.run(registry=...)`` as replacement entries for the real
+``"ivf"`` backend — each entry trips exactly one SS diagnostic.
+"""
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import jax.numpy as jnp
+
+from repro import compat
+from repro.distributed.retrieval import ShardedIVFScan, shard_ivf_index
+
+
+@dataclasses.dataclass(frozen=True)
+class MisdeclaredIVFScan:
+    """Declares the partition-sharded posting lists as *replicated*
+    ``in_specs`` — contradicts the placement ``shard_ivf_index``
+    applies, so every call would pay a silent reshard -> SS501."""
+
+    mesh: Any
+    axis: str = "model"
+
+    def __call__(self, index, queries, sel, k):
+        def local(lv, li, ls, q, s):
+            b = q.shape[0]
+            return (jnp.zeros((b, k), jnp.float32),
+                    jnp.zeros((b, k), jnp.int32),
+                    jnp.zeros((b,), jnp.int32))
+
+        fn = compat.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(None, None, None),          # lists: misdeclared
+                      P(self.axis, None), P(self.axis),
+                      P(None, None), P(None, None)),
+            out_specs=(P(None, None), P(None, None), P(None)),
+            check_vma=False)
+        return fn(index.list_vecs, index.list_ids, index.list_sizes,
+                  queries, sel)
+
+
+def shard_ivf_index_partition_centroids(mesh, index, *, axis="model"):
+    """Partitions the coarse centroids — replicated TopLoc state must
+    never shard -> SS502."""
+    idx = shard_ivf_index(mesh, index, axis=axis)
+    cent = jax.device_put(index.centroids,
+                          NamedSharding(mesh, P(axis, None)))
+    return idx._replace(centroids=cent)
+
+
+class MutableIVFScan:
+    """Plain mutable class, not a frozen dataclass — cannot ride
+    through jit as a static backend field -> SS503."""
+
+    def __init__(self, mesh, axis="model"):
+        self.mesh = mesh
+        self.axis = axis
+
+    def __call__(self, index, queries, sel, k):
+        # delegate to the real plugin so only the SS503 shape is seeded
+        return ShardedIVFScan(self.mesh, self.axis)(index, queries,
+                                                    sel, k)

@@ -1,0 +1,19 @@
+"""Seeded deprecated-alias uses — analyzer fixture, never imported.
+
+Fed to ``deprecation.run(modules=modules_from_paths([...]))``; both the
+from-import and the attribute call must be flagged DA601.
+"""
+from repro.core import toploc
+from repro.core.toploc import ivf_start  # MARK:DA601-import
+
+
+def run_legacy(ivf_index, q0):
+    v, i, sess, stats = toploc.ivf_start(ivf_index, q0, k=8)  # MARK:DA601-call
+    return ivf_start, v, i, sess, stats
+
+
+def fine(ivf_index, q0):
+    # registry-API call: must NOT fire
+    from repro.core import backend
+    be = backend.make("ivf", h=8, nprobe=4)
+    return be.plain(ivf_index, q0, k=8)

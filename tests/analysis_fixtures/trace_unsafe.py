@@ -1,0 +1,44 @@
+"""Seeded trace-safety violations — analyzer fixture, never imported.
+
+Fed to ``trace_safety.run(modules=modules_from_paths([...]))`` by
+``tests/test_analysis.py``; each marked line must fire exactly its
+marked diagnostic, and the host-only tail must stay silent.
+"""
+import functools
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _np_helper(x):
+    return np.sum(x)  # MARK:TS103
+
+
+@jax.jit
+def branchy(x):
+    if x > 0:  # MARK:TS101a
+        x = -x
+    while jnp.any(x > 0):  # MARK:TS101b
+        x = x - 1
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def casty(x, k):
+    if k > 1:  # static arg: must NOT fire
+        x = x * k
+    if x.ndim == 2:  # shape attribute: must NOT fire
+        x = x[0]
+    s = float(jnp.max(x))  # MARK:TS102
+    t = time.time()  # MARK:TS104
+    return x * s + t + _np_helper(x)
+
+
+def host_only(x):
+    # unreachable from any jit boundary: nothing below may fire
+    if x.shape[0] > 2:
+        return np.asarray(x)
+    return float(np.sum(x))

@@ -1,0 +1,198 @@
+"""Fixture-driven tests for the ``repro.analysis`` invariant linter.
+
+One test per pass: each seeded-violation fixture under
+``tests/analysis_fixtures/`` must trigger *exactly* its intended
+diagnostic, and the fast passes must report the real tree clean (the
+full six-pass sweep is CI's ``python -m repro.analysis --strict`` gate).
+"""
+import importlib.util
+from pathlib import Path
+
+from repro.analysis import run_all
+from repro.analysis.project import Project, modules_from_paths
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+
+def _load(name):
+    """Import a fixture module by path (fixtures are not a package)."""
+    spec = importlib.util.spec_from_file_location(
+        f"analysis_fixtures_{name}", FIXTURES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _marked_line(path: Path, marker: str) -> int:
+    hits = [i + 1 for i, ln in enumerate(
+        path.read_text().splitlines()) if marker in ln]
+    assert len(hits) == 1, (marker, hits)
+    return hits[0]
+
+
+# ---------------------------------------------------------------------------
+# pass 1 — trace safety (AST)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_safety_fixture_fires_each_diagnostic():
+    from repro.analysis import trace_safety
+    path = FIXTURES / "trace_unsafe.py"
+    findings = trace_safety.run(modules=modules_from_paths([path]))
+    got = {(f.code, f.line) for f in findings}
+    expect = {
+        ("TS101", _marked_line(path, "MARK:TS101a")),
+        ("TS101", _marked_line(path, "MARK:TS101b")),
+        ("TS102", _marked_line(path, "MARK:TS102")),
+        ("TS103", _marked_line(path, "MARK:TS103")),
+        ("TS104", _marked_line(path, "MARK:TS104")),
+    }
+    assert got == expect, [f.render() for f in findings]
+    # every finding points into the fixture file
+    assert all(f.path.endswith("trace_unsafe.py") for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# pass 2 — jit-static contract (live registry introspection)
+# ---------------------------------------------------------------------------
+
+
+def test_static_contract_fixture_registry():
+    from repro.analysis import static_contract
+    bb = _load("bad_backends")
+    reg = {cls.name: cls for cls in (
+        bb.UnfrozenBackend, bb.IdentityHashBackend, bb.ArrayFieldBackend,
+        bb.MissingSurfaceBackend, bb.NoDefaultBackend)}
+    findings = static_contract.run(registry=reg)
+    codes = {}
+    for f in findings:
+        for name in reg:
+            if f"backend {name!r}" in f.message:
+                codes.setdefault(name, set()).add(f.code)
+    assert codes == {
+        "fx_unfrozen": {"SC201"},
+        "fx_identity": {"SC202"},
+        "fx_array": {"SC203"},
+        "fx_missing": {"SC204"},
+        "fx_nodefault": {"SC205"},
+    }, [f.render() for f in findings]
+
+
+def test_static_contract_real_registry_is_clean():
+    from repro.analysis import static_contract
+    assert static_contract.run() == []
+
+
+# ---------------------------------------------------------------------------
+# pass 3 — retrace / promotion (abstract tracing)
+# ---------------------------------------------------------------------------
+
+
+def test_retrace_fixture_backends():
+    from repro.analysis import retrace
+    from repro.core import backend as _backend
+    bb = _load("bad_backends")
+    fx = (bb.DtypeDriftBackend, bb.WeakTypeBackend, bb.CacheChurnBackend)
+    for cls in fx:
+        _backend.register(cls)
+    try:
+        for cls, code in ((bb.DtypeDriftBackend, "RT302"),
+                          (bb.WeakTypeBackend, "RT303"),
+                          (bb.CacheChurnBackend, "RT301")):
+            findings = retrace.run(names=[cls.name])
+            assert {f.code for f in findings} == {code}, (
+                cls.name, [f.render() for f in findings])
+    finally:
+        for cls in fx:
+            _backend._REGISTRY.pop(cls.name, None)
+
+
+# ---------------------------------------------------------------------------
+# pass 4 — Pallas VMEM budget / tile alignment (recorded pallas_call)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_budget_fixture_overbudget():
+    from repro.analysis import kernel_budget
+    bk = _load("bad_kernels")
+    findings = kernel_budget.run(probes=[("fx_over", bk.overbudget_probe)])
+    assert {f.code for f in findings} == {"PK401"}, (
+        [f.render() for f in findings])
+
+
+def test_kernel_budget_fixture_misaligned():
+    from repro.analysis import kernel_budget
+    bk = _load("bad_kernels")
+    findings = kernel_budget.run(probes=[("fx_mis", bk.misaligned_probe)])
+    assert {f.code for f in findings} == {"PK402"}, (
+        [f.render() for f in findings])
+
+
+# ---------------------------------------------------------------------------
+# pass 5 — shard_map placement specs (recorded shard_map)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_spec_fixture_entries():
+    from repro.analysis import shard_specs
+    from repro.distributed.retrieval import ShardedIVFScan, shard_ivf_index
+    bs = _load("bad_sharding")
+    cases = (
+        ({"ivf": (shard_ivf_index, bs.MisdeclaredIVFScan, "scan")},
+         "SS501"),
+        ({"ivf": (bs.shard_ivf_index_partition_centroids, ShardedIVFScan,
+                  "scan")},
+         "SS502"),
+        ({"ivf": (shard_ivf_index, bs.MutableIVFScan, "scan")}, "SS503"),
+        ({"ivf": (shard_ivf_index, ShardedIVFScan, "missing_field")},
+         "SS503"),
+    )
+    for reg, code in cases:
+        findings = shard_specs.run(registry=reg)
+        assert {f.code for f in findings} == {code}, (
+            code, [f.render() for f in findings])
+
+
+# ---------------------------------------------------------------------------
+# pass 6 — deprecated-alias usage (AST + live marker discovery)
+# ---------------------------------------------------------------------------
+
+
+def test_deprecation_fixture_flags_alias_uses():
+    from repro.analysis import deprecation
+    path = FIXTURES / "dep_legacy.py"
+    findings = deprecation.run(modules=modules_from_paths([path]))
+    got = {(f.code, f.line) for f in findings}
+    expect = {
+        ("DA601", _marked_line(path, "MARK:DA601-import")),
+        ("DA601", _marked_line(path, "MARK:DA601-call")),
+    }
+    assert got == expect, [f.render() for f in findings]
+
+
+def test_live_alias_discovery_covers_all_legacy_entry_points():
+    from repro.analysis import deprecation
+    names = deprecation.live_alias_names()
+    assert len(names) == 18
+    assert "ivf_start" in names and "hnsw_plain_batch" in names
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics + the real tree stays clean on the fast passes
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_suppression_and_stale_detection():
+    from repro.analysis.findings import Finding, apply_baseline
+    f = Finding("p", "TS101", "a/b.py", 3, "traced branch")
+    active, suppressed, stale = apply_baseline([f], ["a/b.py:3: TS101*"])
+    assert not active and len(suppressed) == 1 and not stale
+    active, suppressed, stale = apply_baseline([f], ["never-matches*"])
+    assert len(active) == 1 and not suppressed
+    assert stale == ["never-matches*"]
+
+
+def test_tree_is_clean_on_static_passes():
+    findings = run_all(Project(), select=[
+        "trace-safety", "contract", "deprecated", "kernels"])
+    assert findings == [], [f.render() for f in findings]

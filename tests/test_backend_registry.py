@@ -6,7 +6,6 @@ scores, ids, sessions and ``TurnStats`` to the legacy prefixed clones
 they replaced, for all three backends, across sequential, batched and
 whole-conversation paths — and every legacy name now warns.
 """
-import dataclasses
 import warnings
 
 import numpy as np

@@ -1,8 +1,6 @@
 """Core IVF + k-means invariants."""
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import ivf, kmeans
 

@@ -4,11 +4,9 @@ Driven through the ``core.backend`` registry API (the legacy prefixed
 entry points are pinned against it in tests/test_backend_registry.py).
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 
-from repro.core import hnsw, ivf, toploc
+from repro.core import ivf, toploc
 from repro.core.backend import HNSWBackend, IVFBackend
 from repro.core.topk import intersect_count
 

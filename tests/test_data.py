@@ -1,6 +1,5 @@
 """Data substrate: synthetic workload properties, tokenizer, pipeline."""
 import numpy as np
-import pytest
 import jax.numpy as jnp
 
 from repro.data import pipeline as PL

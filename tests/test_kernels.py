@@ -5,8 +5,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref, sorting
-from repro.kernels import centroid_topk as ck
-from repro.kernels import ivf_scan as iv
 from repro.kernels import flash_attention as fa
 
 

@@ -1,9 +1,6 @@
 """Launch-layer units that don't need 512 devices: analysis parsing,
 roofline math, mesh helpers, serve driver plumbing."""
-import numpy as np
 import pytest
-import jax
-import jax.numpy as jnp
 
 from repro.launch import analysis as AN
 

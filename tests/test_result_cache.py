@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import toploc
-from repro.core.backend import IVFBackend
 from repro.serving import (BatchedConversationalSearchEngine,
                            ConversationalSearchEngine, ResultCache,
                            ServingConfig)

@@ -256,3 +256,54 @@ def test_hedged_executor_latency_history_is_bounded():
     assert len(ex._lat) == 4
     assert ex.stats()["calls"] == 10
     assert ex._deadline() >= 0.001
+
+
+def test_micro_batcher_empty_flush_is_a_noop():
+    """An empty queue drains nothing: no callback, no recorded sizes,
+    return value 0 — the serving loop can spin on flush_loop_once."""
+    calls = []
+    mb = MicroBatcher(lambda reqs: (calls.append(len(reqs)),
+                                    [r.payload for r in reqs])[1],
+                      max_batch=4, max_wait_s=0.0005)
+    assert mb.flush_loop_once() == 0
+    assert calls == []
+    assert mb.batch_sizes == [] and mb.padded_sizes == []
+
+
+def test_micro_batcher_exact_max_batch_needs_no_padding():
+    """A drain of exactly max_batch sits on the bucket boundary: the
+    dispatched batch is the raw batch — no pad requests at all."""
+    seen_ids = []
+    mb = MicroBatcher(lambda reqs: (seen_ids.append(
+        [r.conv_id for r in reqs]), [r.payload for r in reqs])[1],
+        max_batch=8, max_wait_s=0.0, buckets=(1, 2, 4, 8))
+    futs = [mb.submit(Request(f"c{j}", j)) for j in range(8)]
+    assert mb.flush_loop_once() == 8
+    assert [f.result(timeout=1) for f in futs] == list(range(8))
+    assert mb.batch_sizes == [8] and mb.padded_sizes == [8]
+    assert MicroBatcher.PAD_ID not in seen_ids[0]
+
+
+def test_hedged_executor_single_replica_never_hedges():
+    """One replica = zero configured hedges: a slow call still returns
+    (no backup to race), and nothing is counted as hedge or failover."""
+    def slow(x):
+        time.sleep(0.02)
+        return x * 2
+
+    ex = HedgedExecutor([slow], hedge_floor_s=0.001, min_history=2)
+    assert [ex.call(i) for i in range(3)] == [0, 2, 4]
+    assert ex.hedges_issued == 0 and ex.failovers == 0
+    assert ex.hedges_won == 0
+
+
+def test_hedged_executor_single_failing_replica_raises():
+    """With no backup replica, the primary's exception must propagate
+    instead of hanging or hedging."""
+    def bad(x):
+        raise RuntimeError("replica down")
+
+    ex = HedgedExecutor([bad], hedge_floor_s=0.001)
+    with pytest.raises(RuntimeError, match="replica down"):
+        ex.call(1)
+    assert ex.hedges_issued == 0 and ex.failovers == 0

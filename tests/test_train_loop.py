@@ -1,6 +1,4 @@
 """End-to-end training loop (launch/train.py) with failure injection."""
-import numpy as np
-import pytest
 
 from repro.distributed import fault
 from repro.launch import train as TR
