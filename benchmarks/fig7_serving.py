@@ -1,0 +1,270 @@
+"""Fig 7 (ours): sustained-traffic serving over a (replica, shard) mesh.
+
+Closed-loop Poisson benchmark for the replicated serving tier
+(``serving.router.ReplicatedSearchEngine``): S concurrent sessions each
+replay a multi-turn conversation, submitting turn t+1 an exponential
+think time after turn t's result arrives.  Per-replica pump threads run
+the continuous-batching loop (launch wave N+1 while wave N runs on
+device).  Reported per replica count: sustained QPS (turns/s), client
+p50/p99 latency (submit → result), per-replica load balance, and slab
+eviction counts.
+
+What the replica axis buys — **session capacity**, not just parallel
+devices: the ``SessionStore`` slab and ``ResultCache`` are per-replica
+device state with a fixed slot count, so at R replicas a session
+population of R·n_slots sits fully resident.  The benchmark holds
+``n_slots`` per replica FIXED and sizes the population to S = 2·n_slots:
+at ``replicas=1`` the LRU slab thrashes — nearly every turn evicts a
+session (a full-slab zero-scatter dispatch per eviction, on top of the
+wave's own scatter) and returns as a rebuilt first turn — while at
+``replicas=2`` every session stays resident and steady-state turns pay
+only the cached TopLoc step.  That cost gap is hardware-independent
+(evictions are extra device dispatches on any platform), which is what
+makes the smoke-mode QPS assertion meaningful on a CPU host where R
+device groups time-share the same cores.
+
+Bit-identity gate (smoke): the ``replicas=2`` run must reproduce the
+single-replica *sequential* engine per session, bit for bit, with the
+result cache off AND on — session pinning + per-drain wave splitting +
+the sharded-scan identity contract compose end to end.  The thrashing
+``replicas=1`` run is intentionally NOT bit-identical (evictions rebuild
+sessions); its eviction count is reported instead.
+
+  PYTHONPATH=src:. python benchmarks/fig7_serving.py
+  PYTHONPATH=src:. python benchmarks/fig7_serving.py --smoke
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "--smoke" in sys.argv:
+    os.environ.setdefault("BENCH_DOCS", "4000")
+    os.environ.setdefault("BENCH_PARTITIONS", "512")
+    os.environ.setdefault("BENCH_CONVS", "256")
+    os.environ.setdefault("BENCH_TURNS", "4")
+
+# must happen before jax import: give the host platform 8 devices
+_flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import heapq
+import random
+import threading
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+
+from repro.serving import (ConversationalSearchEngine,
+                           ReplicatedSearchEngine, ServingConfig)
+from benchmarks import common as C
+
+K = 10
+NPROBE = 8
+H = 384
+SHARDS = 2
+MAX_BATCH = 32
+THINK_MEAN_S = 0.001          # mean exponential think time between turns
+CACHE_THRESHOLD = 0.95
+CACHE_DEPTH = 64
+REPEATS = 3                   # timed runs per replica count (best-of QPS)
+
+
+def config(*, cache: bool, shards: int = 0) -> ServingConfig:
+    # the replicated runs shard the corpus (shards=SHARDS per replica);
+    # the sequential oracle runs unsharded — the sharded-scan identity
+    # contract (tests/test_sharded_retrieval.py) bridges the two
+    return ServingConfig(
+        backend="ivf", strategy="toploc+", k=K, nprobe=NPROBE, h=H,
+        alpha=0.25, shards=shards,
+        cache_threshold=CACHE_THRESHOLD if cache else 0.0,
+        cache_depth=CACHE_DEPTH if cache else 0)
+
+
+def closed_loop(eng: ReplicatedSearchEngine, wl, *, think_mean_s: float,
+                seed: int) -> Dict:
+    """Drive S sessions closed-loop: session j submits turn t+1 an
+    Exp(think) after turn t resolves.  Returns QPS, latency percentiles,
+    and every (session, turn) result for the identity gate."""
+    S, T = wl.conversations.shape[0], wl.conversations.shape[1]
+    rng = random.Random(seed)
+    cond = threading.Condition()
+    heap = []                             # (due, session, turn)
+    lat = []
+    results: Dict[Tuple[int, int], Tuple] = {}
+    remaining = [S * T]
+
+    def on_done(sid: int, turn: int, t_submit: float):
+        def cb(fut):
+            res = fut.result()            # propagate engine errors
+            now = time.perf_counter()
+            with cond:
+                lat.append(now - t_submit)
+                results[(sid, turn)] = res
+                remaining[0] -= 1
+                if turn + 1 < T:
+                    heapq.heappush(
+                        heap,
+                        (now + rng.expovariate(1.0 / think_mean_s),
+                         sid, turn + 1))
+                cond.notify()
+        return cb
+
+    t0 = time.perf_counter()
+    with cond:
+        for sid in range(S):              # all sessions arrive at t=0
+            heapq.heappush(heap, (t0, sid, 0))
+    eng.start()
+    while True:
+        with cond:
+            if remaining[0] == 0:
+                break
+            now = time.perf_counter()
+            if not heap or heap[0][0] > now:
+                timeout = (heap[0][0] - now) if heap else 0.05
+                cond.wait(timeout)
+                continue
+            _, sid, turn = heapq.heappop(heap)
+        # submit outside the condition: the future may resolve (and its
+        # callback take cond) before submit returns
+        fut = eng.submit(sid_name(sid), wl.conversations[sid, turn])
+        fut.add_done_callback(on_done(sid, turn, time.perf_counter()))
+    wall = time.perf_counter() - t0
+    lat_ms = np.asarray(lat) * 1e3
+    return {
+        "qps": (S * T) / wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "results": results,
+        "load": eng.load_stats(),
+        "evictions": sum(e.store.evictions for e in eng.engines),
+    }
+
+
+def sid_name(sid: int) -> str:
+    return f"s{sid}"
+
+
+def sequential_reference(wl, *, cache: bool, ivf_idx
+                         ) -> Dict[Tuple[int, int], Tuple]:
+    """Per-session oracle: the single-replica sequential engine."""
+    eng = ConversationalSearchEngine(config(cache=cache), ivf_index=ivf_idx)
+    out = {}
+    for sid in range(wl.conversations.shape[0]):
+        for t in range(wl.conversations.shape[1]):
+            out[(sid, t)] = eng.query(sid_name(sid),
+                                      wl.conversations[sid, t])
+    return out
+
+
+def check_identity(got: Dict, want: Dict, label: str) -> None:
+    assert got.keys() == want.keys(), f"{label}: turn sets differ"
+    for key in want:
+        gv, gi = got[key]
+        wv, wi = want[key]
+        if not (np.array_equal(np.asarray(gv), np.asarray(wv))
+                and np.array_equal(np.asarray(gi), np.asarray(wi))):
+            raise AssertionError(f"{label}: results differ at {key}")
+    print(f"  identity OK ({label}: {len(want)} turns bit-identical to "
+          "the sequential engine)")
+
+
+def warmup(eng: ReplicatedSearchEngine, wl) -> None:
+    """Compile every program the timed loop will hit (the single-bucket
+    batcher keeps this to one batched step per engine), plus the
+    acquire/release scatter paths, then reset the accounting."""
+    d = wl.conversations.shape[-1]
+    for e in eng.engines:
+        for j in range(MAX_BATCH):
+            e.submit(f"warm{j}", np.zeros(d, np.float32))
+        e.drain()
+        for j in range(MAX_BATCH):
+            e.end_conversation(f"warm{j}")
+        e.records.clear()
+        e.turn_count.clear()
+        e.store.evictions = 0
+        if e._cache is not None:
+            e._cache.hits = e._cache.misses = 0
+
+
+def run(wl, ivf_idx, *, replicas: int, n_slots: int, cache: bool,
+        seed: int) -> Dict:
+    with ReplicatedSearchEngine(
+            config(cache=cache, shards=SHARDS), replicas=replicas,
+            ivf_index=ivf_idx, n_slots=n_slots, max_batch=MAX_BATCH,
+            max_wait_s=0.003, buckets=(MAX_BATCH,)) as eng:
+        warmup(eng, wl)
+        out = closed_loop(eng, wl, think_mean_s=THINK_MEAN_S, seed=seed)
+    return out
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    wl = C.workload("cast20")
+    idx = C.ivf_index("cast20")
+    S, T = wl.conversations.shape[0], wl.conversations.shape[1]
+    # fixed per-replica slab: R=1 holds half the population (LRU
+    # thrash), R=2 holds all of it resident
+    n_slots = max(MAX_BATCH, S // 2)
+    print(f"corpus: {C.N_DOCS} docs, p={C.PARTITIONS}; traffic: {S} "
+          f"sessions x {T} turns, think ~Exp({THINK_MEAN_S * 1e3:.0f}ms); "
+          f"{n_slots} slots/replica, shards={SHARDS}, "
+          f"devices={jax.device_count()}")
+
+    # throughput runs serve the full production config (result cache
+    # on): an eviction then costs TWO full-slab zero-scatters (session
+    # slab + cache slab row), which is exactly what thrashing costs a
+    # real deployment
+    print(f"\n{'replicas':>8s} {'qps':>8s} {'p50 ms':>8s} {'p99 ms':>8s} "
+          f"{'imbalance':>9s} {'evictions':>9s}")
+    stats = {}
+    for replicas in (1, 2):
+        outs = [run(wl, idx, replicas=replicas, n_slots=n_slots,
+                    cache=True, seed=7 + 10 * replicas + rep)
+                for rep in range(REPEATS)]
+        # best-of-N on both sides: sustained QPS under closed-loop load
+        # is interference-noise-prone on a shared host, and the best run
+        # is the least-perturbed estimate of what the engine sustains
+        out = max(outs, key=lambda o: o["qps"])
+        stats[replicas] = out
+        print(f"{replicas:8d} {out['qps']:8.1f} {out['p50_ms']:8.2f} "
+              f"{out['p99_ms']:8.2f} {out['load']['imbalance']:9.2f} "
+              f"{out['evictions']:9d}")
+
+    speedup = stats[2]["qps"] / stats[1]["qps"]
+    print(f"\nsustained QPS: replicas=2 is {speedup:.2f}x replicas=1 "
+          f"(fixed {n_slots}-slot slab per replica; "
+          f"{stats[1]['evictions']} vs {stats[2]['evictions']} evictions)")
+
+    # identity gate on the non-thrashing run, cache on (reusing the
+    # timed run's results) and off (one extra replicas=2 run)
+    check_identity(stats[2]["results"],
+                   sequential_reference(wl, cache=True, ivf_idx=idx),
+                   "cache on")
+    uncached = run(wl, idx, replicas=2, n_slots=n_slots, cache=False,
+                   seed=11)
+    check_identity(uncached["results"],
+                   sequential_reference(wl, cache=False, ivf_idx=idx),
+                   "cache off")
+
+    if smoke:
+        assert jax.device_count() >= 2 * SHARDS, (
+            "smoke needs a multi-device host platform")
+        assert speedup >= 1.5, (
+            f"replicas=2 QPS only {speedup:.2f}x replicas=1 (need 1.5x)")
+        assert stats[2]["load"]["imbalance"] <= 1.3, (
+            f"per-replica imbalance {stats[2]['load']['imbalance']:.2f} "
+            "> 1.3")
+        assert stats[2]["evictions"] == 0, (
+            "replicas=2 run evicted sessions — capacity sizing is wrong")
+        print(f"SMOKE OK: {speedup:.2f}x >= 1.5x, imbalance "
+              f"{stats[2]['load']['imbalance']:.2f} <= 1.3, identity holds "
+              "with cache on and off")
+
+
+if __name__ == "__main__":
+    main()

@@ -77,15 +77,49 @@ from repro.distributed import sharding as SH
 # mesh + index placement
 # ---------------------------------------------------------------------------
 
-def retrieval_mesh(shards: int, *, axis: str = "model") -> Mesh:
-    """A 1-D corpus mesh over the first ``shards`` local devices."""
+def retrieval_mesh(shards: int, *, axis: str = "model",
+                   replicas: int = 1,
+                   replica_axis: str = "replica") -> Mesh:
+    """A corpus mesh over the first ``replicas * shards`` local devices.
+
+    ``replicas == 1`` (the default) keeps the historical 1-D ``(axis,)``
+    mesh.  ``replicas > 1`` builds the 2-D ``(replica_axis, axis)`` mesh
+    of the serving tier: every replica group holds a **full sharded
+    corpus** — all index placement specs name only ``axis``, so
+    corpus-sharded arrays auto-replicate along ``replica_axis`` and the
+    existing shard_map scan plugins run unchanged on either mesh shape.
+    The replica axis is consumed host-side by the
+    ``serving.router.ReplicatedSearchEngine``, which slices the mesh
+    into per-replica 1-D submeshes (``replica_submeshes``) so each
+    replica engine owns a disjoint device group.
+    """
     devs = jax.devices()
-    if shards < 1 or shards > len(devs):
+    if shards < 1 or replicas < 1 or replicas * shards > len(devs):
         raise ValueError(
-            f"shards={shards} but {len(devs)} device(s) available "
+            f"replicas={replicas} x shards={shards} needs "
+            f"{max(replicas, 1) * max(shards, 1)} device(s) but "
+            f"{len(devs)} available "
             "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
             "for a host-platform mesh)")
-    return Mesh(np.asarray(devs[:shards]), (axis,))
+    if replicas == 1:
+        return Mesh(np.asarray(devs[:shards]), (axis,))
+    grid = np.asarray(devs[:replicas * shards]).reshape(replicas, shards)
+    return Mesh(grid, (replica_axis, axis))
+
+
+def replica_submeshes(mesh: Mesh, *,
+                      replica_axis: str = "replica") -> list:
+    """Split a 2-D ``(replica, shard)`` mesh into per-replica 1-D corpus
+    meshes (one entry per replica group, disjoint devices, shard axis
+    name preserved).  A mesh without ``replica_axis`` is already a
+    single replica group and is returned as ``[mesh]``.
+    """
+    if replica_axis not in mesh.axis_names:
+        return [mesh]
+    ri = mesh.axis_names.index(replica_axis)
+    rest = tuple(a for a in mesh.axis_names if a != replica_axis)
+    return [Mesh(np.take(mesh.devices, r, axis=ri), rest)
+            for r in range(mesh.shape[replica_axis])]
 
 
 def _pad_dim0(x: jax.Array, mult: int, value) -> jax.Array:

@@ -18,7 +18,7 @@ structural zip failure here fails loudly at dry-run time, not silently.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -28,9 +28,19 @@ from repro.models import transformer as TF
 
 @dataclasses.dataclass(frozen=True)
 class Axes:
-    """Logical → mesh axis binding."""
+    """Logical → mesh axis binding.
+
+    ``replica`` names the serving-tier replica axis of a 2-D
+    ``(replica, shard)`` retrieval mesh (``None`` on 1-D meshes).  The
+    index spec builders below deliberately never mention it: a
+    ``PartitionSpec`` that names only ``model`` replicates the array
+    along every other mesh axis, so each replica group automatically
+    holds a full sharded corpus and the same specs serve both mesh
+    shapes.
+    """
     data: Tuple[str, ...] = ("data",)
     model: str = "model"
+    replica: Optional[str] = None
 
     @property
     def dp(self):                  # batch / fsdp axes
@@ -40,7 +50,9 @@ class Axes:
 def from_mesh(mesh) -> Axes:
     names = mesh.axis_names
     data = tuple(a for a in ("pod", "data") if a in names)
-    return Axes(data=data, model="model" if "model" in names else names[-1])
+    model = "model" if "model" in names else names[-1]
+    return Axes(data=data, model=model,
+                replica="replica" if "replica" in names else None)
 
 
 # ---------------------------------------------------------------------------

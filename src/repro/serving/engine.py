@@ -101,7 +101,7 @@ class ServingConfig:
 class TurnRecord:
     conv_id: str
     turn: int
-    latency_s: float
+    latency_s: float              # service time (dispatch -> result) only
     centroid_dists: int
     list_dists: int
     graph_dists: int
@@ -109,6 +109,12 @@ class TurnRecord:
     i0: int
     code_dists: int = 0           # PQ ADC evaluations (ivf_pq backend)
     cache_hit: bool = False       # answered from the result cache
+    # time spent queued before dispatch (batched engine; 0 for the
+    # sequential engine, which has no queue).  latency_s + queue_wait_s
+    # is the client-observed enqueue->result request latency — kept as a
+    # separate field so sequential-vs-batched latency comparisons
+    # (table1/fig3) compare service time to service time
+    queue_wait_s: float = 0.0
 
 
 class _EngineAccounting:
@@ -120,10 +126,14 @@ class _EngineAccounting:
         if not self.records:
             return {}
         lat = np.asarray([r.latency_s for r in self.records])
+        wait = np.asarray([r.queue_wait_s for r in self.records])
         return {
             "turns": len(self.records),
             "mean_latency_ms": float(lat.mean() * 1e3),
             "p95_latency_ms": float(np.percentile(lat, 95) * 1e3),
+            "mean_queue_wait_ms": float(wait.mean() * 1e3),
+            # client-observed request latency: queue wait + service time
+            "p95_request_ms": float(np.percentile(lat + wait, 95) * 1e3),
             "mean_centroid_dists": float(np.mean(
                 [r.centroid_dists for r in self.records])),
             "mean_list_dists": float(np.mean(
@@ -132,8 +142,12 @@ class _EngineAccounting:
                 [r.graph_dists for r in self.records])),
             "mean_code_dists": float(np.mean(
                 [r.code_dists for r in self.records])),
+            # refresh is only defined from each conversation's second
+            # turn on (turn 0 always runs the full scan) — exclude every
+            # conversation's first turn, not just records[0]
             "refresh_rate": float(np.mean(
-                [r.refreshed for r in self.records[1:]] or [0.0])),
+                [r.refreshed for r in self.records if r.turn > 0]
+                or [0.0])),
             "cache_hit_rate": float(np.mean(
                 [r.cache_hit for r in self.records])),
         }
@@ -269,11 +283,24 @@ class ConversationalSearchEngine(_EngineBase):
 
 
 class BatchedConversationalSearchEngine(_EngineBase):
-    """Micro-batched multi-conversation serving front door.
+    """Continuously micro-batched multi-conversation serving front door.
 
     Requests flow ``submit() → MicroBatcher queue → flush → one padded
     device batch → scatter sessions → resolve futures``.  See the module
     docstring for the flush/wave semantics.
+
+    Batches run as a **continuous-batching loop**: ``flush`` only
+    *launches* the device work (jax async dispatch — every op in
+    ``_launch_wave`` returns before the device finishes) and hands the
+    MicroBatcher a completion thunk; with ``max_inflight=2`` the host
+    drains, pads, and launches wave N+1 while wave N is still running on
+    device, and wave N's futures/records are resolved when the batcher
+    retires it.  Correctness under overlap comes from device-stream
+    ordering through the session slab: wave N's scatter is enqueued
+    before wave N+1's gather, so a conversation appearing in consecutive
+    launches still observes its own updated state, and the wave
+    invariant (one device batch never holds a conversation twice) is
+    enforced per drain exactly as before.
 
     ``n_slots`` bounds resident conversations; the LRU conversation is
     evicted when a new one arrives at full occupancy and is rebuilt
@@ -287,7 +314,8 @@ class BatchedConversationalSearchEngine(_EngineBase):
                  doc_vecs: Optional[jax.Array] = None,
                  n_slots: int = 256, max_batch: int = 32,
                  max_wait_s: float = 0.002,
-                 buckets: Sequence[int] = (1, 2, 4, 8, 16, 32)):
+                 buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                 max_inflight: int = 2):
         self._setup(config, ivf_index=ivf_index, hnsw_index=hnsw_index,
                     ivf_pq_index=ivf_pq_index, doc_vecs=doc_vecs)
         # a wave holds up to max_batch distinct conversations, each
@@ -310,9 +338,10 @@ class BatchedConversationalSearchEngine(_EngineBase):
             # a freed session slot must also drop its cache row, or the
             # slot's next conversation could hit another user's entry
             self.store.add_slot_freed_listener(self._cache.clear_slot)
-        self.batcher = MicroBatcher(self._process_batch,
+        self.batcher = MicroBatcher(dispatch_batch=self._dispatch_batch,
                                     max_batch=max_batch,
-                                    max_wait_s=max_wait_s, buckets=buckets)
+                                    max_wait_s=max_wait_s, buckets=buckets,
+                                    max_inflight=max_inflight)
 
     # -- public API ---------------------------------------------------
 
@@ -324,46 +353,80 @@ class BatchedConversationalSearchEngine(_EngineBase):
         return self.batcher.submit(Request(conv_id, qvec))
 
     def flush(self) -> int:
-        """Drain one micro-batch from the queue (serving-loop tick)."""
+        """Launch one micro-batch from the queue (serving-loop tick).
+
+        Returns the number of requests launched; their futures resolve
+        once the batch is retired (after ``max_inflight`` later
+        launches, or at ``sync``/``drain``).
+        """
         return self.batcher.flush_loop_once()
 
+    def sync(self) -> None:
+        """Retire every in-flight batch (resolves outstanding futures)."""
+        self.batcher.sync()
+
     def drain(self) -> int:
-        """Flush until the queue is empty; returns turns served."""
+        """Flush until the queue is empty and all launches retired;
+        returns turns served."""
         served = 0
         while True:
             n = self.batcher.flush_loop_once()
             if n == 0:
-                return served
+                self.batcher.sync()
+                if self.batcher.flush_loop_once() == 0:
+                    return served
+                continue
             served += n
 
     def query(self, conv_id: str, qvec: jax.Array
               ) -> Tuple[np.ndarray, np.ndarray]:
-        """Synchronous single-turn convenience (submit + flush)."""
+        """Synchronous single-turn convenience (submit + flush + sync)."""
         fut = self.submit(conv_id, qvec)
         while not fut.done():
-            self.batcher.flush_loop_once()
+            if self.batcher.flush_loop_once() == 0:
+                self.batcher.sync()
         return fut.result()
 
+    def close(self) -> None:
+        """Quiesce: retire in-flight launches so no future is left
+        pending.  Idempotent; also reachable as a context manager."""
+        self.batcher.sync()
+
+    def __enter__(self) -> "BatchedConversationalSearchEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     def end_conversation(self, conv_id: str) -> None:
+        # release only after in-flight waves land: a launched wave's
+        # scatter still targets this conversation's slot, and freeing
+        # the slot now could hand it to a conversation in the *next*
+        # launch before the scatter executes
+        self.batcher.sync()
         if self.store is not None:
             self.store.release(conv_id)
         self.turn_count.pop(conv_id, None)
 
     # -- batch execution ----------------------------------------------
 
-    def _process_batch(self, reqs: List[Request]) -> List[Any]:
-        """MicroBatcher callback: serve a drained micro-batch.
+    def _dispatch_batch(self, reqs: List[Request]
+                        ) -> Any:
+        """MicroBatcher dispatch callback: launch a drained micro-batch.
 
         Splits the batch into waves holding at most one turn per
         conversation (turn t+1 must gather the session state turn t
-        scattered), each wave being one padded device dispatch.  The
-        batcher's trailing pad requests are dropped here — each wave
-        re-pads itself to its own bucket with trash-slot rows, so pad
-        rows never acquire a session slot or emit a ``TurnRecord``.
+        scattered), launches each wave's device work without blocking,
+        and returns a completion thunk that device_gets the results and
+        writes the ``TurnRecord``s.  The batcher's trailing pad requests
+        are dropped here — each wave re-pads itself to its own bucket
+        with trash-slot rows, so pad rows never acquire a session slot
+        or emit a ``TurnRecord``.
         """
-        results: List[Any] = [None] * len(reqs)
         remaining = [(j, r) for j, r in enumerate(reqs)
                      if r.conv_id != MicroBatcher.PAD_ID]
+        finishers = []
         while remaining:
             seen, wave, deferred = set(), [], []
             for item in remaining:
@@ -372,11 +435,27 @@ class BatchedConversationalSearchEngine(_EngineBase):
                 else:
                     seen.add(item[1].conv_id)
                     wave.append(item)
-            self._process_wave(wave, results)
+            finishers.append(self._launch_wave(wave))
             remaining = deferred
-        return results
 
-    def _process_wave(self, wave, results) -> None:
+        def complete() -> List[Any]:
+            results: List[Any] = [None] * len(reqs)
+            for finish in finishers:
+                finish(results)
+            return results
+        return complete
+
+    def _launch_wave(self, wave):
+        """Enqueue one wave's device work (no host-side blocking) and
+        return a ``finish(results)`` closure that materializes it.
+
+        Everything up to the returned closure is async dispatch: gather,
+        step_batch, cache fuse, and scatter all enqueue onto the device
+        stream and return immediately.  The closure's ``device_get``
+        calls are the only blocking point — deferred until the batcher
+        retires this launch, by which time the next wave's host assembly
+        has already overlapped this wave's device execution.
+        """
         cfg = self.cfg
         b = len(wave)
         bb = self.batcher.bucket(b)          # padded (bucketed) batch size
@@ -410,25 +489,38 @@ class BatchedConversationalSearchEngine(_EngineBase):
                 # dispatch entirely on a hit — same observable state)
                 v, i, new_sess, stats, hit = self._cache.fuse(
                     slots, q, v, i, sess, new_sess, stats)
-                hit = np.asarray(jax.device_get(hit))
-                self._cache.hits += int(hit[:b].sum())
-                self._cache.misses += int(b - hit[:b].sum())
             self.store.scatter(slots, new_sess)
 
-        v = np.asarray(jax.device_get(v))
-        i = np.asarray(jax.device_get(i))
-        stats = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), stats)
-        now = time.perf_counter()
-        for row, (j, r) in enumerate(wave):
-            turn = self.turn_count.get(r.conv_id, 0)
-            self.turn_count[r.conv_id] = turn + 1
-            rec = TurnRecord(
-                r.conv_id, turn, now - r.enqueue_t,
-                int(stats.centroid_dists[row]),
-                int(stats.list_dists[row]),
-                int(stats.graph_dists[row]),
-                bool(stats.refreshed[row]), int(stats.i0[row]),
-                int(stats.code_dists[row]),
-                cache_hit=bool(hit[row]) if hit is not None else False)
-            self.records.append(rec)
-            results[j] = (v[row], i[row])
+        # turn numbers are claimed at LAUNCH: a later launch holding the
+        # same conversation must see this wave's increment even though
+        # its records are written at retirement
+        turns = []
+        for _, r in wave:
+            t = self.turn_count.get(r.conv_id, 0)
+            self.turn_count[r.conv_id] = t + 1
+            turns.append(t)
+        t_dispatch = time.perf_counter()
+
+        def finish(results) -> None:
+            vh = np.asarray(jax.device_get(v))
+            ih = np.asarray(jax.device_get(i))
+            st = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                              stats)
+            hh = None
+            if hit is not None:
+                hh = np.asarray(jax.device_get(hit))
+                self._cache.count_hits(hh, b)
+            now = time.perf_counter()
+            for row, ((j, r), turn) in enumerate(zip(wave, turns)):
+                rec = TurnRecord(
+                    r.conv_id, turn, now - t_dispatch,
+                    int(st.centroid_dists[row]),
+                    int(st.list_dists[row]),
+                    int(st.graph_dists[row]),
+                    bool(st.refreshed[row]), int(st.i0[row]),
+                    int(st.code_dists[row]),
+                    cache_hit=bool(hh[row]) if hh is not None else False,
+                    queue_wait_s=t_dispatch - r.enqueue_t)
+                self.records.append(rec)
+                results[j] = (vh[row], ih[row])
+        return finish

@@ -40,6 +40,7 @@ from __future__ import annotations
 import functools
 from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -203,6 +204,15 @@ class ResultCache:
         total = self.hits + self.misses
         return {"hits": self.hits, "misses": self.misses,
                 "hit_rate": (self.hits / total) if total else 0.0}
+
+    def count_hits(self, hit: np.ndarray, b: int) -> None:
+        """Fold a wave's materialized hit mask (first ``b`` rows are
+        real requests) into the counters.  Separate from ``fuse`` so the
+        continuous-batching engine can defer the blocking ``device_get``
+        of the mask to wave retirement instead of the launch path."""
+        n_hit = int(np.asarray(hit)[:b].sum())
+        self.hits += n_hit
+        self.misses += b - n_hit
 
     # -- sequential (dict) mode ---------------------------------------
 

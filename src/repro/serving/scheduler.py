@@ -1,16 +1,37 @@
-"""Serving scheduler: micro-batching + hedged (straggler-proof) dispatch.
+"""Serving scheduler: continuous micro-batching + hedged dispatch.
 
-``MicroBatcher`` — classic continuous-batching front door: requests
-accumulate until ``max_batch`` or ``max_wait_s`` (deadline-based flush),
-then execute as one device batch.  Padding to the next bucket keeps jit
-cache hits high (static shapes).
+``MicroBatcher`` — the serving front door: requests accumulate until
+``max_batch`` or ``max_wait_s`` (deadline-based flush), then execute as
+one device batch.  Padding to the next bucket keeps jit cache hits high
+(static shapes).  Two execution modes share the drain/pad logic:
+
+  * **synchronous** (``process_batch``): the callback computes the
+    results before the flush returns — the original one-wave-at-a-time
+    loop, still used by tests and simple tools.
+  * **continuous** (``dispatch_batch``): the callback only *launches*
+    the device work (jax async dispatch) and returns a completion
+    thunk; the batcher keeps up to ``max_inflight`` launched batches
+    outstanding and resolves their futures when it retires them.  The
+    host therefore assembles wave N+1 while wave N runs on device —
+    the device never idles waiting for host-side scheduling, which is
+    what turns per-wave speedups into sustained QPS.
+
+All queue and stats state is guarded by one lock (``submit`` may be
+called from any number of client threads); the drain/retire path is
+single-owner (``_drain_lock``), so two serving-loop threads calling
+``flush_loop_once`` concurrently serialize instead of interleaving a
+drain mid-pad.  Waiting for work uses a condition variable — a submit
+wakes the flusher immediately, and an idle flusher sleeps instead of
+hot-spinning the deadline poll.
 
 ``HedgedExecutor`` — tail-latency mitigation for multi-replica serving:
 after an adaptive p95-based deadline, the slowest in-flight call is
 re-issued on a second replica and the first result wins (Dean &
 Barroso, "The Tail at Scale").  At 1000-node scale this is what keeps
 p99 flat when a host degrades; tests/test_serving.py exercises it with
-a deliberately slow replica.
+a deliberately slow replica.  It owns a thread pool, so it is a context
+manager — call ``close()`` (or use ``with``) when tearing an engine or
+benchmark down, or every rebuild leaks 2x``len(replicas)`` threads.
 """
 from __future__ import annotations
 
@@ -36,23 +57,42 @@ class MicroBatcher:
 
     Every flush is padded up to ``bucket(n)`` with trailing **pad
     requests** (``conv_id == PAD_ID``, payload cloned from the first real
-    request) before reaching ``process_batch`` — so the callback only
+    request) before reaching the batch callback — so the callback only
     ever sees batch sizes from the bucket table and the jitted device
     program compiles once per bucket instead of once per distinct raw
     size.  Pad results are discarded (no futures exist for them);
     batch-aware callbacks such as the batched engine route pad rows to
     the session store's trash slot.  ``batch_sizes`` records the raw
-    drained sizes, ``padded_sizes`` the dispatched (bucketed) sizes.
+    drained sizes, ``padded_sizes`` the dispatched (bucketed) sizes —
+    both appended under the lock, so concurrent flusher threads cannot
+    interleave the two lists out of step.
+
+    Exactly one of ``process_batch`` (synchronous) and
+    ``dispatch_batch`` (continuous) must be given.  ``dispatch_batch``
+    receives the padded request list, launches the device work without
+    blocking, and returns a zero-argument completion thunk yielding the
+    per-request results; the batcher retires the oldest outstanding
+    launch whenever ``max_inflight`` would be exceeded, and ``sync()``
+    retires everything (serving-loop quiesce / ``drain``).
     """
 
     PAD_ID = "__pad__"   # reserved conv_id marking padding requests
 
-    def __init__(self, process_batch: Callable[[List[Request]], List[Any]],
-                 *, max_batch: int = 32, max_wait_s: float = 0.002,
-                 buckets: Sequence[int] = (1, 2, 4, 8, 16, 32)):
+    def __init__(self, process_batch: Optional[
+                     Callable[[List[Request]], List[Any]]] = None,
+                 *, dispatch_batch: Optional[
+                     Callable[[List[Request]], Callable[[], List[Any]]]] = None,
+                 max_batch: int = 32, max_wait_s: float = 0.002,
+                 buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                 max_inflight: int = 2):
+        if (process_batch is None) == (dispatch_batch is None):
+            raise ValueError(
+                "exactly one of process_batch / dispatch_batch required")
         self._process = process_batch
+        self._dispatch = dispatch_batch
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.max_inflight = max(1, int(max_inflight))
         # the table must cover max_batch, else a drain larger than the
         # top bucket would dispatch ragged (bucket() would return a
         # bucket *smaller* than n and the pad range would be empty)
@@ -60,13 +100,19 @@ class MicroBatcher:
         self._queue: "collections.deque[Tuple[Request, Future]]" = \
             collections.deque()
         self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        # single-owner drain/retire: two flusher threads serialize here
+        self._drain_lock = threading.Lock()
+        self._inflight: "collections.deque[Tuple[List, Callable]]" = \
+            collections.deque()
         self.batch_sizes: List[int] = []
         self.padded_sizes: List[int] = []
 
     def submit(self, req: Request) -> Future:
         fut: Future = Future()
-        with self._lock:
+        with self._work:
             self._queue.append((req, fut))
+            self._work.notify()
         return fut
 
     def bucket(self, n: int) -> int:
@@ -75,30 +121,30 @@ class MicroBatcher:
                 return b
         return self.buckets[-1]
 
-    def flush_loop_once(self) -> int:
-        """Drain one micro-batch (call from the serving loop)."""
+    @property
+    def inflight(self) -> int:
+        """Launched-but-unretired batches (continuous mode)."""
+        return len(self._inflight)
+
+    def _wait_and_drain(self) -> List[Tuple[Request, Future]]:
+        """Wait (condvar, not poll) until max_batch or the deadline,
+        then pop up to max_batch items."""
         deadline = time.perf_counter() + self.max_wait_s
-        while time.perf_counter() < deadline:
-            with self._lock:
-                if len(self._queue) >= self.max_batch:
+        with self._work:
+            while len(self._queue) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
                     break
-            time.sleep(self.max_wait_s / 10)
-        with self._lock:
+                self._work.wait(timeout=remaining)
             take = min(len(self._queue), self.max_batch)
-            items = [self._queue.popleft() for _ in range(take)]
-        if not items:
-            return 0
-        reqs = [r for r, _ in items]
-        self.batch_sizes.append(len(reqs))
-        # pad to the bucket so the process callback always dispatches a
-        # bucketed (jit-cache-stable) batch; pad payloads clone a real
-        # request so any payload-shape assumptions hold
-        bb = self.bucket(len(reqs))
-        reqs = reqs + [Request(self.PAD_ID, reqs[0].payload)
-                       for _ in range(bb - len(reqs))]
-        self.padded_sizes.append(len(reqs))
+            return [self._queue.popleft() for _ in range(take)]
+
+    def _retire_oldest_locked(self) -> None:
+        """Complete the oldest in-flight launch and resolve its futures.
+        Caller holds ``_drain_lock``."""
+        items, complete = self._inflight.popleft()
         try:
-            results = self._process(reqs)
+            results = complete()
             # pads are trailing: zip over items covers exactly the real
             # requests and drops pad results
             for (_, fut), res in zip(items, results):
@@ -106,7 +152,58 @@ class MicroBatcher:
         except BaseException as e:
             for _, fut in items:
                 fut.set_exception(e)
-        return len(items)
+
+    def flush_loop_once(self) -> int:
+        """Drain one micro-batch (call from the serving loop).
+
+        Continuous mode returns once the batch is *launched* (futures
+        resolve when the launch is retired — after ``max_inflight``
+        later launches, or at ``sync()``); synchronous mode returns with
+        the futures already resolved.  Returns the number of real
+        requests drained.
+        """
+        with self._drain_lock:
+            items = self._wait_and_drain()
+            if not items:
+                return 0
+            reqs = [r for r, _ in items]
+            # pad to the bucket so the batch callback always dispatches
+            # a bucketed (jit-cache-stable) batch; pad payloads clone a
+            # real request so any payload-shape assumptions hold
+            bb = self.bucket(len(reqs))
+            padded = reqs + [Request(self.PAD_ID, reqs[0].payload)
+                             for _ in range(bb - len(reqs))]
+            with self._lock:
+                self.batch_sizes.append(len(reqs))
+                self.padded_sizes.append(len(padded))
+            if self._dispatch is None:
+                try:
+                    results = self._process(padded)
+                    for (_, fut), res in zip(items, results):
+                        fut.set_result(res)
+                except BaseException as e:
+                    for _, fut in items:
+                        fut.set_exception(e)
+                return len(items)
+            try:
+                complete = self._dispatch(padded)
+            except BaseException as e:
+                for _, fut in items:
+                    fut.set_exception(e)
+                return len(items)
+            self._inflight.append((items, complete))
+            # two-in-flight steady state: launching wave N+1 retires
+            # wave N — its device work overlapped this launch's host
+            # assembly, so the (blocking) completion is cheap by now
+            while len(self._inflight) >= self.max_inflight:
+                self._retire_oldest_locked()
+            return len(items)
+
+    def sync(self) -> None:
+        """Retire every outstanding launch (continuous mode quiesce)."""
+        with self._drain_lock:
+            while self._inflight:
+                self._retire_oldest_locked()
 
 
 class HedgedExecutor:
@@ -129,6 +226,11 @@ class HedgedExecutor:
     deque (``lat_window``), so ``_deadline()`` stays O(window) instead
     of percentile-over-all-time-calls, and the deadline tracks the
     *recent* latency distribution at sustained traffic.
+
+    Owns a ``ThreadPoolExecutor`` — ``close()`` (idempotent; also via
+    ``with``) shuts it down, or every engine/benchmark rebuild leaks
+    2x``len(replicas)`` threads.  ``call`` after ``close`` raises
+    ``RuntimeError``.
     """
 
     def __init__(self, replicas: Sequence[Callable[[Any], Any]], *,
@@ -142,11 +244,26 @@ class HedgedExecutor:
         self._lat: "collections.deque[float]" = collections.deque(
             maxlen=lat_window)
         self._pool = ThreadPoolExecutor(max_workers=2 * len(replicas))
+        self._closed = False
         self._rr = 0
         self.calls = 0
         self.hedges_issued = 0
         self.hedges_won = 0
         self.failovers = 0
+
+    def close(self) -> None:
+        """Shut the replica thread pool down (waits for in-flight
+        calls).  Idempotent."""
+        if not self._closed:
+            self._closed = True
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "HedgedExecutor":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def _deadline(self) -> float:
         if len(self._lat) < self.min_history:
@@ -155,6 +272,8 @@ class HedgedExecutor:
                    float(np.percentile(self._lat, 100 * self.hedge_quantile)))
 
     def call(self, payload: Any) -> Any:
+        if self._closed:
+            raise RuntimeError("HedgedExecutor is closed")
         t0 = time.perf_counter()
         self.calls += 1
         primary_idx = self._rr % len(self.replicas)

@@ -30,12 +30,22 @@ Slot model
     utterance) — the same semantics as a TopLoc_IVF+ refresh, so
     effectiveness degrades gracefully rather than failing.
 
-At multi-host scale one ``SessionStore`` lives per data-parallel group
-and the router pins conversations to groups (DESIGN.md §2).  When the
-*corpus* is sharded over a device mesh (``distributed.retrieval``) the
-slab replicates over that mesh — sessions are the replicated TopLoc
-state; only posting lists / vector rows shard.  Sharding the slab itself
-over data-parallel hosts is the next step this layout enables.
+The store is **per-replica state**: on a 2-D ``(replica, shard)``
+serving mesh each replica engine owns its own slab on its own device
+group, and ``serving.router.ReplicatedSearchEngine`` pins a
+conversation to one replica for its lifetime — a session gathered on
+replica r must be scattered back to the same slab, and cross-replica
+migration would lose the C0 cache (DESIGN.md §2).  When the *corpus*
+is sharded over a device mesh (``distributed.retrieval``) the slab
+replicates over that mesh — sessions are the replicated TopLoc state;
+only posting lists / vector rows shard.
+
+Continuous batching note: the engine launches wave N+1 before wave N's
+results are fetched.  This is safe *because* every wave chains through
+the slab on one device stream — wave N's ``scatter`` (which consumes
+the donated slab) is enqueued before wave N+1's ``gather``, so in-order
+stream execution gives wave N+1 the updated rows and donation never
+frees a buffer a pending gather still reads.
 """
 from __future__ import annotations
 

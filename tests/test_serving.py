@@ -307,3 +307,154 @@ def test_hedged_executor_single_failing_replica_raises():
     with pytest.raises(RuntimeError, match="replica down"):
         ex.call(1)
     assert ex.hedges_issued == 0 and ex.failovers == 0
+
+
+def test_micro_batcher_stats_consistent_under_concurrent_flushers():
+    """Two serving-loop threads hammering flush_loop_once while clients
+    submit: the drain path is single-owner and the stats lists are
+    guarded by the lock, so batch_sizes/padded_sizes stay zipped
+    (len equal, every padded >= raw, all results correct)."""
+    import threading
+
+    mb = MicroBatcher(lambda reqs: [r.payload for r in reqs],
+                      max_batch=8, max_wait_s=0.0, buckets=(1, 2, 4, 8))
+    futs = []
+    stop = threading.Event()
+
+    def flusher():
+        while not stop.is_set():
+            mb.flush_loop_once()
+
+    threads = [threading.Thread(target=flusher) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        for j in range(300):
+            futs.append((j, mb.submit(Request(f"c{j}", j))))
+        assert [f.result(timeout=5) for _, f in futs] == list(range(300))
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+    while mb.flush_loop_once():
+        pass
+    assert len(mb.batch_sizes) == len(mb.padded_sizes)
+    assert sum(mb.batch_sizes) == 300
+    assert all(p >= b and p in (1, 2, 4, 8)
+               for b, p in zip(mb.batch_sizes, mb.padded_sizes))
+
+
+def test_micro_batcher_condvar_wakeup_no_hot_spin():
+    """A flusher blocked in flush_loop_once with an empty queue wakes on
+    submit (condition variable), and max_wait_s=0 returns immediately
+    instead of hot-spinning."""
+    import threading
+
+    mb = MicroBatcher(lambda reqs: [r.payload for r in reqs],
+                      max_batch=4, max_wait_s=5.0)
+    out = []
+
+    def flusher():
+        out.append(mb.flush_loop_once())
+
+    t = threading.Thread(target=flusher)
+    t.start()
+    time.sleep(0.05)                  # flusher is parked on the condvar
+    t0 = time.perf_counter()
+    futs = [mb.submit(Request("c", j)) for j in range(4)]
+    [f.result(timeout=2) for f in futs]
+    # the full batch released the flusher long before the 5 s deadline
+    assert time.perf_counter() - t0 < 2.0
+    t.join(timeout=5)
+    assert out == [4]
+    # and max_wait_s=0 with an empty queue returns without spinning
+    mb0 = MicroBatcher(lambda reqs: [r.payload for r in reqs],
+                       max_batch=4, max_wait_s=0.0)
+    t0 = time.perf_counter()
+    assert mb0.flush_loop_once() == 0
+    assert time.perf_counter() - t0 < 0.5
+
+
+def test_micro_batcher_dispatch_mode_two_in_flight():
+    """Continuous mode: a launch's futures resolve only when the batcher
+    retires it (max_inflight later launches, or sync()), and the
+    completion thunks run in launch order."""
+    completed = []
+
+    def dispatch(reqs):
+        payloads = [r.payload for r in reqs]
+
+        def complete():
+            completed.append(payloads[0])
+            return payloads
+        return complete
+
+    mb = MicroBatcher(dispatch_batch=dispatch, max_batch=2,
+                      max_wait_s=0.0, buckets=(2,), max_inflight=2)
+    f01 = [mb.submit(Request(f"c{j}", j)) for j in (0, 1)]
+    assert mb.flush_loop_once() == 2
+    # one launch in flight: nothing completed, futures pending
+    assert mb.inflight == 1 and completed == []
+    assert not f01[0].done()
+    f23 = [mb.submit(Request(f"c{j}", j)) for j in (2, 3)]
+    assert mb.flush_loop_once() == 2
+    # second launch hit max_inflight: the FIRST launch retired
+    assert mb.inflight == 1 and completed == [0]
+    assert [f.result(timeout=1) for f in f01] == [0, 1]
+    assert not f23[0].done()
+    mb.sync()                          # quiesce retires the rest
+    assert mb.inflight == 0 and completed == [0, 2]
+    assert [f.result(timeout=1) for f in f23] == [2, 3]
+
+
+def test_micro_batcher_dispatch_mode_error_paths():
+    """Continuous mode errors: a throwing dispatch fails the batch's
+    futures immediately; a throwing completion fails them at
+    retirement."""
+    def bad_dispatch(reqs):
+        raise RuntimeError("launch failed")
+
+    mb = MicroBatcher(dispatch_batch=bad_dispatch, max_batch=2,
+                      max_wait_s=0.0)
+    fut = mb.submit(Request("c", 1))
+    mb.flush_loop_once()
+    with pytest.raises(RuntimeError, match="launch failed"):
+        fut.result(timeout=1)
+    assert mb.inflight == 0
+
+    def bad_complete(reqs):
+        def complete():
+            raise RuntimeError("device error")
+        return complete
+
+    mb2 = MicroBatcher(dispatch_batch=bad_complete, max_batch=2,
+                       max_wait_s=0.0)
+    fut2 = mb2.submit(Request("c", 1))
+    mb2.flush_loop_once()
+    assert not fut2.done()             # still in flight
+    mb2.sync()
+    with pytest.raises(RuntimeError, match="device error"):
+        fut2.result(timeout=1)
+
+
+def test_micro_batcher_requires_exactly_one_callback():
+    with pytest.raises(ValueError):
+        MicroBatcher()
+    with pytest.raises(ValueError):
+        MicroBatcher(lambda reqs: [], dispatch_batch=lambda reqs: None)
+
+
+def test_hedged_executor_close_shuts_the_pool_down():
+    """close() shuts the replica pool down (idempotently); calls after
+    close fail loudly instead of hanging; the context-manager form
+    closes on exit."""
+    ex = HedgedExecutor([lambda x: x])
+    assert ex.call(1) == 1
+    ex.close()
+    ex.close()                         # idempotent
+    assert ex._pool._shutdown
+    with pytest.raises(RuntimeError):
+        ex.call(2)
+    with HedgedExecutor([lambda x: x * 2]) as ex2:
+        assert ex2.call(3) == 6
+    assert ex2._pool._shutdown
