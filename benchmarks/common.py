@@ -104,7 +104,9 @@ def hnsw_index(kind: str) -> HN.HNSWIndex:
     raw = _cached(f"hnsw_{kind}_{N_DOCS}_{HNSW_M}_{HNSW_EFC}",
                   lambda: HN.build(wl.doc_vecs, m=HNSW_M,
                                    ef_construction=HNSW_EFC, seed=0))
-    return HN.HNSWIndex(*[jnp.asarray(x) for x in raw])
+    # `deleted` is None on a pristine build — asarray would NaN it
+    return HN.HNSWIndex(*[None if x is None else jnp.asarray(x)
+                          for x in raw])
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, repeat: int = 3

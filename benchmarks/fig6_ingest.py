@@ -1,0 +1,239 @@
+"""Fig 6 (ours): streaming ingest vs serving latency on a mutable corpus.
+
+Closed-loop benchmark for the segmented mutable corpus
+(``core.segment`` behind ``ServingConfig.segment_cap``): S concurrent
+sessions replay multi-turn conversations through the batched engine
+while an ingest loop appends document batches into the delta segment,
+tombstones previously-served documents, and folds the delta into the
+frozen base (``compact()``) whenever the segment fills.  Reported:
+per-wave serving latency with ingest OFF vs ON (the delta-scan +
+tombstone-mask overhead), sustained ingest throughput (docs/s through
+``add_documents``), and compaction cost.
+
+Two properties make the numbers meaningful:
+
+  * adds and deletes are **shape-stable** — the delta buffer is a fixed
+    ``(cap, d)`` slab and tombstones a fixed bool mask, so mutation
+    never retraces the serving programs; only ``compact()`` (which
+    grows the base) pays a retrace, and that cost is reported
+    separately, not smeared into turn latency.
+  * the smoke gate pins the **compaction contract**: after the run, the
+    engine's compacted host index must be bit-identical to
+    ``core.segment.rebuild`` — the from-scratch oracle over the pristine
+    index plus the full add/delete history — and a turn served mid-run
+    may never contain a document deleted before it was submitted.
+
+  PYTHONPATH=src:. python benchmarks/fig6_ingest.py
+  PYTHONPATH=src:. python benchmarks/fig6_ingest.py --smoke
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "--smoke" in sys.argv:
+    os.environ.setdefault("BENCH_DOCS", "4000")
+    os.environ.setdefault("BENCH_PARTITIONS", "512")
+    os.environ.setdefault("BENCH_CONVS", "64")
+    os.environ.setdefault("BENCH_TURNS", "4")
+    os.environ.setdefault("BENCH_SEG_CAP", "256")
+
+# must happen before jax import: give the host platform 8 devices (the
+# CI job shares one env with the sharded fig7 step)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+
+from repro.core import backend as B
+from repro.core import segment as S
+from repro.serving import BatchedConversationalSearchEngine, ServingConfig
+from benchmarks import common as C
+
+K = 10
+NPROBE = 8
+H = 384
+ALPHA = 0.25
+MAX_BATCH = 32
+SEG_CAP = int(os.environ.get("BENCH_SEG_CAP", 2048))
+# sized to force compactions inside the wave loop (~2.5 segment fills)
+INGEST_BATCH = int(os.environ.get(
+    "BENCH_INGEST_BATCH",
+    max(32, (SEG_CAP * 5) // (2 * max(1, C.TURNS)))))
+
+
+def config() -> ServingConfig:
+    # result cache off: this figure isolates the mutation-path overhead
+    # (delta scan + tombstone mask); the cache's interplay with deletes
+    # is pinned by tests/test_result_cache.py instead
+    return ServingConfig(backend="ivf", strategy="toploc+", k=K,
+                         nprobe=NPROBE, h=H, alpha=ALPHA,
+                         segment_cap=SEG_CAP)
+
+
+def serve_wave(eng, wl, turn: int) -> tuple:
+    """One closed-loop wave: every session submits its next turn, the
+    driver flushes until all futures land.  Returns (ids per session,
+    wall seconds)."""
+    S_ = wl.conversations.shape[0]
+    t0 = time.perf_counter()
+    futs = [eng.submit(f"s{sid}", wl.conversations[sid, turn])
+            for sid in range(S_)]
+    while not all(f.done() for f in futs):
+        if eng.flush() == 0:
+            eng.sync()
+    wall = time.perf_counter() - t0
+    return [np.asarray(f.result()[1]) for f in futs], wall
+
+
+def ingest_pool(n: int, d: int) -> np.ndarray:
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def drive(eng, wl, *, ingest: bool) -> Dict:
+    """Wave loop; with ``ingest`` each wave is followed by one
+    add_documents batch, one delete of a just-served doc, and a
+    compact() whenever the next batch would overflow the segment."""
+    T = wl.conversations.shape[1]
+    pool = ingest_pool(INGEST_BATCH * T, wl.doc_vecs.shape[1])
+    wave_s: List[float] = []
+    add_s: List[float] = []
+    compact_s: List[float] = []
+    added: List[np.ndarray] = []
+    deleted: List[int] = []
+    fill = 0
+    stale_served = 0
+    for turn in range(T):
+        ids_by_sid, wall = serve_wave(eng, wl, turn)
+        wave_s.append(wall)
+        dead = set(deleted)
+        stale_served += sum(
+            int(np.isin(ids, list(dead)).sum()) for ids in ids_by_sid
+        ) if dead else 0
+        if not ingest:
+            continue
+        batch = pool[turn * INGEST_BATCH:(turn + 1) * INGEST_BATCH]
+        if fill + len(batch) > SEG_CAP:
+            t0 = time.perf_counter()
+            eng.compact()
+            compact_s.append(time.perf_counter() - t0)
+            fill = 0
+        t0 = time.perf_counter()
+        eng.add_documents(batch)
+        add_s.append(time.perf_counter() - t0)
+        added.append(batch)
+        fill += len(batch)
+        # tombstone a doc this wave actually served (base or delta)
+        victim = int(ids_by_sid[turn % len(ids_by_sid)][0])
+        if victim not in dead:
+            eng.delete_documents([victim])
+            deleted.append(victim)
+    out = {
+        "qps": (wl.conversations.shape[0] * T) / sum(wave_s),
+        "p50_ms": float(np.percentile(np.asarray(wave_s) * 1e3, 50)),
+        "p99_ms": float(np.percentile(np.asarray(wave_s) * 1e3, 99)),
+        "stale_served": stale_served,
+    }
+    if ingest:
+        n_added = sum(len(a) for a in added)
+        out.update({
+            "added": np.concatenate(added),
+            "deleted": deleted,
+            "docs_per_s": n_added / sum(add_s),
+            "add_p50_ms": float(np.percentile(np.asarray(add_s) * 1e3,
+                                              50)),
+            "compactions": len(compact_s),
+            "compact_ms": [round(t * 1e3, 1) for t in compact_s],
+        })
+    return out
+
+
+def warmup(eng, wl) -> None:
+    """Compile the wave programs, then reset accounting."""
+    d = wl.conversations.shape[-1]
+    for j in range(MAX_BATCH):
+        eng.submit(f"warm{j}", np.zeros(d, np.float32))
+    eng.drain()
+    for j in range(MAX_BATCH):
+        eng.end_conversation(f"warm{j}")
+    eng.records.clear()
+    eng.turn_count.clear()
+
+
+def check_identity(eng, pristine_idx, added: np.ndarray,
+                   deleted: List[int]) -> None:
+    """The smoke gate's hard bar: fold the remaining delta and compare
+    the engine's host index, leaf by leaf, against the from-scratch
+    rebuild oracle over the same mutation history."""
+    eng.compact()
+    inner = B.make("ivf", h=H, nprobe=NPROBE, alpha=ALPHA)
+    oracle = S.rebuild(inner, pristine_idx, added, deleted, cap=SEG_CAP)
+    got = jax.tree.leaves(eng._seg_host, is_leaf=lambda x: x is None)
+    want = jax.tree.leaves(oracle, is_leaf=lambda x: x is None)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        if g is None or w is None:
+            assert g is None and w is None
+            continue
+        if not np.array_equal(np.asarray(g), np.asarray(w)):
+            raise AssertionError(
+                "post-compaction index differs from the from-scratch "
+                "rebuild — the bit-identity contract is broken")
+    print(f"  identity OK (compact == rebuild over {len(added)} adds, "
+          f"{len(deleted)} deletes, bit-identical)")
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    wl = C.workload("cast20")
+    idx = C.ivf_index("cast20")
+    S_, T = wl.conversations.shape[0], wl.conversations.shape[1]
+    print(f"corpus: {C.N_DOCS} docs, p={C.PARTITIONS}; traffic: {S_} "
+          f"sessions x {T} turns; segment cap={SEG_CAP}, "
+          f"ingest {INGEST_BATCH} docs/wave")
+
+    runs = {}
+    for label, ingest in (("ingest off", False), ("ingest on", True)):
+        eng = BatchedConversationalSearchEngine(
+            config(), ivf_index=idx, n_slots=max(MAX_BATCH, S_),
+            max_batch=MAX_BATCH, max_wait_s=1e-4, buckets=(MAX_BATCH,))
+        warmup(eng, wl)
+        runs[label] = drive(eng, wl, ingest=ingest)
+        if ingest:
+            check_identity(eng, idx, runs[label]["added"],
+                           runs[label]["deleted"])
+        eng.close()
+
+    print(f"\n{'phase':>12s} {'qps':>8s} {'p50 ms':>8s} {'p99 ms':>8s}")
+    for label, out in runs.items():
+        print(f"{label:>12s} {out['qps']:8.1f} {out['p50_ms']:8.2f} "
+              f"{out['p99_ms']:8.2f}")
+    on = runs["ingest on"]
+    print(f"\ningest: {on['docs_per_s']:.0f} docs/s sustained "
+          f"(add p50 {on['add_p50_ms']:.2f} ms/batch), "
+          f"{on['compactions']} compaction(s) at {on['compact_ms']} ms; "
+          f"serving overhead p50 "
+          f"{on['p50_ms'] - runs['ingest off']['p50_ms']:+.2f} ms/wave")
+
+    if smoke:
+        assert on["docs_per_s"] > 0, "ingest throughput is zero"
+        assert on["stale_served"] == 0, (
+            f"{on['stale_served']} result(s) contained a tombstoned doc")
+        assert on["compactions"] >= 1, (
+            "smoke sizing never filled the segment — compaction path "
+            "untested")
+        print(f"SMOKE OK: compact == rebuild bit-identical, "
+              f"{on['docs_per_s']:.0f} docs/s ingest alongside "
+              f"{on['qps']:.1f} qps serving, 0 tombstoned docs served")
+
+
+if __name__ == "__main__":
+    main()

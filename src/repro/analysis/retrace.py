@@ -53,6 +53,9 @@ def _tiny_indexes() -> Dict[str, Any]:
     from repro.core import ivf as _ivf
     from repro.core import pq as _pq
 
+    from repro.core import backend as _backend
+    from repro.core import segment as _segment
+
     docs = _tiny_corpus()
     ivf_index = _ivf.build(docs, 8, iters=4)
     out: Dict[str, Any] = {
@@ -62,11 +65,18 @@ def _tiny_indexes() -> Dict[str, Any]:
         "hnsw_index": _hnsw.build(docs, m=4, seed=0),
         "doc_vecs": jnp.asarray(docs),
     }
+    out["segmented_index"] = _segment.make_segmented(
+        _backend.make("ivf", **_tiny_knobs("ivf")), ivf_index, cap=8)
     return out
 
 
 def _tiny_knobs(name: str) -> Dict[str, Any]:
     """Knobs scaled to the tiny corpus (h ≤ p, nprobe ≤ h, …)."""
+    if name == "segmented":
+        # the wrapper's only knob is the inner backend; its default
+        # (h=1024) is sized for real corpora, not the tiny probe one
+        from repro.core import backend as _backend
+        return {"inner": _backend.make("ivf", **_tiny_knobs("ivf"))}
     return {"h": 8, "nprobe": 4, "alpha": 0.5, "rerank": 8, "ef": 8,
             "up": 2}
 

@@ -39,7 +39,8 @@ PASS_ID = "shard-specs"
 
 # index fields that must stay replicated / must shard (dim 0)
 REPLICATED_FIELDS = {"centroids", "codewords", "adj0", "upper_adj",
-                     "entry_point", "node_level"}
+                     "entry_point", "node_level", "deleted",
+                     "delta_vecs", "delta_ids", "tombstone"}
 SHARDED_FIELDS = {"list_vecs", "list_ids", "list_sizes", "list_codes",
                   "doc_vecs", "vectors"}
 

@@ -10,9 +10,13 @@ Public API:
   kmeans   — distributed balanced k-means (index build substrate)
   topk     — top-k select/merge utilities incl. distributed merge
   pq       — product-quantised posting lists (IVF-PQ, beyond-paper)
+  segment  — mutable corpus: delta segment + tombstones + compaction
+             (SegmentedBackend wraps any registered backend)
 """
-from repro.core import backend, hnsw, ivf, kmeans, pq, topk, toploc  # noqa: F401,E501
+from repro.core import backend, hnsw, ivf, kmeans, pq, segment, topk, toploc  # noqa: F401,E501
 from repro.core.backend import (  # noqa: F401
     ExactBackend, HNSWBackend, IVFBackend, IVFPQBackend, RetrievalBackend)
 from repro.core.pq import (  # noqa: F401
     IVFPQIndex, PQCodebook, build_ivf_pq)
+from repro.core.segment import (  # noqa: F401
+    SegmentedBackend, SegmentedIndex)

@@ -82,12 +82,39 @@ def get(name: str) -> Type["RetrievalBackend"]:
             f"{', '.join(names())}") from None
 
 
-def make(name: str, **knobs: Any) -> "RetrievalBackend":
+def _knob_fields(cls: Type["RetrievalBackend"]) -> set:
+    return {f.name for f in dataclasses.fields(cls)}
+
+
+def make(name: str, *, strict: bool = False,
+         **knobs: Any) -> "RetrievalBackend":
     """Build a backend from a flat knob mapping (e.g. a ServingConfig's
     fields): knobs the backend does not declare are ignored, so one
-    config dataclass can parameterise every backend."""
+    config dataclass can parameterise every backend.
+
+    A knob that no *registered* backend declares is a typo, not a
+    cross-backend knob, and raises even on the lenient path (a typo'd
+    ``nprob=16`` used to yield a default-nprobe backend with no signal).
+    ``strict=True`` (user-facing callers) additionally rejects knobs
+    this backend doesn't declare itself.
+    """
     cls = get(name)
-    fields = {f.name for f in dataclasses.fields(cls)}
+    fields = _knob_fields(cls)
+    if strict:
+        unknown = sorted(set(knobs) - fields)
+        if unknown:
+            raise TypeError(
+                f"make({name!r}, strict=True): unknown knob(s) "
+                f"{', '.join(unknown)}; {cls.__name__} declares "
+                f"{', '.join(sorted(fields))}")
+        return cls(**knobs)
+    union = set().union(*(_knob_fields(c) for c in _REGISTRY.values()))
+    unknown = sorted(set(knobs) - union)
+    if unknown:
+        raise TypeError(
+            f"make({name!r}): knob(s) {', '.join(unknown)} match no "
+            f"registered backend's fields (likely a typo); known knobs: "
+            f"{', '.join(sorted(union))}")
     return cls(**{k: v for k, v in knobs.items() if k in fields})
 
 

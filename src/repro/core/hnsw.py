@@ -37,6 +37,11 @@ class HNSWIndex(NamedTuple):
     upper_adj: jax.Array    # (L, n, M) int32, -1 padded — levels 1..L (bottom→top)
     entry_point: jax.Array  # () int32 — node at the top level
     node_level: jax.Array   # (n,) int32 — max level of each node
+    # (n,) bool tombstones, or None when the corpus has no deletions.
+    # Deleted nodes stay in the graph and keep routing the beam (the
+    # standard HNSW tombstone scheme — removing edges would change every
+    # survivor's traversal); they are masked out of the *result* top-k.
+    deleted: Optional[jax.Array] = None
 
     @property
     def n(self) -> int:
@@ -51,20 +56,25 @@ class HNSWIndex(NamedTuple):
 # Host-side build (offline indexing step)
 # ---------------------------------------------------------------------------
 
-def build(vectors, m: int = 16, ef_construction: int = 64,
-          seed: int = 0) -> HNSWIndex:
-    """Standard HNSW insertion, numpy. O(n·ef·M·hops) — offline."""
-    x = np.asarray(vectors, np.float32)
-    n, d = x.shape
+def _draw_levels(n: int, m: int, seed: int) -> np.ndarray:
+    """Level assignments for nodes 0..n-1.  One sequential uniform draw,
+    so ``_draw_levels(n)[:n0] == _draw_levels(n0)`` — the prefix property
+    ``insert`` relies on to continue the stream."""
     rng = np.random.default_rng(seed)
     ml = 1.0 / np.log(max(m, 2))
-    levels = np.minimum((-np.log(rng.uniform(1e-12, 1.0, n)) * ml).astype(np.int64), 12)
-    top = int(levels.max()) if n else 0
+    return np.minimum(
+        (-np.log(rng.uniform(1e-12, 1.0, n)) * ml).astype(np.int64), 12)
 
+
+def _insert_range(x, adj, deg, levels, entry, entry_level, lo, hi, m,
+                  ef_construction):
+    """Insert nodes ``lo..hi-1`` into the (mutable) adjacency state.
+
+    This is the whole of the build loop; ``insert`` replays it starting
+    from a stored graph, which is why incremental insertion reproduces
+    ``build`` on the concatenated corpus bit for bit.
+    """
     m0 = 2 * m
-    adj = [np.full((n, m0 if l == 0 else m), -1, np.int32) for l in range(top + 1)]
-    deg = [np.zeros(n, np.int32) for _ in range(top + 1)]
-    entry, entry_level = 0, int(levels[0])
 
     def sims_to(q, ids):
         return x[ids] @ q
@@ -124,7 +134,7 @@ def build(vectors, m: int = 16, ef_construction: int = 64,
                     adj[level][a, :cap] = np.asarray(cur, np.int32)[keep]
                     deg[level][a] = cap
 
-    for i in range(1, n):
+    for i in range(lo, hi):
         q = x[i]
         l_i = int(levels[i])
         cur = entry
@@ -137,6 +147,23 @@ def build(vectors, m: int = 16, ef_construction: int = 64,
             cur = res[0][1]
         if l_i > entry_level:
             entry, entry_level = i, l_i
+    return entry, entry_level
+
+
+def build(vectors, m: int = 16, ef_construction: int = 64,
+          seed: int = 0) -> HNSWIndex:
+    """Standard HNSW insertion, numpy. O(n·ef·M·hops) — offline."""
+    x = np.asarray(vectors, np.float32)
+    n, d = x.shape
+    levels = _draw_levels(n, m, seed)
+    top = int(levels.max()) if n else 0
+
+    m0 = 2 * m
+    adj = [np.full((n, m0 if l == 0 else m), -1, np.int32)
+           for l in range(top + 1)]
+    deg = [np.zeros(n, np.int32) for _ in range(top + 1)]
+    entry, entry_level = _insert_range(
+        x, adj, deg, levels, 0, int(levels[0]), 1, n, m, ef_construction)
 
     upper = (np.stack([a[:, :m] for a in adj[1:]], 0)
              if top >= 1 else np.zeros((0, n, m), np.int32))
@@ -149,8 +176,65 @@ def build(vectors, m: int = 16, ef_construction: int = 64,
     )
 
 
+def insert(index: HNSWIndex, new_vectors, *, ef_construction: int = 64,
+           seed: int = 0) -> HNSWIndex:
+    """Incrementally insert ``new_vectors`` as nodes ``n0..n-1``.
+
+    The level draw continues ``build``'s RNG stream (one fresh draw of
+    all ``n`` levels whose prefix reproduces the stored graph's), and the
+    insertion loop is the same ``_insert_range`` — so
+    ``insert(build(x[:n0], …), x[n0:])`` is bit-identical to
+    ``build(x, …)`` for the same ``(m, ef_construction, seed)``.
+    """
+    xb = np.asarray(index.vectors, np.float32)
+    xn = np.asarray(new_vectors, np.float32)
+    n0, n = xb.shape[0], xb.shape[0] + xn.shape[0]
+    x = np.concatenate([xb, xn], 0)
+    m0 = index.adj0.shape[1]
+    m = m0 // 2
+    levels = _draw_levels(n, m, seed)
+    if not np.array_equal(levels[:n0],
+                          np.asarray(index.node_level, np.int64)):
+        raise ValueError(
+            "insert: level stream mismatch — the index was not built "
+            f"with (m={m}, seed={seed}); incremental insertion would "
+            "diverge from a from-scratch build")
+    top = int(levels.max()) if n else 0
+
+    adj = [np.full((n, m0 if l == 0 else m), -1, np.int32)
+           for l in range(top + 1)]
+    adj[0][:n0] = np.asarray(index.adj0)
+    up = np.asarray(index.upper_adj)          # (L_old, n0, m)
+    for l in range(1, index.top_level + 1):
+        adj[l][:n0] = up[l - 1]
+    # connect() fills each row as a contiguous prefix, so the stored
+    # -1 padding encodes the degree state exactly
+    deg = [np.sum(a >= 0, axis=1).astype(np.int32) for a in adj]
+
+    entry = int(index.entry_point)
+    entry, entry_level = _insert_range(
+        x, adj, deg, levels, entry, int(levels[entry]), n0, n, m,
+        ef_construction)
+
+    upper = (np.stack([a[:, :m] for a in adj[1:]], 0)
+             if top >= 1 else np.zeros((0, n, m), np.int32))
+    deleted = index.deleted
+    if deleted is not None:
+        deleted = jnp.concatenate(
+            [deleted, jnp.zeros((xn.shape[0],), bool)])
+    return HNSWIndex(
+        vectors=jnp.asarray(x),
+        adj0=jnp.asarray(adj[0]),
+        upper_adj=jnp.asarray(upper),
+        entry_point=jnp.asarray(entry, jnp.int32),
+        node_level=jnp.asarray(levels, jnp.int32),
+        deleted=deleted,
+    )
+
+
 def save(index: HNSWIndex, path: str) -> None:
-    np.savez(path, **{k: np.asarray(v) for k, v in index._asdict().items()})
+    np.savez(path, **{k: np.asarray(v)
+                      for k, v in index._asdict().items() if v is not None})
 
 
 def load(path: str) -> HNSWIndex:
@@ -264,13 +348,17 @@ def _search_layer0(dots_at, n, adj0, entry, ef: int, max_steps: int):
 
 def _search_impl(dots_factory, n, top_level, adj0, upper_adj, entry_point,
                  queries, entry_override, *, ef: int, k: int,
-                 use_entry_override: bool
+                 use_entry_override: bool,
+                 deleted: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Traversal shared by the local and device-sharded search paths.
 
     ``dots_factory(q) -> dots_at(ids)`` supplies the candidate scorer;
     ``n`` sizes the visited bitmap (the *global* node count when vectors
-    are sharded).  Everything else is exactly the public ``search``.
+    are sharded).  ``deleted`` (when set) masks tombstoned nodes out of
+    the final top-k only — they still route the beam, so a compacted
+    graph traverses identically to a from-scratch build over the same
+    insertion sequence.  Everything else is exactly the public ``search``.
     """
     max_steps = 4 * ef + 16
 
@@ -289,6 +377,9 @@ def _search_impl(dots_factory, n, top_level, adj0, upper_adj, entry_point,
             start = cur
         cand_v, cand_i, nd0 = _search_layer0(
             dots_at, n, adj0, start, ef, max_steps)
+        if deleted is not None:
+            dead = deleted[jnp.maximum(cand_i, 0)] & (cand_i >= 0)
+            cand_v = jnp.where(dead, -jnp.inf, cand_v)
         top_v, pos = jax.lax.top_k(cand_v, k)
         return top_v, cand_i[pos], ndist + nd0
 
@@ -314,4 +405,5 @@ def search(index: HNSWIndex, queries: jax.Array, *, ef: int, k: int,
     return _search_impl(
         _gather_dots(index.vectors), index.n, index.top_level, index.adj0,
         index.upper_adj, index.entry_point, queries, entry_override,
-        ef=ef, k=k, use_entry_override=use_entry_override)
+        ef=ef, k=k, use_entry_override=use_entry_override,
+        deleted=index.deleted)

@@ -1,0 +1,498 @@
+"""Segmented mutable corpus: delta segment + tombstones + compaction.
+
+Every index in the repo is build-once; real-time conversational search
+needs a corpus that changes while sessions are live.  This module adds
+the standard segmented design (the Lucene/FAISS ``IndexShards`` shape)
+on top of any registered ``RetrievalBackend``:
+
+  * **delta segment** — an append-only flat ``(cap, d)`` buffer scanned
+    *exactly* (one masked multiply-reduce over ``cap`` rows).  New
+    documents take monotonically increasing global ids, so delta row
+    ``j`` always holds id ``n_base + j`` and ids are never renumbered —
+    cache entries and tombstones stay valid across compactions.
+  * **tombstone mask** — one bool per global id.  Deletes are masked out
+    of both scans immediately: IVF/IVF-PQ posting-list entries flip to
+    ``-1`` (the existing pad convention, so the scan kernels are
+    untouched), HNSW nodes keep routing the beam but are masked from the
+    result top-k (``hnsw.HNSWIndex.deleted``), and delta rows mask via
+    ``tombstone[delta_ids]``.
+  * **compaction** — ``compact()`` folds the delta into the base:
+    IVF/IVF-PQ re-pack their posting lists with the live delta docs
+    appended at their nearest coarse centroid (PQ re-encodes with the
+    *frozen* codebook), HNSW inserts incrementally by continuing the
+    build's level-RNG stream.  The hard contract — pinned by
+    ``tests/test_segment.py`` — is that the compacted index is
+    **bit-identical to ``rebuild()``**, the independent from-scratch
+    construction over the same corpus and mutation set.
+
+Determinism of the merged result order: base and delta top-k are merged
+with the ``distributed_topk_ordered`` key scheme — ``jax.lax.sort`` on
+``(-score, position)`` where base rank ``r`` carries position ``r < k``
+and delta row ``j`` carries position ``k + j``.  Ties break base-first,
+then by delta append order (= id order), so results are reproducible at
+any delta fill level, and an empty delta reproduces the wrapped backend
+bit for bit.
+
+The coarse quantiser (IVF centroids) and the PQ codebooks are *frozen*
+build artifacts — the standard streaming-index contract: delta docs are
+assigned/encoded against them, never retrained.  A from-scratch rebuild
+therefore means "re-derive every list/graph from the frozen quantisers
+and the full mutation history", which is exactly what ``rebuild()``
+does (for HNSW it is literally ``hnsw.build`` on the concatenated
+corpus).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, NamedTuple, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw as _hnsw
+from repro.core import ivf as _ivf
+from repro.core import pq as _pq
+from repro.core.backend import IVFBackend, RetrievalBackend, register
+
+
+class SegmentedIndex(NamedTuple):
+    """Mutable corpus = frozen base + append-only delta + tombstones.
+
+    ``tombstone`` covers the whole assignable id space
+    ``n_base + cap`` (both static shapes), so ``n_base`` is derivable as
+    ``tombstone.shape[0] - delta_ids.shape[0]`` and adds/deletes never
+    change any array shape — the query path compiles once per
+    compaction, not per mutation.
+    """
+    base: Any               # the wrapped backend's index (pytree)
+    delta_vecs: jax.Array   # (cap, d) float32 — append-only buffer
+    delta_ids: jax.Array    # (cap,) int32 — global doc ids, -1 = empty
+    tombstone: jax.Array    # (n_base + cap,) bool — True = deleted
+
+
+def n_base(index: SegmentedIndex) -> int:
+    """Id-space size of the base segment (includes purged id holes)."""
+    return index.tombstone.shape[0] - index.delta_ids.shape[0]
+
+
+def delta_cap(index: SegmentedIndex) -> int:
+    return index.delta_ids.shape[0]
+
+
+def delta_fill(index: SegmentedIndex) -> int:
+    """Occupied delta rows (appends are contiguous from row 0)."""
+    return int(np.asarray(index.delta_ids >= 0).sum())
+
+
+# ---------------------------------------------------------------------------
+# delta scan + ordered merge (the jitted query path)
+# ---------------------------------------------------------------------------
+
+def _delta_scan(index: SegmentedIndex, q: jax.Array, kk: int):
+    """Exact masked scan of the delta buffer.  q (B, d).
+
+    Returns (scores (B,kk), rows (B,kk), ids (B,kk), live () int32).
+    Explicit multiply-reduce (not a matvec) so the same delta doc scores
+    bit-identically at any batch size — the repo-wide numeric doctrine.
+    """
+    live = (index.delta_ids >= 0) & \
+        ~index.tombstone[jnp.maximum(index.delta_ids, 0)]
+    scores = jnp.sum(index.delta_vecs[None, :, :] * q[:, None, :], axis=-1)
+    scores = jnp.where(live[None, :], scores, -jnp.inf)
+    v, rows = jax.lax.top_k(scores, kk)
+    return v, rows.astype(jnp.int32), index.delta_ids[rows], \
+        jnp.sum(live.astype(jnp.int32))
+
+
+def _merge_ordered(base_v, base_i, delta_v, delta_rows, delta_i, k: int):
+    """Deterministic base-vs-delta merge, ``distributed_topk_ordered``
+    style: lexicographic ``lax.sort`` on (-score, position) with base
+    rank r at position r (< k) and delta row j at position k + j.  Base
+    wins score ties; delta ties break by append (= id) order; empty
+    delta rows are -inf and sort behind every base entry — so the order
+    is reproducible at any fill level and an empty delta returns the
+    base top-k unchanged.
+    """
+    bpos = jnp.broadcast_to(
+        jnp.arange(base_v.shape[-1], dtype=jnp.int32), base_v.shape)
+    all_v = jnp.concatenate([base_v, delta_v], axis=-1)
+    all_p = jnp.concatenate([bpos, k + delta_rows], axis=-1)
+    all_i = jnp.concatenate([base_i, delta_i], axis=-1)
+    _, _, top_i, top_v = jax.lax.sort(
+        (-all_v, all_p, all_i, all_v), dimension=-1, num_keys=2)
+    return top_v[..., :k], top_i[..., :k]
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class SegmentedBackend(RetrievalBackend):
+    """Any registered backend + a live delta segment + tombstones.
+
+    Delegates every session/turn method to ``inner`` on ``index.base``
+    (sessions — centroid caches, HNSW entry points — are derived from
+    *base* results only, so session state never references a delta id
+    that a compaction would move into the base graph), then merges the
+    exactly-scanned delta top-k into the returned ranking.  The delta's
+    live-row count is charged to ``TurnStats.list_dists`` — it is a real
+    float scan, and the cost model must see it.
+    """
+
+    name: ClassVar[str] = "segmented"
+    index_kwarg: ClassVar[str] = "segmented_index"
+
+    inner: RetrievalBackend = IVFBackend()
+
+    @property
+    def stateful(self):  # type: ignore[override]
+        return self.inner.stateful
+
+    # ---- merge plumbing ---------------------------------------------------
+
+    def _merge_batch(self, index, q, v, i, stats, k):
+        kk = min(k, delta_cap(index))
+        dv, drows, di, live = _delta_scan(index, q, kk)
+        mv, mi = _merge_ordered(v, i, dv, drows, di, k)
+        return mv, mi, stats._replace(list_dists=stats.list_dists + live)
+
+    def _merge_one(self, index, q, v, i, stats, k):
+        mv, mi, st = self._merge_batch(index, q[None], v[None], i[None],
+                                       jax.tree.map(lambda a: a[None],
+                                                    stats), k)
+        return mv[0], mi[0], jax.tree.map(lambda a: a[0], st)
+
+    # ---- driver surface ---------------------------------------------------
+
+    def start(self, index, q0, *, k):
+        v, i, sess, st = self.inner.start(index.base, q0, k=k)
+        mv, mi, st = self._merge_one(index, q0, v, i, st, k)
+        return mv, mi, sess, st
+
+    def step(self, index, sess, q, *, k):
+        v, i, sess, st = self.inner.step(index.base, sess, q, k=k)
+        mv, mi, st = self._merge_one(index, q, v, i, st, k)
+        return mv, mi, sess, st
+
+    def start_batch(self, index, q0, *, k):
+        v, i, sess, st = self.inner.start_batch(index.base, q0, k=k)
+        mv, mi, st = self._merge_batch(index, q0, v, i, st, k)
+        return mv, mi, sess, st
+
+    def step_batch(self, index, sess, q, *, k, is_first=None):
+        v, i, sess, st = self.inner.step_batch(index.base, sess, q, k=k,
+                                               is_first=is_first)
+        mv, mi, st = self._merge_batch(index, q, v, i, st, k)
+        return mv, mi, sess, st
+
+    def plain_batch(self, index, q, *, k):
+        v, i, st = self.inner.plain_batch(index.base, q, k=k)
+        return self._merge_batch(index, q, v, i, st, k)
+
+    def session_template(self, index):
+        return self.inner.session_template(index.base)
+
+    def corpus_vectors(self, index):
+        base = self.inner.corpus_vectors(index.base)
+        if base is None:
+            return None
+        # delta row j holds global id n_base + j, so plain concatenation
+        # keeps the id -> row mapping the result cache gathers by
+        return jnp.concatenate([base, index.delta_vecs], axis=0)
+
+    def query_dim(self, index) -> int:
+        return self.inner.query_dim(index.base)
+
+    def fetch_limit(self, index) -> int:
+        return self.inner.fetch_limit(index.base)
+
+
+# ---------------------------------------------------------------------------
+# per-inner-backend compaction adapters (host-side; mutations are rare)
+# ---------------------------------------------------------------------------
+
+def _nearest_centroid(centroids: np.ndarray, v: np.ndarray) -> int:
+    """Frozen-quantiser assignment for one delta doc.  Per-doc on host
+    so the assignment is a function of the row alone — identical no
+    matter how adds were batched (compact vs rebuild see different
+    groupings of the same docs)."""
+    return int(np.argmax(centroids @ v))
+
+
+def _encode_one(book, v: np.ndarray) -> np.ndarray:
+    """PQ-encode one doc with the frozen codebook.  Per-doc for the same
+    reason as ``_nearest_centroid``: ``pq.encode``'s einsum may tile its
+    reduction differently at different batch sizes, and codes must be a
+    function of the row alone for compact == rebuild bit-identity."""
+    return np.asarray(_pq.encode(book, jnp.asarray(v[None])))[0]
+
+
+def _live_delta(delta_vecs, delta_ids, tombstone):
+    """(id, vector) pairs of live delta docs, in id (= append) order."""
+    out = []
+    for row in np.flatnonzero(delta_ids >= 0):
+        did = int(delta_ids[row])
+        if not tombstone[did]:
+            out.append((did, delta_vecs[row]))
+    return out
+
+
+def _masked_lists(list_ids: np.ndarray, tomb: np.ndarray):
+    """Flip tombstoned posting-list entries to the -1 pad convention."""
+    dead = (list_ids >= 0) & tomb[np.maximum(list_ids, 0)]
+    ids = np.where(dead, -1, list_ids).astype(np.int32)
+    return ids, (ids >= 0).sum(axis=1).astype(np.int32)
+
+
+class _IVFAdapter:
+    """IVF: delete = in-place -1 masking; compact = purge + append at
+    the nearest frozen centroid, re-packed in id order (the same order
+    ``ivf.build`` bucketises in)."""
+
+    def size(self, base) -> int:
+        return int(np.asarray(base.list_sizes).sum())
+
+    def delete(self, base, tomb_base: np.ndarray):
+        ids, sizes = _masked_lists(np.asarray(base.list_ids), tomb_base)
+        return base._replace(list_ids=jnp.asarray(ids),
+                             list_sizes=jnp.asarray(sizes))
+
+    def _members(self, base, delta_vecs, delta_ids, tomb):
+        """Per-list [(id, payload)] — survivors keep their stored order
+        (ascending id, by induction from the build), live delta docs
+        append in id order at their nearest centroid."""
+        cent = np.asarray(base.centroids)
+        li = np.asarray(base.list_ids)
+        members = [[(int(i), self._payload(base, c, j))
+                    for j, i in enumerate(li[c]) if i >= 0]
+                   for c in range(li.shape[0])]
+        for did, v in _live_delta(delta_vecs, delta_ids, tomb):
+            members[_nearest_centroid(cent, v)].append(
+                (did, self._delta_payload(base, v)))
+        return members
+
+    def _payload(self, base, c, j):
+        return np.asarray(base.list_vecs)[c, j]
+
+    def _delta_payload(self, base, v):
+        return np.asarray(v, np.float32)
+
+    def _pack(self, base, members, payload_shape, payload_dtype):
+        p = len(members)
+        lmax = max(1, max((len(mem) for mem in members), default=1))
+        ids = np.full((p, lmax), -1, np.int32)
+        payload = np.zeros((p, lmax) + payload_shape, payload_dtype)
+        for c, mem in enumerate(members):
+            for j, (did, pl) in enumerate(mem):
+                ids[c, j] = did
+                payload[c, j] = pl
+        sizes = (ids >= 0).sum(axis=1).astype(np.int32)
+        return ids, payload, sizes
+
+    def compact(self, base, delta_vecs, delta_ids, tomb):
+        members = self._members(base, delta_vecs, delta_ids, tomb)
+        d = base.centroids.shape[1]
+        ids, vecs, sizes = self._pack(base, members, (d,), np.float32)
+        return _ivf.IVFIndex(base.centroids, jnp.asarray(vecs),
+                             jnp.asarray(ids), jnp.asarray(sizes))
+
+    def rebuild(self, pristine, added_vecs, tomb):
+        n0 = self.size(pristine)
+        added_ids = np.arange(n0, n0 + len(added_vecs), dtype=np.int32)
+        return self.compact(self.delete(pristine, tomb[:n0]),
+                            added_vecs, added_ids, tomb)
+
+
+class _PQAdapter(_IVFAdapter):
+    """IVF-PQ: same list machinery over uint8 code payloads; delta docs
+    re-encode with the frozen codebook; ``doc_vecs`` grows by every
+    added row (dead rows stay — ids index it directly)."""
+
+    def size(self, base) -> int:
+        return base.doc_vecs.shape[0]
+
+    def _payload(self, base, c, j):
+        return np.asarray(base.list_codes)[c, j]
+
+    def _delta_payload(self, base, v):
+        return _encode_one(base.book, np.asarray(v, np.float32))
+
+    def compact(self, base, delta_vecs, delta_ids, tomb):
+        members = self._members(base, delta_vecs, delta_ids, tomb)
+        m = base.codewords.shape[0]
+        ids, codes, sizes = self._pack(base, members, (m,), np.uint8)
+        fill = int((np.asarray(delta_ids) >= 0).sum())
+        doc_vecs = jnp.concatenate(
+            [base.doc_vecs, jnp.asarray(delta_vecs[:fill], jnp.float32)],
+            axis=0)
+        return _pq.IVFPQIndex(base.centroids, base.codewords,
+                              jnp.asarray(codes), jnp.asarray(ids),
+                              jnp.asarray(sizes), doc_vecs)
+
+
+class _HNSWAdapter:
+    """HNSW: delete = result-mask only (nodes keep routing the beam);
+    compact = incremental insertion continuing the build's RNG stream,
+    so the compacted graph is the from-scratch graph."""
+
+    def __init__(self, ef_construction: int = 64, seed: int = 0):
+        self.ef_construction = ef_construction
+        self.seed = seed
+
+    def size(self, base) -> int:
+        return base.vectors.shape[0]
+
+    def delete(self, base, tomb_base: np.ndarray):
+        return base._replace(deleted=jnp.asarray(tomb_base))
+
+    def compact(self, base, delta_vecs, delta_ids, tomb):
+        fill = int((np.asarray(delta_ids) >= 0).sum())
+        # every added doc joins the graph, deleted ones included: the
+        # from-scratch build inserts the full corpus sequence, and
+        # deletions are a query-time mask, not a graph edit
+        new = _hnsw.insert(base, delta_vecs[:fill],
+                           ef_construction=self.ef_construction,
+                           seed=self.seed)
+        return new._replace(deleted=jnp.asarray(tomb[:new.n]))
+
+    def rebuild(self, pristine, added_vecs, tomb):
+        x = np.concatenate([np.asarray(pristine.vectors, np.float32),
+                            np.asarray(added_vecs, np.float32)], axis=0)
+        m = pristine.adj0.shape[1] // 2
+        idx = _hnsw.build(x, m=m, ef_construction=self.ef_construction,
+                          seed=self.seed)
+        return idx._replace(deleted=jnp.asarray(tomb[:idx.n]))
+
+
+def _adapter(inner: RetrievalBackend, **build_kw):
+    name = type(inner).name
+    makers: Dict[str, Any] = {
+        "ivf": _IVFAdapter,
+        "ivf_pq": _PQAdapter,
+        "hnsw": _HNSWAdapter,
+    }
+    if name not in makers:
+        raise NotImplementedError(
+            f"segmented corpus does not support inner backend {name!r}; "
+            f"supported: {', '.join(sorted(makers))}")
+    if name != "hnsw" and build_kw:
+        raise TypeError(
+            f"build kwargs {sorted(build_kw)} only apply to hnsw "
+            f"compaction (got inner backend {name!r})")
+    return makers[name](**build_kw)
+
+
+# ---------------------------------------------------------------------------
+# public mutation API (host-side; returns new pytrees, never mutates)
+# ---------------------------------------------------------------------------
+
+def make_segmented(inner: RetrievalBackend, base_index, *, cap: int
+                   ) -> SegmentedIndex:
+    """Wrap a built base index with an empty ``cap``-row delta segment."""
+    if cap < 1:
+        raise ValueError(f"segment cap must be >= 1, got {cap}")
+    ad = _adapter(inner)
+    n0 = ad.size(base_index)
+    d = inner.query_dim(base_index)
+    return SegmentedIndex(
+        base=base_index,
+        delta_vecs=jnp.zeros((cap, d), jnp.float32),
+        delta_ids=jnp.full((cap,), -1, jnp.int32),
+        tombstone=jnp.zeros((n0 + cap,), bool))
+
+
+def add_documents(index: SegmentedIndex, vectors
+                  ) -> Tuple[SegmentedIndex, np.ndarray]:
+    """Append documents to the delta segment.  Returns (index', ids) —
+    ids are assigned monotonically and deterministically (``n_base +
+    row``), which is what lets a replicated serving tier broadcast adds
+    and stay bit-identical across replicas."""
+    vecs = np.asarray(vectors, np.float32)
+    if vecs.ndim == 1:
+        vecs = vecs[None]
+    fill, cap = delta_fill(index), delta_cap(index)
+    b = vecs.shape[0]
+    if fill + b > cap:
+        raise ValueError(
+            f"delta segment overflow: {fill} + {b} > cap {cap}; "
+            f"compact() first")
+    dv = np.asarray(index.delta_vecs).copy()
+    di = np.asarray(index.delta_ids).copy()
+    ids = np.arange(n_base(index) + fill, n_base(index) + fill + b,
+                    dtype=np.int32)
+    dv[fill:fill + b] = vecs
+    di[fill:fill + b] = ids
+    return index._replace(delta_vecs=jnp.asarray(dv),
+                          delta_ids=jnp.asarray(di)), ids
+
+
+def delete_documents(inner: RetrievalBackend, index: SegmentedIndex,
+                     ids) -> SegmentedIndex:
+    """Tombstone documents by global id (base or delta; idempotent)."""
+    ids = np.atleast_1d(np.asarray(ids, np.int64))
+    n0, fill = n_base(index), delta_fill(index)
+    bad = ids[(ids < 0) | (ids >= n0 + fill)]
+    if bad.size:
+        raise ValueError(
+            f"delete of unassigned doc id(s) {bad.tolist()} "
+            f"(assigned id space: 0..{n0 + fill - 1})")
+    tomb = np.asarray(index.tombstone).copy()
+    tomb[ids] = True
+    new_base = _adapter(inner).delete(index.base, tomb[:n0])
+    return index._replace(base=new_base, tombstone=jnp.asarray(tomb))
+
+
+def compact(inner: RetrievalBackend, index: SegmentedIndex,
+            **build_kw) -> SegmentedIndex:
+    """Fold the delta segment into the base and empty it.
+
+    ``build_kw`` (hnsw only): ``ef_construction``/``seed`` must match
+    the original ``hnsw.build`` call for the incremental insertion to
+    continue its RNG stream (``hnsw.insert`` verifies and raises).
+    Post-compaction results are bit-identical to ``rebuild()`` — dead
+    ids stay tombstoned forever (ids are never reused), the delta
+    resets to empty, and shapes change only here.
+    """
+    ad = _adapter(inner, **build_kw)
+    tomb = np.asarray(index.tombstone)
+    new_base = ad.compact(index.base, np.asarray(index.delta_vecs),
+                          np.asarray(index.delta_ids), tomb)
+    n_new = n_base(index) + delta_fill(index)
+    cap = delta_cap(index)
+    new_tomb = np.zeros((n_new + cap,), bool)
+    new_tomb[:n_new] = tomb[:n_new]
+    return SegmentedIndex(
+        base=new_base,
+        delta_vecs=jnp.zeros_like(index.delta_vecs),
+        delta_ids=jnp.full((cap,), -1, jnp.int32),
+        tombstone=jnp.asarray(new_tomb))
+
+
+def rebuild(inner: RetrievalBackend, pristine_base, added_vecs,
+            deleted_ids, *, cap: int, **build_kw) -> SegmentedIndex:
+    """From-scratch reference construction — the compaction oracle.
+
+    Independent path: given the pre-mutation base index, the full add
+    history (in id order) and the set of deleted ids, re-derive the
+    final segmented index directly.  ``compact()`` after any interleaved
+    add/delete/compact sequence with the same net history must equal
+    this bit for bit (``tests/test_segment.py`` pins it; for HNSW this
+    is literally ``hnsw.build`` over the concatenated corpus).
+    """
+    ad = _adapter(inner, **build_kw)
+    added = np.asarray(added_vecs, np.float32).reshape(
+        (-1, int(inner.query_dim(pristine_base))))
+    n0 = ad.size(pristine_base)
+    n_new = n0 + added.shape[0]
+    tomb = np.zeros((n_new + cap,), bool)
+    dead = np.atleast_1d(np.asarray(deleted_ids, np.int64)) \
+        if len(np.atleast_1d(deleted_ids)) else np.zeros(0, np.int64)
+    if dead.size:
+        tomb[dead] = True
+    new_base = ad.rebuild(pristine_base, added, tomb)
+    d = added.shape[1] if added.size else int(
+        inner.query_dim(pristine_base))
+    return SegmentedIndex(
+        base=new_base,
+        delta_vecs=jnp.zeros((cap, d), jnp.float32),
+        delta_ids=jnp.full((cap,), -1, jnp.int32),
+        tombstone=jnp.asarray(tomb))

@@ -197,7 +197,27 @@ def shard_hnsw_index(mesh: Mesh, index: _hnsw.HNSWIndex, *,
         entry_point=_put(mesh, index.entry_point, specs.entry_point),
         node_level=_put(mesh, _pad_dim0(index.node_level, s, 0),
                         specs.node_level),
+        # tombstones replicate (gathered per candidate id, like adjacency)
+        deleted=(None if index.deleted is None
+                 else _put(mesh, index.deleted, P(None))),
     )
+
+
+def place_segmented(mesh: Mesh, seg, *, axis: str = "model"):
+    """Replicate a ``core.segment.SegmentedIndex``'s mutable arrays
+    (delta buffer + tombstone mask) over the mesh.
+
+    The delta segment is scanned *exactly* on every device — it is tiny
+    (``cap`` rows) and its scan must merge with the already-replicated
+    base top-k, so replication is the right placement; sharding it would
+    add a collective for O(cap) work.  The wrapped base index inside
+    ``seg.base`` is placed separately by ``shard_backend`` before
+    wrapping.
+    """
+    return seg._replace(
+        delta_vecs=_put(mesh, seg.delta_vecs, P(None, None)),
+        delta_ids=_put(mesh, seg.delta_ids, P(None)),
+        tombstone=_put(mesh, seg.tombstone, P(None)))
 
 
 # ---------------------------------------------------------------------------
@@ -341,7 +361,7 @@ class ShardedHNSWSearch:
         if entry_override is None:
             entry_override = jnp.zeros((queries.shape[0],), jnp.int32)
 
-        def local(vec_l, adj0, upper, entry_pt, q, override):
+        def local(vec_l, adj0, upper, entry_pt, q, override, *dead):
             n_local = vec_l.shape[0]
             lo = jax.lax.axis_index(axis) * n_local
 
@@ -357,16 +377,24 @@ class ShardedHNSWSearch:
             return _hnsw._search_impl(
                 factory, n_pad, top_level, adj0, upper, entry_pt, q,
                 override, ef=ef, k=k,
-                use_entry_override=use_entry_override)
+                use_entry_override=use_entry_override,
+                deleted=dead[0] if dead else None)
 
+        # the tombstone mask rides along (replicated) only when present,
+        # keeping the no-deletions program byte-identical to before
+        in_specs = (P(axis, None), P(None, None), P(None, None, None),
+                    P(), P(None, None), P(None))
+        operands = [index.vectors, index.adj0, index.upper_adj,
+                    index.entry_point, queries, entry_override]
+        if index.deleted is not None:
+            in_specs = in_specs + (P(None),)
+            operands.append(index.deleted)
         fn = compat.shard_map(
             local, mesh=self.mesh,
-            in_specs=(P(axis, None), P(None, None), P(None, None, None),
-                      P(), P(None, None), P(None)),
+            in_specs=in_specs,
             out_specs=(P(None, None), P(None, None), P(None)),
             check_vma=False)
-        return fn(index.vectors, index.adj0, index.upper_adj,
-                  index.entry_point, queries, entry_override)
+        return fn(*operands)
 
 
 # ---------------------------------------------------------------------------

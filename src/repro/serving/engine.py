@@ -55,6 +55,7 @@ from repro.core import backend as _backend
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import pq as _pq
+from repro.core import segment as _segment
 from repro.core import toploc
 from repro.distributed import retrieval as _retrieval
 from repro.serving import result_cache as _result_cache
@@ -95,6 +96,12 @@ class ServingConfig:
     # serve exactly the uncached top-k.
     cache_threshold: float = 0.0
     cache_depth: int = 0
+    # mutable corpus (core.segment): > 0 wraps the backend in a
+    # SegmentedBackend with a `segment_cap`-row delta segment, enabling
+    # add_documents / delete_documents / compact() on the engine while
+    # sessions are live.  0 (default) serves the frozen index exactly as
+    # before — no wrapper, byte-identical programs.
+    segment_cap: int = 0
 
 
 @dataclasses.dataclass
@@ -177,9 +184,26 @@ class _EngineBase(_EngineAccounting):
             mesh = _retrieval.retrieval_mesh(config.shards,
                                              axis=config.shard_axis)
         self.mesh = mesh
+        # host-authoritative copies for the mutable-corpus path: segment
+        # mutations and compaction run on the unsharded index, then the
+        # result is re-placed on the mesh
+        inner_plain, index_plain = self.backend, self.index
         if mesh is not None:
             self.backend, self.index = _retrieval.shard_backend(
                 mesh, self.backend, self.index, axis=config.shard_axis)
+        # corpus epoch: bumped on every successful mutation (add /
+        # delete / compact); cache invalidation and corpus refresh key
+        # off it, and readers can use it to detect staleness
+        self.corpus_epoch = 0
+        self._seg_inner: Optional[_backend.RetrievalBackend] = None
+        self._seg_host: Optional[_segment.SegmentedIndex] = None
+        if config.segment_cap and config.segment_cap > 0:
+            self._seg_inner = inner_plain
+            self._seg_host = _segment.make_segmented(
+                inner_plain, index_plain, cap=config.segment_cap)
+            self.backend = _segment.SegmentedBackend(inner=self.backend)
+            self.index = self._placed_segment(
+                self._seg_host, base_dev=self.index)
         self.turn_count: Dict[str, int] = {}
         self.records: List[TurnRecord] = []
 
@@ -187,6 +211,110 @@ class _EngineBase(_EngineAccounting):
     def _sessioned(self) -> bool:
         """Per-conversation state in play this deployment?"""
         return self.backend.stateful and self.cfg.strategy != "plain"
+
+    # -- mutable corpus (core.segment) --------------------------------
+
+    def _placed_segment(self, seg: "_segment.SegmentedIndex", *,
+                        base_dev: Any) -> "_segment.SegmentedIndex":
+        """Device view of the host-authoritative segment state: the
+        (possibly sharded) base plus mesh-replicated delta/tombstone
+        arrays."""
+        if self.mesh is None:
+            return seg._replace(base=base_dev)
+        placed = _retrieval.place_segmented(self.mesh,
+                                            seg._replace(base=base_dev))
+        return placed._replace(base=base_dev)
+
+    def _require_segmented(self) -> None:
+        if self._seg_host is None:
+            raise RuntimeError(
+                "corpus mutation needs ServingConfig.segment_cap > 0 "
+                "(the engine is serving a frozen index)")
+
+    def _quiesce(self) -> None:
+        """Engine hook: settle in-flight device work before a mutation
+        swaps the index (the batched engine overrides with a batcher
+        sync)."""
+
+    def _after_mutation(self, *, base_changed: bool) -> None:
+        """Re-place the mutated host state on the device/mesh, refresh
+        the cache's historical-embedding corpus, and bump the epoch."""
+        seg = self._seg_host
+        base_dev = self.index.base
+        if base_changed:
+            base_dev = seg.base
+            if self.mesh is not None:
+                # re-place through the sharding registry (same plugin,
+                # new arrays); the returned backend is discarded — the
+                # serving backend already carries the sharded scan
+                _, base_dev = _retrieval.shard_backend(
+                    self.mesh, self._seg_inner, seg.base,
+                    axis=self.cfg.shard_axis)
+        self.index = self._placed_segment(seg, base_dev=base_dev)
+        self.corpus_epoch += 1
+        if self._cache is not None:
+            self._cache.corpus = self._cache_corpus()
+
+    def add_documents(self, vectors) -> np.ndarray:
+        """Ingest new documents into the delta segment (shape-stable:
+        no recompilation); returns their assigned global ids."""
+        self._require_segmented()
+        self._quiesce()
+        self._seg_host, ids = _segment.add_documents(self._seg_host,
+                                                     vectors)
+        # existing cache entries stay valid: their candidate pools
+        # simply predate the new docs (documented staleness, same as a
+        # miss turn served just before the add)
+        self._after_mutation(base_changed=False)
+        return ids
+
+    def delete_documents(self, ids) -> None:
+        """Tombstone documents by global id; a cache hit can never
+        serve them again (intersecting entries are invalidated)."""
+        self._require_segmented()
+        self._quiesce()
+        self._seg_host = _segment.delete_documents(self._seg_inner,
+                                                   self._seg_host, ids)
+        self._after_mutation(base_changed=True)
+        if self._cache is not None:
+            self._cache.invalidate_docs(ids)
+
+    def compact(self, **build_kw) -> None:
+        """Fold the delta segment into the base index (background
+        maintenance; the one mutation that changes array shapes and so
+        costs one retrace).  Results afterwards are bit-identical to a
+        from-scratch rebuild (core.segment contract)."""
+        self._require_segmented()
+        self._quiesce()
+        if self.doc_vecs is not None:
+            # compaction folds delta rows into the base id range; the
+            # engine-provided flat corpus must grow with it so cache
+            # re-scoring keeps covering ids 0..n_base-1
+            fill = _segment.delta_fill(self._seg_host)
+            self.doc_vecs = jnp.concatenate(
+                [jnp.asarray(self.doc_vecs),
+                 self._seg_host.delta_vecs[:fill]], axis=0)
+        self._seg_host = _segment.compact(self._seg_inner,
+                                          self._seg_host, **build_kw)
+        self._after_mutation(base_changed=True)
+
+    def _cache_corpus(self) -> Optional[jax.Array]:
+        """Flat (n, d) corpus for historical-embedding re-scoring.
+
+        The segmented path concatenates from the *host* mirror (the
+        sharded base pads its row count, which would shift delta ids off
+        their rows); delta rows sit at exactly ids n_base..n_base+cap-1.
+        """
+        if self._seg_host is not None:
+            base = (self.doc_vecs if self.doc_vecs is not None
+                    else self._seg_inner.corpus_vectors(
+                        self._seg_host.base))
+            if base is None:
+                return None
+            return jnp.concatenate(
+                [jnp.asarray(base), self._seg_host.delta_vecs], axis=0)
+        return (self.doc_vecs if self.doc_vecs is not None
+                else self.backend.corpus_vectors(self.index))
 
     def _make_cache(self, n_slots: Optional[int] = None
                     ) -> Optional[_result_cache.ResultCache]:
@@ -196,8 +324,7 @@ class _EngineBase(_EngineAccounting):
         cfg = self.cfg
         if cfg.cache_threshold <= 0.0 or not self._sessioned:
             return None
-        corpus = (self.doc_vecs if self.doc_vecs is not None
-                  else self.backend.corpus_vectors(self.index))
+        corpus = self._cache_corpus()
         # clamp the over-fetch to the backend's candidate pool: a wider
         # request would either be unsatisfiable (HNSW: top_k over an
         # ef-wide beam) or change which candidates the top-k is drawn
@@ -398,6 +525,11 @@ class BatchedConversationalSearchEngine(_EngineBase):
     def __exit__(self, *exc) -> bool:
         self.close()
         return False
+
+    def _quiesce(self) -> None:
+        # a corpus mutation swaps self.index; in-flight waves must land
+        # first so a launched batch never straddles two corpus epochs
+        self.batcher.sync()
 
     def end_conversation(self, conv_id: str) -> None:
         # release only after in-flight waves land: a launched wave's

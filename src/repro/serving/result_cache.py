@@ -246,6 +246,33 @@ class ResultCache:
     def invalidate(self, conv_id: str) -> None:
         self._entries.pop(conv_id, None)
 
+    def invalidate_docs(self, doc_ids) -> int:
+        """Corpus-tombstone sweep: drop every entry whose cached
+        candidate pool intersects ``doc_ids``, in both storage modes —
+        after this, no later hit can serve or re-score a deleted
+        document.  The engines call it on every ``delete_documents``
+        (each corpus-epoch bump); returns entries/rows dropped.
+        """
+        dead = np.atleast_1d(np.asarray(doc_ids, np.int64))
+        if dead.size == 0:
+            return 0
+        n = 0
+        if self._entries:                              # sequential mode
+            drop = [cid for cid, e in self._entries.items()
+                    if np.isin(np.asarray(e.doc_ids), dead).any()]
+            for cid in drop:
+                del self._entries[cid]
+            n += len(drop)
+        if self._slab is not None:                     # slab mode
+            slab = self._slab.slab
+            ids = np.asarray(jax.device_get(slab.doc_ids))
+            valid = np.asarray(jax.device_get(slab.valid))
+            rows = np.flatnonzero(valid & np.isin(ids, dead).any(axis=-1))
+            if rows.size:
+                self._slab.clear(rows.tolist())
+            n += int(rows.size)
+        return n
+
     # -- batched (slab) mode ------------------------------------------
 
     def gather(self, slots: Sequence[int]) -> CacheEntry:

@@ -179,10 +179,17 @@ class ReplicatedSearchEngine:
         """Synchronous single-turn convenience."""
         fut = self.submit(conv_id, qvec)
         if self.stateful and not self._pumps:
-            eng = self.engines[self._replica_of[conv_id]]
+            # read the pin under the route lock (replica_of); a racing
+            # end_conversation may have already dropped it between
+            # submit() and here, in which case the turn was enqueued on
+            # whichever replica held the pin at submit time — drain all
+            # replicas until the future lands instead of KeyError-ing
+            r = self.replica_of(conv_id)
+            engines = [self.engines[r]] if r is not None else self.engines
             while not fut.done():
-                if eng.flush() == 0:
-                    eng.sync()
+                if sum(eng.flush() for eng in engines) == 0:
+                    for eng in engines:
+                        eng.sync()
         return fut.result()
 
     def end_conversation(self, conv_id: str) -> None:
@@ -192,6 +199,44 @@ class ReplicatedSearchEngine:
                 self._load[r] -= 1
         if r is not None:
             self.engines[r].end_conversation(conv_id)
+
+    # -- mutable corpus (core.segment) ---------------------------------
+
+    def add_documents(self, vectors) -> np.ndarray:
+        """Broadcast an ingest batch to every replica.  Full-corpus
+        replicas must stay identical for pinning (and stateless
+        hedging) to be safe; id assignment is deterministic (``n_base +
+        delta row``), so every replica assigns the same ids — asserted
+        here.  Returns the assigned global ids.
+        """
+        ids: Optional[np.ndarray] = None
+        for eng in self.engines:
+            got = eng.add_documents(vectors)
+            if ids is not None and not np.array_equal(ids, got):
+                raise RuntimeError(
+                    "replica divergence: add_documents assigned "
+                    f"{got.tolist()} vs {ids.tolist()}")
+            ids = got
+        return ids
+
+    def delete_documents(self, ids) -> None:
+        """Broadcast tombstones to every replica (each invalidates its
+        own result-cache entries intersecting the deleted ids)."""
+        for eng in self.engines:
+            eng.delete_documents(ids)
+
+    def compact(self, **build_kw) -> None:
+        """Compact the delta segment on every replica (replicas fold
+        the identical delta into the identical base, so they remain
+        bit-identical afterwards — the core.segment rebuild contract)."""
+        for eng in self.engines:
+            eng.compact(**build_kw)
+
+    @property
+    def corpus_epoch(self) -> int:
+        """Corpus mutation epoch (identical across replicas — every
+        mutation broadcasts)."""
+        return self.engines[0].corpus_epoch
 
     def drain(self) -> int:
         """Single-threaded serving: drain every replica's queue and

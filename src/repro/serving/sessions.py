@@ -206,9 +206,22 @@ class SessionStore:
             self._slab = _scatter_slab(self._slab, idx, sessions)
 
     def clear(self, slots: Sequence[int]) -> None:
-        """Zero the given slab rows (scatter the template row over each)."""
-        for slot in slots:
-            self.scatter([slot], self._zero_row)
+        """Zero the given slab rows in one scatter (the template row is
+        tiled to the batch, not dispatched once per slot)."""
+        slots = list(slots)
+        if not slots:
+            return
+        tiled = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (len(slots),) + a.shape[1:]),
+            self._zero_row)
+        self.scatter(slots, tiled)
+
+    @property
+    def slab(self) -> Any:
+        """The raw slab pytree (leading dim ``n_slots + 1``).  Read-only
+        view for bulk inspection (e.g. the result cache's tombstone
+        sweep); mutate only through ``scatter``/``clear``."""
+        return self._slab
 
 
 def store_for_backend(backend: Any, index: Any, *, n_slots: int,

@@ -54,6 +54,25 @@ def test_make_filters_unknown_knobs():
     assert hk == B.HNSWBackend(ef=EF, up=UP)
 
 
+def test_make_rejects_knob_no_backend_declares():
+    """Lenient filtering is for *cross-backend* knobs; a knob matching
+    no registered backend's fields is a typo and must raise (the old
+    silent drop turned ``nprob=16`` into a default-nprobe backend)."""
+    with pytest.raises(TypeError, match="nprob"):
+        B.make("ivf", h=H, nprob=NPROBE)
+    with pytest.raises(TypeError, match="efSearch"):
+        B.make("hnsw", efSearch=EF)
+
+
+def test_make_strict_rejects_other_backends_knobs():
+    """strict=True (user-facing callers) rejects knobs this backend
+    doesn't declare itself, even valid knobs of *other* backends."""
+    with pytest.raises(TypeError, match="strict"):
+        B.make("ivf", h=H, nprobe=NPROBE, ef=EF, strict=True)
+    assert B.make("ivf", h=H, nprobe=NPROBE, strict=True) == \
+        B.IVFBackend(h=H, nprobe=NPROBE)
+
+
 def test_backends_are_hashable_jit_static():
     """A backend is a static jit argument: equal knobs ⇒ equal hash ⇒
     one compiled program per configuration."""

@@ -326,3 +326,69 @@ def test_cache_depth_clamped_to_pq_rerank(small_corpus, ivf_pq_index):
         np.testing.assert_array_equal(ri, ci)
         assert (cached.records[-1].list_dists
                 == ref.records[-1].list_dists)
+
+
+# --------------------------------------------- corpus mutation safety
+
+def test_cache_hit_never_serves_deleted_doc_sequential(small_corpus,
+                                                       ivf_index):
+    """delete_documents must flush every cache entry holding the dead
+    id: the near-dup follow-up that would have been a hit re-runs the
+    backend (tombstone-masked) instead of replaying the stale entry."""
+    wl = small_corpus
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.95, segment_cap=4),
+        ivf_index=ivf_index, doc_vecs=jnp.asarray(wl.doc_vecs))
+    q = jnp.asarray(wl.conversations[0, 0])
+    eng.query("c", q)
+    _, i_hit = eng.query("c", q)            # verbatim repeat: sure hit
+    assert eng.records[-1].cache_hit
+    victim = int(np.asarray(i_hit)[0])
+    eng.delete_documents([victim])
+    assert eng.corpus_epoch == 1
+    _, i2 = eng.query("c", q)
+    assert not eng.records[-1].cache_hit    # entry was invalidated
+    assert victim not in np.asarray(i2)
+    # the re-run repopulated the cache without the dead doc
+    _, i3 = eng.query("c", q)
+    assert eng.records[-1].cache_hit
+    assert victim not in np.asarray(i3)
+
+
+def test_cache_hit_never_serves_deleted_doc_batched(small_corpus,
+                                                    ivf_index):
+    """Same contract through the batched engine's slab-mode cache: the
+    tombstone sweep walks the device slab's doc_ids and clears hit rows
+    via the (batched) SessionStore.clear."""
+    wl = small_corpus
+    eng = BatchedConversationalSearchEngine(
+        _cfg(cache_threshold=0.95, segment_cap=4),
+        ivf_index=ivf_index, doc_vecs=jnp.asarray(wl.doc_vecs),
+        max_batch=4, max_wait_s=1e-4)
+    q = jnp.asarray(wl.conversations[0, 0])
+    eng.query("c", q)
+    _, i_hit = eng.query("c", q)
+    assert eng.records[-1].cache_hit
+    victim = int(np.asarray(i_hit)[0])
+    eng.delete_documents([victim])
+    _, i2 = eng.query("c", q)
+    assert not eng.records[-1].cache_hit
+    assert victim not in np.asarray(i2)
+    _, i3 = eng.query("c", q)
+    assert eng.records[-1].cache_hit
+    assert victim not in np.asarray(i3)
+
+
+def test_adds_leave_cache_entries_valid(small_corpus, ivf_index):
+    """Ingest never invalidates: an existing entry's docs are all still
+    live, so the hit path stays warm (new docs become visible to cached
+    conversations at their next miss — documented staleness)."""
+    wl = small_corpus
+    eng = ConversationalSearchEngine(
+        _cfg(cache_threshold=0.95, segment_cap=4),
+        ivf_index=ivf_index, doc_vecs=jnp.asarray(wl.doc_vecs))
+    q = jnp.asarray(wl.conversations[0, 0])
+    eng.query("c", q)
+    eng.add_documents(wl.doc_vecs[:2] * 0.7)
+    _, _ = eng.query("c", q)
+    assert eng.records[-1].cache_hit

@@ -1,0 +1,295 @@
+"""Segmented mutable corpus (core.segment): the compaction contract.
+
+The hard bar under test: after any add/delete/compact history,
+``compact()`` leaves an index **bit-identical to ``rebuild()``** — the
+independent from-scratch construction over the same corpus and mutation
+set — for all three backends (ids, scores, and every ``TurnStats``
+field).  Plus the delta-path guarantees: an empty delta reproduces the
+wrapped backend bit for bit, the base-vs-delta merge is deterministic at
+any fill level, and tombstoned documents are masked out of both scans
+immediately.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as B
+from repro.core import hnsw, ivf, pq, segment as S, toploc
+
+K = 5
+D = 16
+N = 240
+CAP = 16
+HKW = dict(ef_construction=32, seed=0)     # hnsw build/compact params
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    docs = rng.standard_normal((N + 24, D)).astype(np.float32)
+    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+    return docs[:N], docs[N:]              # (base docs, add pool)
+
+
+@pytest.fixture(scope="module")
+def seg_ivf_index(corpus):
+    return ivf.build(jnp.asarray(corpus[0]), 16, iters=4,
+                     key=jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def seg_pq_index(seg_ivf_index, corpus):
+    return pq.build_ivf_pq(seg_ivf_index, jnp.asarray(corpus[0]), 8)
+
+
+@pytest.fixture(scope="module")
+def seg_hnsw_index(corpus):
+    return hnsw.build(corpus[0], m=8, **HKW)
+
+
+def _backends(seg_ivf_index, seg_pq_index, seg_hnsw_index):
+    knobs = dict(h=8, nprobe=4, alpha=0.5)
+    return [
+        ("ivf", B.make("ivf", **knobs), seg_ivf_index, {}),
+        ("ivf_pq", B.make("ivf_pq", rerank=16, **knobs), seg_pq_index, {}),
+        ("hnsw", B.make("hnsw", ef=16, up=2), seg_hnsw_index, HKW),
+    ]
+
+
+def _tree_equal(a, b):
+    la = jax.tree.leaves(a, is_leaf=lambda x: x is None)
+    lb = jax.tree.leaves(b, is_leaf=lambda x: x is None)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if x is None or y is None:
+            assert x is None and y is None
+            continue
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def _conversation(backend, index, queries, k=K):
+    """Drive a short conversation; returns (v, i, stats) stacked."""
+    out_v, out_i, out_s = [], [], []
+    v, i, sess, st = toploc.start(backend, index, queries[0], k=k)
+    out_v.append(v), out_i.append(i), out_s.append(st)
+    for q in queries[1:]:
+        v, i, sess, st = toploc.step(backend, index, sess, q, k=k)
+        out_v.append(v), out_i.append(i), out_s.append(st)
+    return (np.stack([np.asarray(x) for x in out_v]),
+            np.stack([np.asarray(x) for x in out_i]),
+            [jax.tree.map(np.asarray, s) for s in out_s])
+
+
+# ----------------------------------------------------- empty delta
+
+@pytest.mark.parametrize("which", ["ivf", "ivf_pq", "hnsw"])
+def test_empty_delta_reproduces_inner_bitwise(
+        which, corpus, seg_ivf_index, seg_pq_index, seg_hnsw_index):
+    """A cap-row delta at fill 0 must not perturb a single bit — scores,
+    ids, or TurnStats — relative to the unwrapped backend."""
+    name, inner, index, _ = next(
+        e for e in _backends(seg_ivf_index, seg_pq_index, seg_hnsw_index)
+        if e[0] == which)
+    seg = S.make_segmented(inner, index, cap=CAP)
+    wrap = S.SegmentedBackend(inner=inner)
+    qs = jnp.asarray(corpus[0][3:6])
+    v1, i1, s1 = _conversation(inner, index, qs)
+    v2, i2, s2 = _conversation(wrap, seg, qs)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(i1, i2)
+    for a, b in zip(s1, s2):
+        _tree_equal(a, b)
+
+
+# ------------------------------------------- compaction bit-identity
+
+@pytest.mark.parametrize("which", ["ivf", "ivf_pq", "hnsw"])
+def test_compact_bit_identical_to_rebuild(
+        which, corpus, seg_ivf_index, seg_pq_index, seg_hnsw_index):
+    """compact() == rebuild() at the array level AND at the query level
+    (ids, scores, TurnStats) after adds + deletes."""
+    name, inner, index, kw = next(
+        e for e in _backends(seg_ivf_index, seg_pq_index, seg_hnsw_index)
+        if e[0] == which)
+    base_docs, pool = corpus
+    seg = S.make_segmented(inner, index, cap=CAP)
+    seg, ids = S.add_documents(seg, pool[:6])
+    assert list(ids) == list(range(N, N + 6))
+    dead = [3, N + 1]                         # one base doc, one delta doc
+    seg = S.delete_documents(inner, seg, dead)
+
+    compacted = S.compact(inner, seg, **kw)
+    rebuilt = S.rebuild(inner, index, pool[:6], dead, cap=CAP, **kw)
+    _tree_equal(compacted, rebuilt)
+
+    wrap = S.SegmentedBackend(inner=inner)
+    qs = jnp.asarray(np.concatenate([pool[:2], base_docs[9:10]]))
+    v1, i1, s1 = _conversation(wrap, compacted, qs)
+    v2, i2, s2 = _conversation(wrap, rebuilt, qs)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(i1, i2)
+    for a, b in zip(s1, s2):
+        _tree_equal(a, b)
+    assert 3 not in i1 and N + 1 not in i1
+
+
+@pytest.mark.parametrize("which", ["ivf", "ivf_pq", "hnsw"])
+def test_multi_cycle_compaction_equals_one_rebuild(
+        which, corpus, seg_ivf_index, seg_pq_index, seg_hnsw_index):
+    """Two interleaved add/delete/compact cycles fold to exactly the
+    state one rebuild derives from the whole mutation history — ids are
+    never renumbered and every cycle preserves the invariant."""
+    name, inner, index, kw = next(
+        e for e in _backends(seg_ivf_index, seg_pq_index, seg_hnsw_index)
+        if e[0] == which)
+    _, pool = corpus
+    seg = S.make_segmented(inner, index, cap=CAP)
+    seg, _ = S.add_documents(seg, pool[:5])
+    seg = S.delete_documents(inner, seg, [N + 2, 11])
+    seg = S.compact(inner, seg, **kw)
+    seg, ids2 = S.add_documents(seg, pool[5:9])
+    assert list(ids2) == list(range(N + 5, N + 9))   # monotone across cycles
+    seg = S.delete_documents(inner, seg, [N + 7, 4])
+    seg = S.compact(inner, seg, **kw)
+
+    rebuilt = S.rebuild(inner, index, pool[:9], [N + 2, 11, N + 7, 4],
+                        cap=CAP, **kw)
+    _tree_equal(seg, rebuilt)
+
+
+def test_compact_without_mutations_is_identity(seg_ivf_index):
+    inner = B.make("ivf", h=8, nprobe=4, alpha=0.5)
+    seg = S.make_segmented(inner, seg_ivf_index, cap=CAP)
+    _tree_equal(S.compact(inner, seg), seg)
+
+
+# ----------------------------------------------- delta determinism
+
+def test_merge_deterministic_at_any_fill_level(corpus, seg_ivf_index):
+    """The same live delta docs produce the same merged ranking bit for
+    bit regardless of segment capacity (trailing empty rows never shift
+    the order), and repeated queries are reproducible."""
+    inner = B.make("ivf", h=8, nprobe=4, alpha=0.5)
+    wrap = S.SegmentedBackend(inner=inner)
+    _, pool = corpus
+    q = jnp.asarray(pool[:2])
+    outs = []
+    for cap in (8, 16):
+        seg = S.make_segmented(inner, seg_ivf_index, cap=cap)
+        seg, _ = S.add_documents(seg, pool[:3])
+        outs.append(wrap.plain_batch(seg, q, k=K))
+    (v1, i1, s1), (v2, i2, s2) = outs
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    _tree_equal(s1, s2)
+    v3, i3, _ = wrap.plain_batch(seg, q, k=K)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v3))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i3))
+
+
+def test_merge_ties_break_by_append_order(corpus, seg_ivf_index):
+    """Two identical delta rows score identically; the deterministic
+    merge must rank the earlier append (smaller id) first."""
+    inner = B.make("ivf", h=8, nprobe=4, alpha=0.5)
+    wrap = S.SegmentedBackend(inner=inner)
+    _, pool = corpus
+    seg = S.make_segmented(inner, seg_ivf_index, cap=CAP)
+    seg, _ = S.add_documents(seg, pool[:1])
+    seg, _ = S.add_documents(seg, pool[:1])          # exact duplicate
+    _, i, _ = wrap.plain_batch(seg, jnp.asarray(pool[:1]), k=K)
+    i = np.asarray(i)[0]
+    assert list(i[:2]) == [N, N + 1]
+
+
+# ------------------------------------------------------- tombstones
+
+def test_delete_masks_base_and_delta_immediately(corpus, seg_ivf_index):
+    inner = B.make("ivf", h=8, nprobe=4, alpha=0.5)
+    wrap = S.SegmentedBackend(inner=inner)
+    base_docs, pool = corpus
+    seg = S.make_segmented(inner, seg_ivf_index, cap=CAP)
+    seg, _ = S.add_documents(seg, pool[:2])
+    # both a base doc (its own vector as query -> top hit) and a delta doc
+    _, i_b, _ = wrap.plain_batch(seg, jnp.asarray(base_docs[17:18]), k=K)
+    _, i_d, _ = wrap.plain_batch(seg, jnp.asarray(pool[:1]), k=K)
+    assert 17 in np.asarray(i_b) and N in np.asarray(i_d)
+    seg = S.delete_documents(inner, seg, [17, N])
+    _, i_b, _ = wrap.plain_batch(seg, jnp.asarray(base_docs[17:18]), k=K)
+    _, i_d, _ = wrap.plain_batch(seg, jnp.asarray(pool[:1]), k=K)
+    assert 17 not in np.asarray(i_b) and N not in np.asarray(i_d)
+
+
+def test_delete_is_idempotent_and_validated(seg_ivf_index):
+    inner = B.make("ivf", h=8, nprobe=4, alpha=0.5)
+    seg = S.make_segmented(inner, seg_ivf_index, cap=CAP)
+    seg = S.delete_documents(inner, seg, [5])
+    seg2 = S.delete_documents(inner, seg, [5])
+    _tree_equal(seg, seg2)
+    with pytest.raises(ValueError, match="unassigned"):
+        S.delete_documents(inner, seg, [N])          # delta row not filled
+    with pytest.raises(ValueError, match="unassigned"):
+        S.delete_documents(inner, seg, [-1])
+
+
+def test_hnsw_deleted_nodes_still_route_the_beam(corpus, seg_hnsw_index):
+    """The standard HNSW tombstone scheme: a deleted node is masked out
+    of the result top-k but keeps routing, so survivors' reachability is
+    unchanged — and the graph stays bit-identical to a fresh build."""
+    inner = B.make("hnsw", ef=16, up=2)
+    seg = S.make_segmented(inner, seg_hnsw_index, cap=CAP)
+    seg = S.delete_documents(inner, seg, [int(seg_hnsw_index.entry_point)])
+    assert seg.base.deleted is not None
+    # the graph topology is untouched — only the mask differs
+    for f in ("vectors", "adj0", "upper_adj", "entry_point", "node_level"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(seg.base, f)),
+            np.asarray(getattr(seg_hnsw_index, f)))
+    wrap = S.SegmentedBackend(inner=inner)
+    _, i, _ = wrap.plain_batch(seg, jnp.asarray(corpus[0][:2]), k=K)
+    assert int(seg_hnsw_index.entry_point) not in np.asarray(i)
+
+
+# --------------------------------------------------- hnsw insertion
+
+def test_hnsw_insert_equals_build(corpus):
+    docs = corpus[0]
+    partial = hnsw.build(docs[:200], m=8, **HKW)
+    grown = hnsw.insert(partial, docs[200:], **HKW)
+    full = hnsw.build(docs, m=8, **HKW)
+    _tree_equal(grown, full)
+
+
+def test_hnsw_insert_rejects_mismatched_stream(corpus):
+    docs = corpus[0]
+    partial = hnsw.build(docs[:200], m=8, ef_construction=32, seed=0)
+    with pytest.raises(ValueError, match="level stream"):
+        hnsw.insert(partial, docs[200:], ef_construction=32, seed=1)
+
+
+# ------------------------------------------------------- guard rails
+
+def test_add_overflow_and_cap_validation(seg_ivf_index, corpus):
+    inner = B.make("ivf", h=8, nprobe=4, alpha=0.5)
+    with pytest.raises(ValueError, match="cap"):
+        S.make_segmented(inner, seg_ivf_index, cap=0)
+    seg = S.make_segmented(inner, seg_ivf_index, cap=2)
+    seg, _ = S.add_documents(seg, corpus[1][:2])
+    with pytest.raises(ValueError, match="overflow"):
+        S.add_documents(seg, corpus[1][2:3])
+
+
+def test_exact_backend_unsupported(corpus):
+    inner = B.make("exact")
+    with pytest.raises(NotImplementedError, match="exact"):
+        S.make_segmented(inner, jnp.asarray(corpus[0]), cap=4)
+
+
+def test_segmented_registered_and_jit_static(seg_ivf_index):
+    assert "segmented" in B.names()
+    inner = B.make("ivf", h=8, nprobe=4, alpha=0.5)
+    a = B.make("segmented", inner=inner)
+    b = B.make("segmented", inner=B.make("ivf", h=8, nprobe=4, alpha=0.5))
+    assert a == b and hash(a) == hash(b)
+    assert a.stateful is True
+    assert a.index_kwarg == "segmented_index"

@@ -657,3 +657,45 @@ def test_end_conversation_waits_for_inflight_waves(small_corpus, ivf_index):
         np.testing.assert_array_equal(i, np.asarray(ri))
         np.testing.assert_array_equal(v, np.asarray(rv))
         assert bat.store.lookup("c0") is None
+
+
+def test_clear_zeroes_many_slots_in_one_dispatch(ivf_index, monkeypatch):
+    """clear() tiles the zero template over the batch and issues ONE
+    jitted scatter (it used to dispatch once per slot — the result
+    cache's tombstone sweep can hand it hundreds of rows at once), with
+    slot-freed listener semantics unchanged: clear() itself never
+    notifies, release/eviction still notify once after zeroing."""
+    from repro.serving import sessions as SS
+
+    store = ivf_session_store(ivf_index, h=H, nprobe=NPROBE, n_slots=8)
+    slots = []
+    for cid in "abcd":
+        s, _ = store.acquire(cid)
+        dirty = jax.tree.map(
+            lambda a: a + 1 if a.dtype == jnp.int32 else a + 1.0,
+            store.gather([s]))
+        store.scatter([s], dirty)
+        slots.append(s)
+
+    calls = []
+    real = SS._scatter_slab
+
+    def counting(slab, idx, updates):
+        calls.append(int(idx.shape[0]))
+        return real(slab, idx, updates)
+
+    monkeypatch.setattr(SS, "_scatter_slab", counting)
+    store.clear(slots)
+    assert calls == [len(slots)]             # one batched dispatch
+    rows = store.gather(slots)
+    for f in toploc.IVFSession._fields:
+        assert bool((getattr(rows, f) == 0).all()), f
+    store.clear([])                          # empty batch: no dispatch
+    assert calls == [len(slots)]
+
+    freed = []
+    store.add_slot_freed_listener(freed.append)
+    store.clear([slots[1]])
+    assert freed == []                       # clear() is not a hand-over
+    store.release("a")
+    assert freed == [slots[0]]

@@ -258,3 +258,54 @@ def test_router_close_is_idempotent_and_stops_pumps(small_corpus,
 def test_router_replicas_must_be_positive(ivf_index):
     with pytest.raises(ValueError, match="replicas"):
         ReplicatedSearchEngine(_cfg(), replicas=0, ivf_index=ivf_index)
+
+
+def test_query_survives_racing_end_conversation(small_corpus, ivf_index):
+    """Regression: query() used to read ``self._replica_of[conv_id]``
+    without the route lock — a concurrent ``end_conversation`` landing
+    between submit() and that read KeyError'd the turn.  The pin read
+    now goes through ``replica_of()`` and a gone pin falls back to
+    draining every replica until the (already enqueued) future lands."""
+    wl = small_corpus
+    with _router(ivf_index) as eng:
+        eng.query("c0", jnp.asarray(wl.conversations[0, 0]))
+        assert eng.replica_of("c0") is not None
+
+        orig_submit = eng.submit
+
+        def racing_submit(conv_id, qvec):
+            fut = orig_submit(conv_id, qvec)
+            # the race, made deterministic: the conversation ends right
+            # after its turn is enqueued, before query() reads the pin
+            eng.end_conversation(conv_id)
+            return fut
+
+        eng.submit = racing_submit
+        v, i = eng.query("c0", jnp.asarray(wl.conversations[0, 1]))
+        assert v.shape == (K,) and i.shape == (K,)
+        assert eng.replica_of("c0") is None
+
+
+def test_router_broadcast_mutations_keep_replicas_identical(
+        small_corpus, ivf_index):
+    """add/delete/compact broadcast to every replica; ids agree, the
+    epoch advances in lockstep, and a deleted doc is gone from results
+    on whichever replica serves the follow-up."""
+    wl = small_corpus
+    n0 = wl.doc_vecs.shape[0]
+    with ReplicatedSearchEngine(
+            _cfg(segment_cap=8), replicas=2, ivf_index=ivf_index,
+            n_slots=8, max_batch=4, max_wait_s=1e-4) as eng:
+        ids = eng.add_documents(wl.doc_vecs[:3] * 0.5)
+        assert ids.tolist() == [n0, n0 + 1, n0 + 2]
+        assert eng.corpus_epoch == 1
+        eng.delete_documents([int(ids[1])])
+        assert eng.corpus_epoch == 2
+        for c in ("a", "b", "c"):    # spread over both replicas
+            _, i = eng.query(c, jnp.asarray(wl.doc_vecs[ids[1] - n0] * 0.5))
+            assert int(ids[1]) not in np.asarray(i)
+        eng.compact()
+        assert eng.corpus_epoch == 3
+        for c in ("a", "b"):
+            _, i = eng.query(c, jnp.asarray(wl.conversations[1, 1]))
+            assert i.shape == (K,)
