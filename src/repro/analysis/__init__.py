@@ -1,21 +1,30 @@
-"""repro.analysis — jit/Pallas/shard_map invariant linter (ISSUE 6).
+"""repro.analysis — jit/Pallas/shard_map/concurrency invariant linter.
 
-Six passes over the tree (``python -m repro.analysis``), each encoding
-an invariant the test suite could only catch after the fact:
+Eight passes over the tree (``python -m repro.analysis``), each
+encoding an invariant the test suite could only catch after the fact:
 
-  ============  =======================================================
-  trace-safety  AST: host `if`/`while`/`bool()`/`np.*`/clock/RNG in
-                functions reachable from a jit boundary  (TS1xx)
-  contract      live registry: backends frozen/hashable/array-free
-                with the full driver surface              (SC2xx)
-  retrace       abstract tracing: cache-key churn, dtype/weak-type
-                drift across batch sizes and engines      (RT3xx)
-  kernels       recorded pallas_call: per-step VMEM budget and
-                (8,128) tile alignment                    (PK4xx)
-  shard         recorded shard_map: placements vs in_specs, replicated
-                TopLoc state never partitioned            (SS5xx)
-  deprecated    AST: internal use of legacy toploc.* aliases (DA6xx)
-  ============  =======================================================
+  ==============  =====================================================
+  trace-safety    AST: host `if`/`while`/`bool()`/`np.*`/clock/RNG in
+                  functions reachable from a jit boundary  (TS1xx)
+  contract        live registry: backends frozen/hashable/array-free
+                  with the full driver surface              (SC2xx)
+  retrace         abstract tracing: cache-key churn, dtype/weak-type
+                  drift across batch sizes and engines      (RT3xx)
+  kernels         recorded pallas_call: per-step VMEM budget and
+                  (8,128) tile alignment                    (PK4xx)
+  shard           recorded shard_map: placements vs in_specs,
+                  replicated TopLoc state never partitioned (SS5xx)
+  deprecated      AST: internal use of legacy toploc.* aliases (DA6xx)
+  lock-order      AST over serving/ + distributed/: lock-graph cycles,
+                  bare acquire(), blocking under a lock     (LK7xx)
+  guarded-fields  AST: `@guarded_by` declarations vs actual lock
+                  domination; undeclared shared mutables    (GF8xx)
+  ==============  =====================================================
+
+The concurrency passes have a dynamic counterpart —
+``repro.analysis.tsan`` (vector-clock race detection over an
+instrumented ``threading``) driven by ``repro.analysis.schedules``
+(seeded deterministic-schedule exploration); see DESIGN.md §8.
 
 See DESIGN.md §8 for the invariant catalogue and
 ``analysis-baseline.txt`` for the (empty) suppression baseline.
@@ -31,7 +40,8 @@ from repro.analysis.project import Project       # noqa: F401
 
 def all_passes() -> Dict[str, Callable]:
     """pass name → ``run(project) -> List[Finding]`` (import-lazy)."""
-    from repro.analysis import (deprecation, kernel_budget, retrace,
+    from repro.analysis import (deprecation, guarded_fields,
+                                kernel_budget, lock_order, retrace,
                                 shard_specs, static_contract,
                                 trace_safety)
     return {
@@ -41,6 +51,8 @@ def all_passes() -> Dict[str, Callable]:
         "kernels": kernel_budget.run,
         "shard": shard_specs.run,
         "deprecated": deprecation.run,
+        "lock-order": lock_order.run,
+        "guarded-fields": guarded_fields.run,
     }
 
 

@@ -39,6 +39,15 @@ def main(argv=None) -> int:
             print(name)
         return 0
 
+    if args.select:
+        unknown = sorted(set(args.select) - set(all_passes()))
+        if unknown:
+            print(f"error: unknown pass(es): {', '.join(unknown)}",
+                  file=sys.stderr)
+            print(f"valid pass names: "
+                  f"{', '.join(sorted(all_passes()))}", file=sys.stderr)
+            return 2
+
     baseline_path = args.baseline or str(
         repo_root() / "analysis-baseline.txt")
     patterns = load_baseline(baseline_path)

@@ -43,6 +43,7 @@ to one data-parallel group so its cache stays local (DESIGN.md §2).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -231,10 +232,16 @@ class _EngineBase(_EngineAccounting):
                 "corpus mutation needs ServingConfig.segment_cap > 0 "
                 "(the engine is serving a frozen index)")
 
-    def _quiesce(self) -> None:
-        """Engine hook: settle in-flight device work before a mutation
-        swaps the index (the batched engine overrides with a batcher
-        sync)."""
+    def _mutation_scope(self):
+        """Engine hook: context under which a corpus mutation swaps the
+        index.  The sequential engine needs none (one thread, no
+        in-flight work); the batched engine overrides with
+        ``batcher.paused()``, which retires in-flight waves AND holds
+        the drain lock for the whole swap — a bare sync would leave a
+        window where a concurrent flush launches a wave against the
+        pre-mutation index, whose futures then resolve (and can serve a
+        tombstoned doc) after the mutation returned."""
+        return contextlib.nullcontext()
 
     def _after_mutation(self, *, base_changed: bool) -> None:
         """Re-place the mutated host state on the device/mesh, refresh
@@ -259,25 +266,29 @@ class _EngineBase(_EngineAccounting):
         """Ingest new documents into the delta segment (shape-stable:
         no recompilation); returns their assigned global ids."""
         self._require_segmented()
-        self._quiesce()
-        self._seg_host, ids = _segment.add_documents(self._seg_host,
-                                                     vectors)
-        # existing cache entries stay valid: their candidate pools
-        # simply predate the new docs (documented staleness, same as a
-        # miss turn served just before the add)
-        self._after_mutation(base_changed=False)
+        with self._mutation_scope():
+            self._seg_host, ids = _segment.add_documents(self._seg_host,
+                                                         vectors)
+            # existing cache entries stay valid: their candidate pools
+            # simply predate the new docs (documented staleness, same as
+            # a miss turn served just before the add)
+            self._after_mutation(base_changed=False)
         return ids
 
     def delete_documents(self, ids) -> None:
         """Tombstone documents by global id; a cache hit can never
         serve them again (intersecting entries are invalidated)."""
         self._require_segmented()
-        self._quiesce()
-        self._seg_host = _segment.delete_documents(self._seg_inner,
-                                                   self._seg_host, ids)
-        self._after_mutation(base_changed=True)
-        if self._cache is not None:
-            self._cache.invalidate_docs(ids)
+        with self._mutation_scope():
+            self._seg_host = _segment.delete_documents(self._seg_inner,
+                                                       self._seg_host,
+                                                       ids)
+            self._after_mutation(base_changed=True)
+            # the tombstone sweep must land inside the scope too: a wave
+            # launched between the index swap and the sweep could
+            # refresh a cache entry that still holds the dead doc
+            if self._cache is not None:
+                self._cache.invalidate_docs(ids)
 
     def compact(self, **build_kw) -> None:
         """Fold the delta segment into the base index (background
@@ -285,7 +296,10 @@ class _EngineBase(_EngineAccounting):
         costs one retrace).  Results afterwards are bit-identical to a
         from-scratch rebuild (core.segment contract)."""
         self._require_segmented()
-        self._quiesce()
+        with self._mutation_scope():
+            self._compact_locked(**build_kw)
+
+    def _compact_locked(self, **build_kw) -> None:
         if self.doc_vecs is not None:
             # compaction folds delta rows into the base id range; the
             # engine-provided flat corpus must grow with it so cache
@@ -526,20 +540,24 @@ class BatchedConversationalSearchEngine(_EngineBase):
         self.close()
         return False
 
-    def _quiesce(self) -> None:
-        # a corpus mutation swaps self.index; in-flight waves must land
-        # first so a launched batch never straddles two corpus epochs
-        self.batcher.sync()
+    def _mutation_scope(self):
+        # a corpus mutation swaps self.index; paused() retires in-flight
+        # waves and holds the drain lock for the whole swap, so no wave
+        # is launched against the pre-mutation index while the swap (and
+        # the cache's tombstone sweep) is mid-flight — a launched batch
+        # never straddles two corpus epochs
+        return self.batcher.paused()
 
     def end_conversation(self, conv_id: str) -> None:
-        # release only after in-flight waves land: a launched wave's
-        # scatter still targets this conversation's slot, and freeing
-        # the slot now could hand it to a conversation in the *next*
-        # launch before the scatter executes
-        self.batcher.sync()
-        if self.store is not None:
-            self.store.release(conv_id)
-        self.turn_count.pop(conv_id, None)
+        # release under the paused batcher: a launched wave's scatter
+        # still targets this conversation's slot (freeing the slot now
+        # could hand it to a conversation in the *next* launch before
+        # the scatter executes), and turn_count is otherwise only
+        # touched by launches under the drain lock
+        with self.batcher.paused():
+            if self.store is not None:
+                self.store.release(conv_id)
+            self.turn_count.pop(conv_id, None)
 
     # -- batch execution ----------------------------------------------
 

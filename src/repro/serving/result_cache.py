@@ -38,12 +38,14 @@ conversation can never leak its entries to the slot's next occupant.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.concurrency import guarded_by
 from repro.serving import sessions as _sessions
 
 
@@ -158,6 +160,7 @@ def fuse_wave(entries: CacheEntry, q: jax.Array, v: jax.Array,
     return v, i, sess, stats, entries, hit
 
 
+@guarded_by("_lock", "hits", "misses", "_entries")
 class ResultCache:
     """Per-session result cache for both serving engines.
 
@@ -175,6 +178,14 @@ class ResultCache:
     recall — the Frieder et al. design.  ``threshold <= 0`` never hits
     (``enabled`` False) — the engines skip the cache path entirely,
     keeping disabled runs bit-identical to cache-absent ones.
+
+    Thread safety: the hit/miss counters and the sequential-mode entry
+    dict are guarded by an internal lock — in batched serving,
+    ``count_hits`` runs on the pump thread at wave retirement while
+    ``invalidate_docs`` arrives on client threads through
+    ``delete_documents``.  Device work (``probe``/``fuse_wave``) runs
+    outside the lock; slab-mode row state is guarded by the underlying
+    ``SessionStore``'s own lock.
     """
 
     def __init__(self, *, d: int, k: int, threshold: float,
@@ -187,6 +198,7 @@ class ResultCache:
         self.depth = max(int(depth or k), int(k))
         self.corpus = corpus
         self.rescore = corpus is not None
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self._template = entry_template(d, self.depth, dtype)
@@ -201,9 +213,10 @@ class ResultCache:
         return self.threshold > 0.0
 
     def stats(self) -> Dict[str, float]:
-        total = self.hits + self.misses
-        return {"hits": self.hits, "misses": self.misses,
-                "hit_rate": (self.hits / total) if total else 0.0}
+        with self._lock:
+            total = self.hits + self.misses
+            return {"hits": self.hits, "misses": self.misses,
+                    "hit_rate": (self.hits / total) if total else 0.0}
 
     def count_hits(self, hit: np.ndarray, b: int) -> None:
         """Fold a wave's materialized hit mask (first ``b`` rows are
@@ -211,8 +224,9 @@ class ResultCache:
         continuous-batching engine can defer the blocking ``device_get``
         of the mask to wave retirement instead of the launch path."""
         n_hit = int(np.asarray(hit)[:b].sum())
-        self.hits += n_hit
-        self.misses += b - n_hit
+        with self._lock:
+            self.hits += n_hit
+            self.misses += b - n_hit
 
     # -- sequential (dict) mode ---------------------------------------
 
@@ -220,18 +234,22 @@ class ResultCache:
                ) -> Optional[Tuple[jax.Array, jax.Array]]:
         """Probe ``conv_id``'s entry with q (d,); (scores (k,), ids
         (k,)) on a hit, None (counted as a miss) otherwise."""
-        entry = self._entries.get(conv_id)
+        with self._lock:
+            entry = self._entries.get(conv_id)
         if entry is None:
-            self.misses += 1
+            with self._lock:
+                self.misses += 1
             return None
         batched = jax.tree.map(lambda a: a[None], entry)
         hit, v, ids = probe(batched, q[None], out_k=self.k,
                             threshold=self.threshold,
                             rescore=self.rescore)
         if bool(jax.device_get(hit[0])):
-            self.hits += 1
+            with self._lock:
+                self.hits += 1
             return v[0], ids[0]
-        self.misses += 1
+        with self._lock:
+            self.misses += 1
         return None
 
     def update(self, conv_id: str, q: jax.Array, v: jax.Array,
@@ -241,10 +259,13 @@ class ResultCache:
         fresh = (_make_entries_rescore(q[None], v[None], ids[None],
                                        self.corpus) if self.rescore
                  else _make_entries_static(q[None], v[None], ids[None]))
-        self._entries[conv_id] = jax.tree.map(lambda a: a[0], fresh)
+        row = jax.tree.map(lambda a: a[0], fresh)
+        with self._lock:
+            self._entries[conv_id] = row
 
     def invalidate(self, conv_id: str) -> None:
-        self._entries.pop(conv_id, None)
+        with self._lock:
+            self._entries.pop(conv_id, None)
 
     def invalidate_docs(self, doc_ids) -> int:
         """Corpus-tombstone sweep: drop every entry whose cached
@@ -257,7 +278,7 @@ class ResultCache:
         if dead.size == 0:
             return 0
         n = 0
-        if self._entries:                              # sequential mode
+        with self._lock:                               # sequential mode
             drop = [cid for cid, e in self._entries.items()
                     if np.isin(np.asarray(e.doc_ids), dead).any()]
             for cid in drop:

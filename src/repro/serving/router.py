@@ -49,15 +49,25 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.concurrency import guarded_by
 from repro.distributed import retrieval as _retrieval
 from repro.serving.engine import (BatchedConversationalSearchEngine,
                                   ServingConfig, _EngineAccounting)
 from repro.serving.scheduler import HedgedExecutor
 
 
+@guarded_by("_route_lock", "_replica_of", "_load", "_rr",
+            "_pumps", "_closed")
 class ReplicatedSearchEngine:
     """R replica ``BatchedConversationalSearchEngine``s behind one
     session-affine front door (module docstring has the routing rule).
+
+    Thread safety: the routing table, load counters, pump-thread list,
+    and the closed flag are guarded by ``_route_lock`` — submits arrive
+    on arbitrary client threads while pumps run and ``close()`` may race
+    a lazy ``start()``.  After ``close()`` every ``submit``/``query``/
+    mutation raises ``RuntimeError`` instead of dispatching to dead pump
+    threads; ``close()`` itself is idempotent.
 
     ``config.mesh`` may be a prebuilt 2-D ``(replica, shard)`` mesh
     (split into per-replica submeshes; its replica count must match
@@ -162,23 +172,37 @@ class ReplicatedSearchEngine:
 
     # -- public API ----------------------------------------------------
 
+    def _ensure_open(self) -> None:
+        with self._route_lock:
+            if self._closed:
+                raise RuntimeError(
+                    "ReplicatedSearchEngine is closed; build a new "
+                    "router to serve further traffic")
+
+    def _pumps_running(self) -> bool:
+        with self._route_lock:
+            return bool(self._pumps)
+
     def submit(self, conv_id: str, qvec) -> Future:
         """Enqueue one turn; Future of (scores, doc_ids).
 
         Stateful traffic goes to the conversation's pinned replica;
-        stateless traffic is hedged across replicas.
+        stateless traffic is hedged across replicas.  Raises
+        ``RuntimeError`` after ``close()``.
         """
+        self._ensure_open()
         if self.stateful:
             r = self._acquire_replica(conv_id)
             return self.engines[r].submit(conv_id, qvec)
-        if not self._pumps:
-            self.start()
+        # no-op once running; atomically spawns the pumps on first use
+        # (two concurrent first submits must not double-spawn)
+        self.start()
         return self._hedge_pool.submit(self._hedge.call, (conv_id, qvec))
 
     def query(self, conv_id: str, qvec) -> Tuple[np.ndarray, np.ndarray]:
         """Synchronous single-turn convenience."""
         fut = self.submit(conv_id, qvec)
-        if self.stateful and not self._pumps:
+        if self.stateful and not self._pumps_running():
             # read the pin under the route lock (replica_of); a racing
             # end_conversation may have already dropped it between
             # submit() and here, in which case the turn was enqueued on
@@ -209,6 +233,7 @@ class ReplicatedSearchEngine:
         delta row``), so every replica assigns the same ids — asserted
         here.  Returns the assigned global ids.
         """
+        self._ensure_open()
         ids: Optional[np.ndarray] = None
         for eng in self.engines:
             got = eng.add_documents(vectors)
@@ -222,6 +247,7 @@ class ReplicatedSearchEngine:
     def delete_documents(self, ids) -> None:
         """Broadcast tombstones to every replica (each invalidates its
         own result-cache entries intersecting the deleted ids)."""
+        self._ensure_open()
         for eng in self.engines:
             eng.delete_documents(ids)
 
@@ -229,6 +255,7 @@ class ReplicatedSearchEngine:
         """Compact the delta segment on every replica (replicas fold
         the identical delta into the identical base, so they remain
         bit-identical afterwards — the core.segment rebuild contract)."""
+        self._ensure_open()
         for eng in self.engines:
             eng.compact(**build_kw)
 
@@ -251,15 +278,19 @@ class ReplicatedSearchEngine:
     # -- serving-loop threads ------------------------------------------
 
     def start(self) -> "ReplicatedSearchEngine":
-        """Spawn one pump (serving-loop) thread per replica."""
-        if self._pumps or self._closed:
-            return self
-        self._stop.clear()
-        for r, eng in enumerate(self.engines):
-            t = threading.Thread(target=self._pump_loop, args=(eng,),
-                                 name=f"replica-pump-{r}", daemon=True)
-            t.start()
-            self._pumps.append(t)
+        """Spawn one pump (serving-loop) thread per replica.  No-op when
+        already running or closed; safe to call concurrently (the pump
+        list is built under the route lock, so two racing first submits
+        can never double-spawn)."""
+        with self._route_lock:
+            if self._pumps or self._closed:
+                return self
+            self._stop.clear()
+            for r, eng in enumerate(self.engines):
+                t = threading.Thread(target=self._pump_loop, args=(eng,),
+                                     name=f"replica-pump-{r}", daemon=True)
+                t.start()
+                self._pumps.append(t)
         return self
 
     def _pump_loop(self, eng: BatchedConversationalSearchEngine) -> None:
@@ -275,18 +306,21 @@ class ReplicatedSearchEngine:
         """Quiesce and tear down.  Order matters: the hedge front pool
         drains first (its calls need live pumps to resolve), then the
         hedge executor's replica pool, then the pumps, then the engines.
-        Idempotent."""
-        if self._closed:
-            return
-        self._closed = True
+        Idempotent — the closed flag flips exactly once under the route
+        lock, so a second (or concurrent) close returns immediately."""
+        with self._route_lock:
+            if self._closed:
+                return
+            self._closed = True
         if self._hedge_pool is not None:
             self._hedge_pool.shutdown(wait=True)
         if self._hedge is not None:
             self._hedge.close()
         self._stop.set()
-        for t in self._pumps:
+        with self._route_lock:
+            pumps, self._pumps = list(self._pumps), []
+        for t in pumps:
             t.join(timeout=10.0)
-        self._pumps.clear()
         for eng in self.engines:
             eng.close()
 

@@ -36,13 +36,16 @@ benchmark down, or every rebuild leaks 2x``len(replicas)`` threads.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.concurrency import guarded_by, holds
 
 
 @dataclasses.dataclass
@@ -52,6 +55,8 @@ class Request:
     enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
 
 
+@guarded_by("_lock", "_queue", "batch_sizes", "padded_sizes")
+@guarded_by("_drain_lock", "_inflight")
 class MicroBatcher:
     """Deadline-based micro-batching with shape bucketing.
 
@@ -124,7 +129,8 @@ class MicroBatcher:
     @property
     def inflight(self) -> int:
         """Launched-but-unretired batches (continuous mode)."""
-        return len(self._inflight)
+        with self._drain_lock:
+            return len(self._inflight)
 
     def _wait_and_drain(self) -> List[Tuple[Request, Future]]:
         """Wait (condvar, not poll) until max_batch or the deadline,
@@ -139,6 +145,7 @@ class MicroBatcher:
             take = min(len(self._queue), self.max_batch)
             return [self._queue.popleft() for _ in range(take)]
 
+    @holds("_drain_lock")
     def _retire_oldest_locked(self) -> None:
         """Complete the oldest in-flight launch and resolve its futures.
         Caller holds ``_drain_lock``."""
@@ -205,7 +212,31 @@ class MicroBatcher:
             while self._inflight:
                 self._retire_oldest_locked()
 
+    @contextlib.contextmanager
+    def paused(self) -> Iterator[None]:
+        """Quiesce AND hold the drain path closed for the scope.
 
+        ``sync()`` alone is not enough for a caller about to mutate
+        state a wave reads (the corpus index, the session slab): between
+        ``sync()`` returning and the mutation landing, a concurrent
+        ``flush_loop_once`` can drain the queue and *launch* a wave
+        against the pre-mutation state — whose futures then resolve
+        after the mutation call returned (the delete-vs-wave race the
+        schedule explorer replays).  ``paused()`` retires every
+        outstanding launch and keeps ``_drain_lock`` held until the
+        scope exits, so no wave can launch while the caller swaps state
+        underneath the batcher.  Queued requests are untouched — they
+        dispatch on the first flush after resume, observing the mutated
+        state.
+        """
+        with self._drain_lock:
+            while self._inflight:
+                self._retire_oldest_locked()
+            yield
+
+
+@guarded_by("_lock", "_lat", "_rr", "calls", "hedges_issued",
+            "hedges_won", "failovers")
 class HedgedExecutor:
     """First-*successful*-result-wins duplicate dispatch across replicas.
 
@@ -230,7 +261,15 @@ class HedgedExecutor:
     Owns a ``ThreadPoolExecutor`` — ``close()`` (idempotent; also via
     ``with``) shuts it down, or every engine/benchmark rebuild leaks
     2x``len(replicas)`` threads.  ``call`` after ``close`` raises
-    ``RuntimeError``.
+    ``RuntimeError`` immediately — nothing is ever queued on the
+    shut-down pool.
+
+    ``call`` may be invoked from any number of threads concurrently
+    (the replica router fronts it with a 2R-worker pool), so the
+    round-robin cursor, the counters, and the latency window are
+    guarded by ``_lock``; the replica dispatch and the wait loop run
+    outside it (holding a lock across a cross-replica RPC would
+    serialize the hedging this class exists to provide).
     """
 
     def __init__(self, replicas: Sequence[Callable[[Any], Any]], *,
@@ -243,7 +282,9 @@ class HedgedExecutor:
         self.min_history = min_history
         self._lat: "collections.deque[float]" = collections.deque(
             maxlen=lat_window)
-        self._pool = ThreadPoolExecutor(max_workers=2 * len(replicas))
+        self._pool = ThreadPoolExecutor(max_workers=2 * len(replicas),
+                                        thread_name_prefix="hedge")
+        self._lock = threading.Lock()
         self._closed = False
         self._rr = 0
         self.calls = 0
@@ -266,18 +307,21 @@ class HedgedExecutor:
         return False
 
     def _deadline(self) -> float:
-        if len(self._lat) < self.min_history:
-            return self.hedge_floor_s
+        with self._lock:
+            if len(self._lat) < self.min_history:
+                return self.hedge_floor_s
+            lat = list(self._lat)
         return max(self.hedge_floor_s,
-                   float(np.percentile(self._lat, 100 * self.hedge_quantile)))
+                   float(np.percentile(lat, 100 * self.hedge_quantile)))
 
     def call(self, payload: Any) -> Any:
         if self._closed:
             raise RuntimeError("HedgedExecutor is closed")
         t0 = time.perf_counter()
-        self.calls += 1
-        primary_idx = self._rr % len(self.replicas)
-        self._rr += 1
+        with self._lock:
+            self.calls += 1
+            primary_idx = self._rr % len(self.replicas)
+            self._rr += 1
         primary = self._pool.submit(self.replicas[primary_idx], payload)
         done, _ = wait([primary], timeout=self._deadline())
         futures = [primary]
@@ -286,7 +330,8 @@ class HedgedExecutor:
         if not done and len(self.replicas) > 1:
             hedged = self._pool.submit(self.replicas[backup_idx], payload)
             futures.append(hedged)
-            self.hedges_issued += 1
+            with self._lock:
+                self.hedges_issued += 1
         elif (done and len(self.replicas) > 1
               and primary.exception() is not None):
             # primary failed before the hedge deadline: fail over to the
@@ -294,7 +339,8 @@ class HedgedExecutor:
             # replica untried
             hedged = self._pool.submit(self.replicas[backup_idx], payload)
             futures.append(hedged)
-            self.failovers += 1
+            with self._lock:
+                self.failovers += 1
         winner: Optional[Future] = None
         pending = set(futures)
         while pending:
@@ -304,19 +350,22 @@ class HedgedExecutor:
             if ok:
                 winner = ok[0]
                 if winner is hedged and primary in pending:
-                    self.hedges_won += 1
+                    with self._lock:
+                        self.hedges_won += 1
                 break
         if winner is None:       # every issued replica failed
             winner = primary
         result = winner.result()
-        self._lat.append(time.perf_counter() - t0)
+        with self._lock:
+            self._lat.append(time.perf_counter() - t0)
         return result
 
     def stats(self) -> Dict[str, float]:
-        lat = np.asarray(self._lat) if self._lat else np.zeros(1)
-        return {"calls": self.calls,
-                "hedges_issued": self.hedges_issued,
-                "hedges_won": self.hedges_won,
-                "failovers": self.failovers,
-                "mean_ms": float(lat.mean() * 1e3),
-                "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+        with self._lock:
+            lat = np.asarray(self._lat) if self._lat else np.zeros(1)
+            return {"calls": self.calls,
+                    "hedges_issued": self.hedges_issued,
+                    "hedges_won": self.hedges_won,
+                    "failovers": self.failovers,
+                    "mean_ms": float(lat.mean() * 1e3),
+                    "p99_ms": float(np.percentile(lat, 99) * 1e3)}

@@ -50,6 +50,7 @@ frees a buffer a pending gather still reads.
 from __future__ import annotations
 
 import functools
+import threading
 import warnings
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Sequence, Tuple
@@ -59,6 +60,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as _P
 
+from repro.concurrency import guarded_by
 from repro.core import hnsw as _hnsw
 from repro.core import ivf as _ivf
 from repro.core import pq as _pq
@@ -75,8 +77,22 @@ def _scatter_slab(slab: Any, idx: jax.Array, updates: Any) -> Any:
     return jax.tree.map(lambda a, u: a.at[idx].set(u), slab, updates)
 
 
+@guarded_by("_lock", "_slab", "_slot_of", "_free",
+            "allocs", "evictions", "hits")
 class SessionStore:
-    """Fixed-capacity struct-of-arrays slab of per-conversation state."""
+    """Fixed-capacity struct-of-arrays slab of per-conversation state.
+
+    Thread safety: slot bookkeeping and the slab reference are guarded
+    by an internal ``RLock`` (reentrant because ``acquire``/``release``
+    scatter through ``self.scatter`` while already holding it).  The
+    batched engine serializes its wave path through the MicroBatcher's
+    drain lock, but ``release`` arrives on *client* threads
+    (``end_conversation``) — without the store lock, a release racing a
+    wave's ``acquire`` could interleave the free-list append with an
+    LRU eviction and hand one slot to two conversations.  Lock
+    acquisition order is always batcher drain lock → store lock, never
+    the reverse (the store calls nothing that flushes).
+    """
 
     def __init__(self, template: Any, n_slots: int, *, mesh: Any = None):
         """``template``: a single-session pytree (no leading batch dim)
@@ -100,6 +116,7 @@ class SessionStore:
             rep = lambda a: jax.device_put(a, NamedSharding(mesh, _P()))
             self._slab = jax.tree.map(rep, self._slab)
             self._zero_row = jax.tree.map(rep, self._zero_row)
+        self._lock = threading.RLock()
         self._free = list(range(n_slots - 1, -1, -1))   # pop() → slot 0 first
         self._slot_of: "OrderedDict[str, int]" = OrderedDict()  # LRU order
         self._slot_freed_listeners: list = []
@@ -129,10 +146,12 @@ class SessionStore:
 
     @property
     def occupancy(self) -> int:
-        return len(self._slot_of)
+        with self._lock:
+            return len(self._slot_of)
 
     def lookup(self, conv_id: str) -> Optional[int]:
-        return self._slot_of.get(conv_id)
+        with self._lock:
+            return self._slot_of.get(conv_id)
 
     def acquire(self, conv_id: str) -> Tuple[int, bool]:
         """Slot for ``conv_id``; allocates (evicting LRU if full).
@@ -141,25 +160,27 @@ class SessionStore:
         for this conversation and the caller must treat the turn as a
         first turn (full cache build).
         """
-        slot = self._slot_of.get(conv_id)
-        if slot is not None:
-            self._slot_of.move_to_end(conv_id)
-            self.hits += 1
-            return slot, False
-        if not self._free:
-            lru_id, lru_slot = next(iter(self._slot_of.items()))
-            del self._slot_of[lru_id]
-            self._free.append(lru_slot)
-            self.evictions += 1
-            # same leak protection as release(): the evicted row is
-            # wiped before the slot changes hands, so the new occupant
-            # can never read the evicted conversation's cache
-            self.scatter([lru_slot], self._zero_row)
-            self._notify_slot_freed(lru_slot)
-        slot = self._free.pop()
-        self._slot_of[conv_id] = slot
-        self.allocs += 1
-        return slot, True
+        with self._lock:
+            slot = self._slot_of.get(conv_id)
+            if slot is not None:
+                self._slot_of.move_to_end(conv_id)
+                self.hits += 1
+                return slot, False
+            if not self._free:
+                lru_id, lru_slot = next(iter(self._slot_of.items()))
+                del self._slot_of[lru_id]
+                self._free.append(lru_slot)
+                self.evictions += 1
+                # same leak protection as release(): the evicted row is
+                # wiped before the slot changes hands, so the new
+                # occupant can never read the evicted conversation's
+                # cache
+                self.scatter([lru_slot], self._zero_row)
+                self._notify_slot_freed(lru_slot)
+            slot = self._free.pop()
+            self._slot_of[conv_id] = slot
+            self.allocs += 1
+            return slot, True
 
     def release(self, conv_id: str) -> Optional[int]:
         """End a conversation; its slot returns to the free list.
@@ -173,24 +194,27 @@ class SessionStore:
         particular the slot is never double-appended to the free list,
         which would hand one slot to two conversations).
         """
-        slot = self._slot_of.pop(conv_id, None)
-        if slot is not None:
-            self._free.append(slot)
-            self.scatter([slot], self._zero_row)
-            self._notify_slot_freed(slot)
-        return slot
+        with self._lock:
+            slot = self._slot_of.pop(conv_id, None)
+            if slot is not None:
+                self._free.append(slot)
+                self.scatter([slot], self._zero_row)
+                self._notify_slot_freed(slot)
+            return slot
 
     def stats(self) -> Dict[str, int]:
-        return {"n_slots": self.n_slots, "occupancy": self.occupancy,
-                "allocs": self.allocs, "evictions": self.evictions,
-                "hits": self.hits}
+        with self._lock:
+            return {"n_slots": self.n_slots, "occupancy": self.occupancy,
+                    "allocs": self.allocs, "evictions": self.evictions,
+                    "hits": self.hits}
 
     # -- device slab access -------------------------------------------
 
     def gather(self, slots: Sequence[int]) -> Any:
         """Session pytree batch for ``slots`` (leading dim len(slots))."""
         idx = jnp.asarray(np.asarray(slots, np.int32))
-        return jax.tree.map(lambda a: a[idx], self._slab)
+        with self._lock:
+            return jax.tree.map(lambda a: a[idx], self._slab)
 
     def scatter(self, slots: Sequence[int], sessions: Any) -> None:
         """Write a batched session pytree back into the slab rows.
@@ -200,7 +224,7 @@ class SessionStore:
         engine guarantees one turn per conversation per device batch.
         """
         idx = jnp.asarray(np.asarray(slots, np.int32))
-        with warnings.catch_warnings():
+        with self._lock, warnings.catch_warnings():
             # CPU backends warn that the donated slab was not consumed
             warnings.filterwarnings("ignore", message=".*[Dd]onat")
             self._slab = _scatter_slab(self._slab, idx, sessions)
@@ -221,7 +245,8 @@ class SessionStore:
         """The raw slab pytree (leading dim ``n_slots + 1``).  Read-only
         view for bulk inspection (e.g. the result cache's tombstone
         sweep); mutate only through ``scatter``/``clear``."""
-        return self._slab
+        with self._lock:
+            return self._slab
 
 
 def store_for_backend(backend: Any, index: Any, *, n_slots: int,

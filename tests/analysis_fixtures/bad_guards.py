@@ -1,0 +1,41 @@
+"""Seeded violations for the guarded-fields pass (GF8xx).
+
+Each MARK comment pins the line a diagnostic must fire on; the fixture
+is parsed (never imported) by tests/test_analysis.py.
+"""
+import threading
+
+from repro.concurrency import guarded_by, holds
+
+
+@guarded_by("_lock", "count")
+class SloppyCounter:
+    """`count` is declared guarded by `_lock` but touched bare, and
+    `other` is mutated from two methods with no declared guard."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.other = []
+
+    def bump(self):
+        # correct discipline — must NOT be flagged
+        with self._lock:
+            self.count += 1
+
+    @holds("_lock")
+    def bump_locked(self):
+        # caller holds the lock by contract — must NOT be flagged
+        self.count += 1
+
+    def peek(self):
+        return self.count  # MARK:GF801-read
+
+    def reset(self):
+        self.count = 0  # MARK:GF801-write
+
+    def push(self, x):
+        self.other.append(x)  # MARK:GF802
+
+    def drop(self):
+        return self.other.pop()

@@ -1,0 +1,55 @@
+"""Seeded violations for the lock-order pass (LK7xx).
+
+Each MARK comment pins the line a diagnostic must fire on; the fixture
+is parsed (never imported) by tests/test_analysis.py.
+"""
+import queue
+import threading
+
+
+class DeadlockProne:
+    """LK701: `ab` takes _a then _b, `ba` takes them in the opposite
+    order — a cycle in the lock-order graph."""
+
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def ab(self):
+        with self._a:
+            with self._b:  # MARK:LK701a
+                pass
+
+    def ba(self):
+        with self._b:
+            with self._a:  # MARK:LK701b
+                pass
+
+
+class LeakyAcquire:
+    """LK702: bare acquire() with no try/finally release."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def bump(self):
+        self._lock.acquire()  # MARK:LK702
+        self.n += 1
+        self._lock.release()
+
+
+class BlockingUnderLock:
+    """LK703: blocking calls made while holding a lock."""
+
+    def __init__(self):
+        self._m = threading.Lock()
+        self._q = queue.Queue()
+
+    def wait_result(self, fut):
+        with self._m:
+            return fut.result()  # MARK:LK703a
+
+    def drain_locked(self):
+        with self._m:
+            return self._q.get()  # MARK:LK703b

@@ -178,6 +178,61 @@ def test_live_alias_discovery_covers_all_legacy_entry_points():
 
 
 # ---------------------------------------------------------------------------
+# pass 7 — lock-order / lock-discipline (AST)
+# ---------------------------------------------------------------------------
+
+
+def test_lock_order_fixture_fires_each_diagnostic():
+    from repro.analysis import lock_order
+    path = FIXTURES / "bad_locking.py"
+    findings = lock_order.run(modules=modules_from_paths([path]))
+    got = {(f.code, f.line) for f in findings}
+    expect = {
+        ("LK701", _marked_line(path, "MARK:LK701a")),
+        ("LK701", _marked_line(path, "MARK:LK701b")),
+        ("LK702", _marked_line(path, "MARK:LK702")),
+        ("LK703", _marked_line(path, "MARK:LK703a")),
+        ("LK703", _marked_line(path, "MARK:LK703b")),
+    }
+    assert got == expect, [f.render() for f in findings]
+    assert all(f.path.endswith("bad_locking.py") for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# pass 8 — guarded fields (AST + @guarded_by declarations)
+# ---------------------------------------------------------------------------
+
+
+def test_guarded_fields_fixture_fires_each_diagnostic():
+    from repro.analysis import guarded_fields
+    path = FIXTURES / "bad_guards.py"
+    findings = guarded_fields.run(modules=modules_from_paths([path]))
+    got = {(f.code, f.line) for f in findings}
+    expect = {
+        ("GF801", _marked_line(path, "MARK:GF801-read")),
+        ("GF801", _marked_line(path, "MARK:GF801-write")),
+        ("GF802", _marked_line(path, "MARK:GF802")),
+    }
+    assert got == expect, [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# CLI --select validation
+# ---------------------------------------------------------------------------
+
+
+def test_select_unknown_pass_exits_2_with_valid_names(capsys):
+    from repro.analysis import all_passes
+    from repro.analysis.__main__ import main
+    rc = main(["--select", "bogus", "--select", "lock-order"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "unknown pass(es): bogus" in err
+    for name in all_passes():
+        assert name in err
+
+
+# ---------------------------------------------------------------------------
 # baseline mechanics + the real tree stays clean on the fast passes
 # ---------------------------------------------------------------------------
 
@@ -194,5 +249,6 @@ def test_baseline_suppression_and_stale_detection():
 
 def test_tree_is_clean_on_static_passes():
     findings = run_all(Project(), select=[
-        "trace-safety", "contract", "deprecated", "kernels"])
+        "trace-safety", "contract", "deprecated", "kernels",
+        "lock-order", "guarded-fields"])
     assert findings == [], [f.render() for f in findings]

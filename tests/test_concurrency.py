@@ -1,0 +1,308 @@
+"""Deterministic-schedule race tests for the serving layer.
+
+Two layers under test:
+
+1. The sanitizer itself (``repro.analysis.tsan`` + ``schedules``): a
+   seeded data race / lockset break / lock-order inversion must be
+   detected, a clean program must produce zero reports, and the same
+   seed must replay the same interleaving (trace determinism).
+2. The serving stack under the sanitizer: every seed of the fixed
+   matrix ``schedules.SEEDS`` replays the overlapped-wave engine,
+   delete-racing-wave, and router-mutation scenarios with per-session
+   **bit-identity** to the sequential engine and **zero** concurrency
+   violations — the dynamic counterpart of the static lock-order /
+   guarded-fields passes.
+
+These tests are single-device and self-contained (no pump thread is
+left running); CI runs them as the dedicated ``concurrency`` job.
+"""
+import threading
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.analysis import schedules, tsan
+from repro.concurrency import guarded_by
+from repro.serving import (BatchedConversationalSearchEngine,
+                           ConversationalSearchEngine,
+                           ReplicatedSearchEngine, ServingConfig,
+                           SessionStore)
+from repro.serving.result_cache import ResultCache
+from repro.serving.scheduler import HedgedExecutor, MicroBatcher
+
+K, H, NPROBE = 10, 16, 4
+B, T = 4, 3                   # conversations x turns per scenario
+
+#: serving-layer classes under guarded-field interception
+WATCH = (MicroBatcher, SessionStore, ResultCache, HedgedExecutor,
+         ReplicatedSearchEngine)
+
+
+def _cfg(**kw):
+    return ServingConfig(backend="ivf", strategy="toploc+",
+                         nprobe=NPROBE, h=H, alpha=0.3, k=K,
+                         cache_threshold=0.7, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the sanitizer itself
+# ---------------------------------------------------------------------------
+
+
+@guarded_by("_lock", "n")
+class _Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def bump_unlocked(self):
+        self.n += 1
+
+    def bump_locked(self):
+        with self._lock:
+            self.n += 1
+
+
+def test_tsan_detects_seeded_race_and_lockset_break():
+    rt = tsan.Runtime(schedule=schedules.ScheduleExplorer(3))
+    with tsan.instrument(rt):
+        c = _Counter()
+        with tsan.watch(rt, _Counter):
+            schedules.run_threads([c.bump_unlocked, c.bump_unlocked])
+    kinds = {r.kind for r in rt.reports}
+    assert "race" in kinds and "lockset" in kinds, rt.reports
+
+
+def test_tsan_clean_program_produces_no_reports():
+    rt = tsan.Runtime(schedule=schedules.ScheduleExplorer(3))
+    with tsan.instrument(rt):
+        c = _Counter()
+        with tsan.watch(rt, _Counter):
+            schedules.run_threads([c.bump_locked, c.bump_locked])
+    tsan.assert_clean(rt)
+    with c._lock:
+        assert c.n == 2
+
+
+def test_tsan_reports_lock_order_inversion():
+    class AB:
+        def __init__(self):
+            self.a = threading.Lock()
+            self.b = threading.Lock()
+
+        def ab(self):
+            with self.a:
+                with self.b:
+                    pass
+
+        def ba(self):
+            with self.b:
+                with self.a:
+                    pass
+
+    rt = tsan.Runtime()
+    with tsan.instrument(rt):
+        x = AB()
+        x.ab()
+        x.ba()
+    assert any(r.kind == "lock-order" for r in rt.reports), rt.reports
+
+
+def test_tsan_assert_clean_raises_listing_reports():
+    rt = tsan.Runtime(schedule=schedules.ScheduleExplorer(0))
+    with tsan.instrument(rt):
+        c = _Counter()
+        with tsan.watch(rt, _Counter):
+            schedules.run_threads([c.bump_unlocked, c.bump_unlocked])
+    with pytest.raises(AssertionError, match="concurrency violation"):
+        tsan.assert_clean(rt)
+
+
+def test_seed_matrix_has_at_least_20_distinct_schedules():
+    assert len(set(schedules.SEEDS)) >= 20
+
+
+def test_schedule_decision_is_pure_and_seed_sensitive():
+    e1 = schedules.ScheduleExplorer(7)
+    e2 = schedules.ScheduleExplorer(7)
+    e3 = schedules.ScheduleExplorer(8)
+    probes = [("client-0", n, "lock-acquire") for n in range(64)]
+    d1 = [e1.decision(*p) for p in probes]
+    assert d1 == [e2.decision(*p) for p in probes]
+    assert d1 != [e3.decision(*p) for p in probes]
+
+
+def test_schedule_replay_same_seed_same_interleaving():
+    def scen(rt):
+        c = _Counter()
+        schedules.run_threads([c.bump_locked] * 3,
+                              names=["t-0", "t-1", "t-2"])
+        with c._lock:
+            return c.n
+
+    r1, e1, _ = schedules.replay(7, scen, watch_classes=[_Counter])
+    r2, e2, _ = schedules.replay(7, scen, watch_classes=[_Counter])
+    named1 = {k: v for k, v in e1.traces.items() if k.startswith("t-")}
+    named2 = {k: v for k, v in e2.traces.items() if k.startswith("t-")}
+    assert r1 == r2 == 3
+    # same seed -> bit-identical per-thread decision traces
+    assert named1 == named2 and len(named1) == 3
+    # a different seed steers a different interleaving
+    _, e3, _ = schedules.replay(8, scen, watch_classes=[_Counter])
+    named3 = {k: v for k, v in e3.traces.items() if k.startswith("t-")}
+    assert named1 != named3
+
+
+# ---------------------------------------------------------------------------
+# scenario A — overlapped-wave engine vs sequential oracle, all seeds
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def convs(small_corpus):
+    return jnp.asarray(small_corpus.conversations[:B, :T])
+
+
+@pytest.fixture(scope="module")
+def oracle(ivf_index, convs):
+    """Per-conversation (scores, ids) rows from the sequential engine."""
+    eng = ConversationalSearchEngine(_cfg(), ivf_index=ivf_index)
+    out = {}
+    for b in range(B):
+        rows = []
+        for t in range(T):
+            v, i = eng.query(f"c{b}", convs[b, t])
+            rows.append((np.asarray(v), np.asarray(i)))
+        out[f"c{b}"] = rows
+    return out
+
+
+@pytest.mark.parametrize("seed", schedules.SEEDS)
+def test_batched_engine_bit_identical_under_every_schedule(
+        seed, ivf_index, convs, oracle):
+    """B client threads drive B conversations through the overlapped
+    continuous-batching engine under one seeded schedule; every turn
+    must be bit-identical to the sequential oracle and the schedule
+    must expose no data race / lockset break / lock-order inversion."""
+
+    def scenario(rt):
+        eng = BatchedConversationalSearchEngine(
+            _cfg(), ivf_index=ivf_index, n_slots=8, max_batch=B,
+            max_wait_s=1e-4)
+        results = {f"c{b}": [] for b in range(B)}
+
+        def client(b):
+            cid = f"c{b}"
+            for t in range(T):
+                v, i = eng.query(cid, convs[b, t])
+                results[cid].append((np.asarray(v), np.asarray(i)))
+
+        schedules.run_threads(
+            [lambda b=b: client(b) for b in range(B)],
+            names=[f"client-{b}" for b in range(B)])
+        eng.close()
+        return results
+
+    results, _, rt = schedules.replay(seed, scenario, watch_classes=WATCH)
+    assert not rt.reports
+    for cid, want in oracle.items():
+        got = results[cid]
+        assert len(got) == len(want)
+        for t, ((wv, wi), (gv, gi)) in enumerate(zip(want, got)):
+            np.testing.assert_array_equal(wi, gi, err_msg=f"{cid} turn {t}")
+            np.testing.assert_array_equal(wv, gv, err_msg=f"{cid} turn {t}")
+
+
+# ---------------------------------------------------------------------------
+# scenario B — delete racing an in-flight wave, all seeds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", schedules.SEEDS)
+def test_delete_never_serves_tombstone_under_any_schedule(
+        seed, ivf_index, small_corpus):
+    """A ``delete_documents`` racing in-flight waves must never serve
+    the tombstoned doc afterwards — from the backend *or* from a stale
+    result-cache entry.  Turns whose submit started after the delete
+    returned assert the doc is gone; earlier turns may legally still
+    see it (they raced the delete)."""
+    doc_vecs = jnp.asarray(small_corpus.doc_vecs)
+
+    def scenario(rt):
+        eng = BatchedConversationalSearchEngine(
+            _cfg(segment_cap=64), ivf_index=ivf_index,
+            doc_vecs=doc_vecs, n_slots=8, max_batch=4, max_wait_s=1e-4)
+        # aim every query at one known-retrievable doc
+        _, i = eng.query("probe", jnp.asarray(
+            small_corpus.conversations[0, 0]))
+        target = int(np.asarray(i)[0])
+        q = doc_vecs[target]
+        deleted = threading.Event()
+
+        def client(name):
+            for _ in range(4):
+                pre = deleted.is_set()
+                _, ids = eng.query(name, q)
+                if pre:
+                    assert target not in np.asarray(ids).tolist(), \
+                        f"{name} served tombstoned doc {target}"
+
+        def mutator():
+            eng.delete_documents([target])
+            deleted.set()
+
+        schedules.run_threads(
+            [lambda: client("cA"), lambda: client("cB"), mutator],
+            names=["client-A", "client-B", "mutator"])
+        eng.close()
+        return target
+
+    _, _, rt = schedules.replay(seed, scenario, watch_classes=WATCH)
+    assert not rt.reports
+
+
+# ---------------------------------------------------------------------------
+# scenario C — router mutation (add/delete/compact) racing queries
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", schedules.SEEDS[:4])
+def test_router_mutation_racing_queries_is_clean(
+        seed, ivf_index, small_corpus):
+    """add/delete/compact broadcast over a 2-replica router while
+    pinned clients keep querying: no violation, every turn serves k
+    results, and the replicas stay on one corpus epoch."""
+    doc_vecs = jnp.asarray(small_corpus.doc_vecs)
+    d = doc_vecs.shape[1]
+    rng = np.random.default_rng(seed)
+    new_rows = rng.standard_normal((3, d)).astype(np.float32)
+    new_rows /= np.linalg.norm(new_rows, axis=1, keepdims=True)
+
+    def scenario(rt):
+        router = ReplicatedSearchEngine(
+            _cfg(segment_cap=64), replicas=2, ivf_index=ivf_index,
+            doc_vecs=doc_vecs, n_slots=8, max_batch=4, max_wait_s=1e-4)
+
+        def client(b):
+            cid = f"c{b}"
+            for t in range(T):
+                _, ids = router.query(
+                    cid, jnp.asarray(small_corpus.conversations[b, t]))
+                assert np.asarray(ids).shape == (K,)
+
+        def mutator():
+            ids = router.add_documents(new_rows)
+            router.delete_documents([int(ids[0])])
+            router.compact()
+
+        schedules.run_threads(
+            [lambda b=b: client(b) for b in range(3)] + [mutator],
+            names=[f"client-{b}" for b in range(3)] + ["mutator"])
+        epochs = [e.corpus_epoch for e in router.engines]
+        router.close()
+        return epochs
+
+    epochs, _, rt = schedules.replay(seed, scenario, watch_classes=WATCH)
+    assert not rt.reports
+    assert len(set(epochs)) == 1 and epochs[0] == 3

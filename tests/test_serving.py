@@ -453,7 +453,7 @@ def test_hedged_executor_close_shuts_the_pool_down():
     ex.close()
     ex.close()                         # idempotent
     assert ex._pool._shutdown
-    with pytest.raises(RuntimeError):
+    with pytest.raises(RuntimeError, match="HedgedExecutor is closed"):
         ex.call(2)
     with HedgedExecutor([lambda x: x * 2]) as ex2:
         assert ex2.call(3) == 6

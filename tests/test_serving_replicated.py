@@ -255,6 +255,29 @@ def test_router_close_is_idempotent_and_stops_pumps(small_corpus,
     assert threading.active_count() < 50
 
 
+def test_router_use_after_close_raises(small_corpus, ivf_index):
+    """Every serving/mutation entry point fails loudly after close()
+    instead of hanging on dead pumps or mutating torn-down replicas."""
+    wl = small_corpus
+    eng = ReplicatedSearchEngine(
+        _cfg(segment_cap=8), replicas=2, ivf_index=ivf_index,
+        doc_vecs=jnp.asarray(wl.doc_vecs), n_slots=8, max_batch=4,
+        max_wait_s=1e-4)
+    q = jnp.asarray(wl.conversations[0, 0])
+    eng.query("c0", q)
+    eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit("c0", q)
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.query("c0", q)
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.add_documents(np.asarray(wl.doc_vecs[:2]))
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.delete_documents([0])
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.compact()
+
+
 def test_router_replicas_must_be_positive(ivf_index):
     with pytest.raises(ValueError, match="replicas"):
         ReplicatedSearchEngine(_cfg(), replicas=0, ivf_index=ivf_index)
