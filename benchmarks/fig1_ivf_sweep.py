@@ -4,9 +4,16 @@ Sweeps np over powers of two for IVF, TopLoc_IVF, TopLoc_IVF+ and
 TopLoc_IVFPQ on both conversation sets — NDCG@10 vs per-turn time and
 vs distance computations (the paper varies np exactly this way; the PQ
 row shows how much of the frontier survives 4·d/m-compressed lists).
+
+``--smoke`` shrinks the corpus and asserts the paper's frontier claim:
+TopLoc_IVF does strictly less distance work than plain IVF at the same
+nprobe while holding NDCG@10 within 0.9x.
+
+  PYTHONPATH=src:. python benchmarks/fig1_ivf_sweep.py --smoke
 """
 from __future__ import annotations
 
+import sys
 from typing import Dict, List
 
 import numpy as np
@@ -70,11 +77,35 @@ def sweep(kind: str, csv: bool = True) -> List[Dict]:
     return rows
 
 
-def main():
+def _assert_smoke_floors(rows: List[Dict]) -> None:
+    by = {(r["method"], r["nprobe"]): r for r in rows}
+    for npb in NPROBES:
+        plain, tl = by[("IVF", npb)], by[("TopLoc_IVF", npb)]
+        assert tl["work"] < plain["work"], (
+            f"np={npb}: TopLoc_IVF work {tl['work']:.0f} not below "
+            f"IVF {plain['work']:.0f}")
+        assert tl["ndcg10"] >= 0.9 * plain["ndcg10"], (
+            f"np={npb}: TopLoc_IVF ndcg@10 {tl['ndcg10']:.3f} < "
+            f"0.9 x IVF {plain['ndcg10']:.3f}")
+    print("SMOKE OK: TopLoc_IVF under IVF work at every nprobe with "
+          "ndcg@10 >= 0.9x")
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    if smoke:
+        global NPROBES
+        C.N_DOCS, C.PARTITIONS = 4000, 128
+        C.CONVS, C.TURNS = 6, 6
+        NPROBES = (2, 4)        # keep h = 16*np < p so pruning is live
     print("fig,dataset,method,nprobe,ndcg@10,ms_per_turn,work_dists,"
           "code_dists")
-    for kind in ("cast19", "cast20"):
-        sweep(kind)
+    rows = []
+    for kind in (("cast19",) if smoke else ("cast19", "cast20")):
+        rows += sweep(kind)
+    if smoke:
+        _assert_smoke_floors(rows)
 
 
 if __name__ == "__main__":

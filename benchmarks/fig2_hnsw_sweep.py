@@ -1,7 +1,15 @@
 """Figure 2 reproduction: effectiveness/efficiency frontier vs ef_search
-for HNSW vs TopLoc_HNSW on both conversation sets."""
+for HNSW vs TopLoc_HNSW on both conversation sets.
+
+``--smoke`` shrinks the corpus and asserts the figure's frontier claim:
+TopLoc_HNSW does no more graph distance work than plain HNSW at the
+same ef_search while holding NDCG@10 within 0.9x.
+
+  PYTHONPATH=src:. python benchmarks/fig2_hnsw_sweep.py --smoke
+"""
 from __future__ import annotations
 
+import sys
 from typing import Dict, List
 
 import numpy as np
@@ -54,10 +62,34 @@ def sweep(kind: str, csv: bool = True) -> List[Dict]:
     return rows
 
 
-def main():
+def _assert_smoke_floors(rows: List[Dict]) -> None:
+    by = {(r["method"], r["ef"]): r for r in rows}
+    for ef in EFS:
+        plain, tl = by[("HNSW", ef)], by[("TopLoc_HNSW", ef)]
+        assert tl["work"] <= plain["work"], (
+            f"ef={ef}: TopLoc_HNSW graph work {tl['work']:.0f} above "
+            f"HNSW {plain['work']:.0f}")
+        assert tl["ndcg10"] >= 0.9 * plain["ndcg10"], (
+            f"ef={ef}: TopLoc_HNSW ndcg@10 {tl['ndcg10']:.3f} < "
+            f"0.9 x HNSW {plain['ndcg10']:.3f}")
+    print("SMOKE OK: TopLoc_HNSW graph work <= HNSW at every ef with "
+          "ndcg@10 >= 0.9x")
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    if smoke:
+        global EFS
+        C.N_DOCS, C.PARTITIONS = 4000, 128
+        C.CONVS, C.TURNS = 6, 6
+        EFS = (8, 16)
     print("fig,dataset,method,ef_search,ndcg@10,ms_per_turn,work_dists")
-    for kind in ("cast19", "cast20"):
-        sweep(kind)
+    rows = []
+    for kind in (("cast19",) if smoke else ("cast19", "cast20")):
+        rows += sweep(kind)
+    if smoke:
+        _assert_smoke_floors(rows)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,9 @@ strategy did not change under batching.
 
   PYTHONPATH=src python benchmarks/fig3_batched_serving.py
   BENCH_DOCS=20000 BENCH_CONVS=64 PYTHONPATH=src python benchmarks/fig3_batched_serving.py
+
+``--smoke`` shrinks the corpus and asserts the figure's claim: the
+largest micro-batch beats batch=1 throughput for every strategy.
 """
 import os
 import sys
@@ -29,6 +32,13 @@ import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+SMOKE = "--smoke" in sys.argv
+if SMOKE:
+    os.environ.setdefault("BENCH_DOCS", "3000")
+    os.environ.setdefault("BENCH_PARTITIONS", "128")
+    os.environ.setdefault("BENCH_CONVS", "16")
+    os.environ.setdefault("BENCH_TURNS", "4")
 
 from repro.core import hnsw as HN
 from repro.core import ivf as IV
@@ -118,6 +128,12 @@ def main():
     worst = min(speedups.values())
     print(f"\nworst-case batching speedup across strategies: {worst:.2f}x "
           f"({'OK: batch=32 beats batch=1' if worst > 1.0 else 'REGRESSION'})")
+    if SMOKE:
+        assert worst > 1.0, (
+            f"smoke: batch={BATCH_SIZES[-1]} did not beat batch=1 "
+            f"(worst speedup {worst:.2f}x)")
+        print(f"SMOKE OK: batch={BATCH_SIZES[-1]} beats batch=1 for all "
+              f"strategies (worst {worst:.2f}x)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,223 @@
+"""Fig 8 — fused retrieval megakernel: one dispatch vs the 3-stage turn.
+
+What is measured, honestly:
+
+  * **Wall clock** (CPU host): the fused turn runs as ONE jitted
+    program; the staged baseline runs the same arithmetic as separate
+    jitted programs with a device sync at every stage boundary —
+    centroid top-nprobe, posting-list scan, (PQ) exact re-rank — i.e.
+    the dispatch structure the classic path has as three Pallas kernel
+    launches on real hardware.  The delta isolates exactly what fusion
+    removes: launches and stage-boundary round trips.  Measured at
+    batch 1 (dispatch-bound) and batch 32 (compute starts to amortise).
+  * **Roofline model** (``kernels.autotune``): predicted single- vs
+    3-dispatch time on the TPU device model for the same shapes, and a
+    per-shape tile sweep — the autotuned config's predicted time must
+    beat the static default on at least one shape (records land in
+    ``artifacts/autotune/``; ``roofline_report.py --autotune`` is the
+    judge).
+  * **Recall floor**: the bf16/int8 fused paths (quantised stage-1/2
+    scoring, float32 in-kernel re-rank) must hold recall@10 >= 0.95x
+    the float path on the same probe set.
+
+``--smoke`` shrinks the corpus and asserts all three gates:
+
+  PYTHONPATH=src:. python benchmarks/fig8_fused.py --smoke
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import toploc
+from repro.core.backend import IVFBackend, IVFPQBackend
+from repro.kernels import autotune as AT
+from repro.kernels import ops
+
+SMOKE = "--smoke" in sys.argv
+
+# corpus sizing (env-overridable like benchmarks/common.py).  The
+# smoke corpus is deliberately small: what fusion removes is dispatch
+# and stage-boundary sync, so the smoke gate needs that overhead to be
+# a meaningful share of the turn — on the CPU CI host a large corpus
+# drowns the (real, fixed-size) saving in scan compute and the gate
+# becomes a noise race.
+N_DOCS = int(os.environ.get("BENCH_DOCS", 1000 if SMOKE else 20000))
+PARTITIONS = int(os.environ.get("BENCH_PARTITIONS",
+                                256 if SMOKE else 2048))
+DIM = 64
+NPROBE = 8 if SMOKE else 16
+K, RERANK, PQ_M = 10, 32 if SMOKE else 64, 8
+BATCHES = (1, 32)
+REPS = 50 if SMOKE else 100
+
+
+def _paired_min_time(fn_a, fn_b, *args) -> dict:
+    """Min-of-REPS wall time for two callables, *interleaved* rep by
+    rep so slow host-load drift (CI co-tenancy, thermal throttling)
+    biases both sides equally instead of whichever loop ran second."""
+    fn_a(*args)                               # compile + warm
+    fn_b(*args)
+    best_a = best_b = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        best_b = min(best_b, time.perf_counter() - t0)
+    return {"fused_s": best_a, "staged_s": best_b}
+
+
+def build():
+    from repro.core import ivf, pq
+    from repro.data import synthetic as SY
+    wl = SY.make_workload(SY.WorkloadConfig(
+        n_docs=N_DOCS, d=DIM, n_topics=32, n_conversations=8,
+        turns_per_conversation=8, seed=8))
+    idx = ivf.build(jnp.asarray(wl.doc_vecs), p=PARTITIONS, iters=4,
+                    key=jax.random.PRNGKey(0))
+    pqi = pq.build_ivf_pq(idx, jnp.asarray(wl.doc_vecs), m=PQ_M,
+                          iters=4, key=jax.random.PRNGKey(0))
+    q = jnp.asarray(
+        wl.conversations.reshape(-1, DIM)[:max(BATCHES)])
+    return idx, pqi, q
+
+
+def time_ivf(idx, q) -> dict:
+    """Fused single-program turn vs staged dispatches, IVF f32.  The
+    staged scan is ``ivf._scan_lists`` — the exact formulation the
+    production 3-dispatch turn (``_ivf_family_plain_batch``) runs, and
+    the one the fused f32 path is bit-identical to."""
+    from repro.core import ivf as _iv
+    fused = jax.jit(lambda q_: ops.fused_turn(
+        q_, idx.centroids, idx.list_vecs, idx.list_ids,
+        nprobe=NPROBE, k=K, mode="ref"))
+
+    s1 = jax.jit(lambda q_: jax.lax.top_k(
+        toploc._bcast_centroid_scores(idx.centroids, q_), NPROBE)[1])
+    s2 = jax.jit(lambda q_, sel: _iv._scan_lists(idx, q_, sel, K)[:2])
+
+    def staged(q_):
+        sel = jax.block_until_ready(s1(q_))
+        return s2(q_, sel)
+
+    return _paired_min_time(fused, staged, q)
+
+
+def time_pq(pqi, q) -> dict:
+    """Fused vs the genuinely 3-dispatch PQ turn (centroid / ADC scan /
+    exact re-rank)."""
+    fused = jax.jit(lambda q_: ops.fused_turn_pq(
+        q_, pqi.centroids, toploc._adc_tables(pqi, q_), pqi.list_codes,
+        pqi.list_ids, pqi.doc_vecs, nprobe=NPROBE, k=K, rerank=RERANK,
+        mode="ref"))
+
+    r = max(K, min(RERANK, NPROBE * pqi.lmax))
+    s1 = jax.jit(lambda q_: jax.lax.top_k(
+        toploc._bcast_centroid_scores(pqi.centroids, q_), NPROBE)[1])
+    s2 = jax.jit(lambda q_, sel: ops.pq_adc_scan(
+        toploc._adc_tables(pqi, q_), pqi.list_codes, pqi.list_ids,
+        sel, r, mode="ref"))
+
+    @jax.jit
+    def s3(q_, cand_v, cand_ids):
+        safe = jnp.maximum(cand_ids, 0)
+        exact = jnp.sum(pqi.doc_vecs[safe] * q_[:, None, :], axis=-1)
+        exact = jnp.where(cand_ids >= 0, exact, -jnp.inf)
+        v, pos = jax.lax.top_k(exact, K)
+        return v, jnp.take_along_axis(cand_ids, pos, axis=-1)
+
+    def staged(q_):
+        sel = jax.block_until_ready(s1(q_))
+        cv, ci = jax.block_until_ready(s2(q_, sel))
+        return s3(q_, cv, ci)
+
+    return _paired_min_time(fused, staged, q)
+
+
+def recall_floor(idx, q) -> dict:
+    """recall@10 of the quantised fused paths vs the float fused path."""
+    base = ops.fused_turn(q, idx.centroids, idx.list_vecs, idx.list_ids,
+                          nprobe=NPROBE, k=K, mode="ref")[1]
+    out = {}
+    for prec in ("bf16", "int8"):
+        ids = ops.fused_turn(q, idx.centroids, idx.list_vecs,
+                             idx.list_ids, nprobe=NPROBE, k=K,
+                             precision=prec, mode="ref")[1]
+        bi, qi = np.asarray(base), np.asarray(ids)
+        out[prec] = float(np.mean(
+            [len(set(bi[r]) & set(qi[r])) / K for r in range(len(bi))]))
+    return out
+
+
+def tune_shapes(idx, pqi) -> list:
+    """Autotune the measured shapes; records land in artifacts/autotune
+    for the roofline-report judge."""
+    lmax = idx.lmax
+    shapes = [AT.TurnShape(b=b, p=PARTITIONS, lmax=lmax, d=DIM,
+                           nprobe=NPROBE, k=K) for b in BATCHES]
+    shapes += [AT.TurnShape(b=32, p=PARTITIONS, lmax=lmax, d=DIM,
+                            nprobe=NPROBE, k=K, precision="int8"),
+               AT.TurnShape(b=32, p=PARTITIONS, lmax=pqi.lmax, d=DIM,
+                            nprobe=NPROBE, k=K, family="pq", m=PQ_M,
+                            rerank=RERANK)]
+    rows = []
+    for sh in shapes:
+        cfg = AT.autotune(sh, refresh=True)
+        rows.append((sh, cfg, AT.predict_fused_s(sh, cfg),
+                     AT.predict_fused_s(sh, AT.DEFAULT),
+                     AT.predict_3dispatch_s(sh)))
+    return rows
+
+
+def main():
+    print(f"corpus: {N_DOCS} docs, d={DIM}, p={PARTITIONS}, "
+          f"nprobe={NPROBE}, k={K}")
+    idx, pqi, qall = build()
+
+    print("fig,family,batch,us_fused,us_staged,speedup")
+    wall = {}
+    for fam, timer, index in (("ivf", time_ivf, idx),
+                              ("pq", time_pq, pqi)):
+        for b in BATCHES:
+            t = timer(index, qall[:b])
+            sp = t["staged_s"] / t["fused_s"]
+            wall[(fam, b)] = sp
+            print(f"fig8,{fam},{b},{1e6 * t['fused_s']:.1f},"
+                  f"{1e6 * t['staged_s']:.1f},{sp:.2f}")
+
+    rec = recall_floor(idx, qall[:32])
+    for prec, r in rec.items():
+        print(f"fig8,recall@10,{prec},{r:.3f},floor,0.95")
+
+    rows = tune_shapes(idx, pqi)
+    wins = 0
+    print("fig8_autotune,shape,config,pred_tuned_s,pred_default_s,"
+          "pred_3disp_s")
+    for sh, cfg, tuned, default, d3 in rows:
+        wins += tuned < default
+        print(f"fig8_autotune,{sh.key()},bp{cfg.blk_p}/mt{cfg.max_tile}"
+              f"/ov{cfg.over},{tuned:.3e},{default:.3e},{d3:.3e}")
+
+    if SMOKE:
+        for (fam, b), sp in wall.items():
+            assert sp > 1.0, (
+                f"single-dispatch {fam} at batch {b} is not faster: "
+                f"speedup {sp:.2f}x")
+        for prec, r in rec.items():
+            assert r >= 0.95, f"{prec} recall@10 {r:.3f} < 0.95 floor"
+        assert wins >= 1, "autotuned tiling beat the default on 0 shapes"
+        print(f"SMOKE OK: fused beats staged at batches {BATCHES} "
+              f"(ivf+pq), recall floors hold "
+              f"(bf16={rec['bf16']:.3f}, int8={rec['int8']:.3f}), "
+              f"autotune beats default on {wins}/{len(rows)} shapes")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,13 @@
 Per (arch × shape × mesh): the three roofline terms in seconds, dominant
 bottleneck, per-device memory fit, MODEL_FLOPS ratio, and a one-line
 what-would-move-it note derived from the dominant term.
+
+``--autotune`` instead renders the fused-megakernel autotune cache
+(``kernels.autotune``, artifacts/autotune/) and judges every entry:
+tuned vs static-default predicted time, single-dispatch vs 3-dispatch,
+and the measured time where validation ran.  Exits non-zero if any
+cached "tuned" config predicts slower than the static default — the
+sweep must never regress the default.
 """
 from __future__ import annotations
 
@@ -59,10 +66,56 @@ def render(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def render_autotune(records: List[Dict]) -> str:
+    """Judge table for the fused-kernel autotune cache; raises
+    AssertionError if a cached winner predicts slower than the static
+    default (the sweep includes the default, so that is a model bug)."""
+    out = ["| shape | dev | config | vmem KiB | default s | tuned s | "
+           "3-disp s | tuned/def | measured s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        cfg = r["config"]
+        ratio = r["predicted_s"] / r["default_predicted_s"]
+        assert r["predicted_s"] <= r["default_predicted_s"] * (1 + 1e-9), (
+            f"{r['shape']}: tuned config predicts {r['predicted_s']:.3e}s"
+            f" > default {r['default_predicted_s']:.3e}s")
+        meas = ("-" if r.get("measured_s") is None
+                else f"{r['measured_s']:.3e}")
+        shape = r["shape"]
+        sk = (f"{shape['family']} b{shape['b']} p{shape['p']} "
+              f"L{shape['lmax']} d{shape['d']} np{shape['nprobe']} "
+              f"k{shape['k']} {shape['precision']}")
+        out.append(
+            f"| {sk} | {r['device']} "
+            f"| blk_p={cfg['blk_p']} max_tile={cfg['max_tile']} "
+            f"over={cfg['over']} | {r['vmem_bytes'] / 1024:.0f} "
+            f"| {r['default_predicted_s']:.3e} | {r['predicted_s']:.3e} "
+            f"| {r['dispatch3_predicted_s']:.3e} | {ratio:.3f} "
+            f"| {meas} |")
+    if len(records) > 1:
+        wins = sum(r["predicted_s"] < r["default_predicted_s"]
+                   for r in records)
+        out.append(f"\nautotune beats the static default on {wins}/"
+                   f"{len(records)} cached shapes")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--log", default="artifacts/dryrun.jsonl")
+    ap.add_argument("--autotune", action="store_true",
+                    help="render + judge the fused-kernel autotune cache")
+    ap.add_argument("--autotune-dir", default=None)
     args = ap.parse_args()
+    if args.autotune:
+        from repro.kernels import autotune as AT
+        recs = AT.load_records(args.autotune_dir)
+        if not recs:
+            print("autotune cache empty — run benchmarks/fig8_fused.py "
+                  "(or kernels.autotune.autotune) first")
+            return
+        print(render_autotune(recs))
+        return
     print(render(load(args.log)))
 
 

@@ -1,19 +1,62 @@
-"""Benchmark entry point: one harness per paper table/figure + kernel
-micro-benchmarks. Prints ``name,us_per_call,derived`` CSV per the
-repository contract, then the detailed per-table CSVs.
+"""Benchmark entry point: kernel micro-benchmarks plus one harness per
+paper table/figure, discovered automatically.
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
+Every ``benchmarks/fig*.py`` and ``benchmarks/table*.py`` module is
+picked up by glob — adding a new figure file makes it runnable here
+with no registration step.  Each module owns a ``main()`` and honours
+the uniform ``--smoke`` contract: shrink the workload, assert the
+figure's headline claim, print a ``SMOKE OK`` line and exit zero.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only table1
+  PYTHONPATH=src python -m benchmarks.run --only fig8
+  PYTHONPATH=src python -m benchmarks.run --smoke      # all smokes
+
+Modules run as subprocesses: several check ``--smoke`` at import time
+to shrink env-derived constants, so in-process imports cannot apply
+the contract uniformly.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import os
+import subprocess
 import sys
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(BENCH_DIR)
+
+
+def discover() -> list:
+    """All fig*/table* benchmark modules, sorted by name."""
+    paths = (glob.glob(os.path.join(BENCH_DIR, "fig*.py"))
+             + glob.glob(os.path.join(BENCH_DIR, "table*.py")))
+    return sorted(os.path.splitext(os.path.basename(p))[0] for p in paths)
+
+
+def _matches(stem: str, only: str) -> bool:
+    """--only accepts a full stem (fig1_ivf_sweep) or its short prefix
+    (fig1, table1)."""
+    return stem == only or stem.split("_")[0] == only
+
+
+def run_module(stem: str, smoke: bool) -> int:
+    """Run one benchmark module as a subprocess; returns its exit code."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT,
+                    env.get("PYTHONPATH")) if p)
+    cmd = [sys.executable, os.path.join(BENCH_DIR, stem + ".py")]
+    if smoke:
+        cmd.append("--smoke")
+    print(f"### {stem}{' --smoke' if smoke else ''}", flush=True)
+    return subprocess.call(cmd, env=env, cwd=REPO_ROOT)
 
 
 def bench_kernels() -> None:
@@ -37,6 +80,12 @@ def bench_kernels() -> None:
     t = time_fn(f, q, sel)
     print(f"kernel.ivf_scan_ref,{1e6*t:.1f},np=16 Lmax=256 b=16")
 
+    cf = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    f = jax.jit(lambda q: ops.fused_turn(q, cf, lv, li, nprobe=16, k=10,
+                                         mode="ref")[:2])
+    t = time_fn(f, q)
+    print(f"kernel.fused_turn_ref,{1e6*t:.1f},p=128 np=16 Lmax=256 b=16")
+
     qa = jnp.asarray(rng.normal(size=(2, 8, 1024, 64)).astype(np.float32))
     ka = jnp.asarray(rng.normal(size=(2, 2, 1024, 64)).astype(np.float32))
     f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True,
@@ -52,45 +101,48 @@ def bench_kernels() -> None:
 
 
 def main() -> None:
+    modules = discover()
+    shorts = sorted({m.split("_")[0] for m in modules})
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    choices=["all", "table1", "fig1", "fig2", "kernels"])
+                    help="all, kernels, or a module name/prefix: "
+                         + ", ".join(shorts))
+    ap.add_argument("--smoke", action="store_true",
+                    help="run each selected module with --smoke and "
+                         "fail if any smoke gate fails")
+    ap.add_argument("--list", action="store_true",
+                    help="list discovered benchmark modules and exit")
     args, _ = ap.parse_known_args()
 
+    if args.list:
+        for m in modules:
+            print(m)
+        return
+
+    selected = (modules if args.only in ("all", "kernels")
+                else [m for m in modules if _matches(m, args.only)])
+    if args.only not in ("all", "kernels") and not selected:
+        ap.error(f"--only {args.only!r} matched no module "
+                 f"(discovered: {', '.join(modules)})")
+
     t0 = time.time()
-    print("name,us_per_call,derived")
     if args.only in ("all", "kernels"):
+        print("name,us_per_call,derived")
         bench_kernels()
+    if args.only == "kernels":
+        return
 
-    if args.only in ("all", "table1"):
-        from benchmarks import table1
-        rows = table1.run(csv=False)
-        for r in rows:
-            sp = r["speedup_time"] or 1.0
-            spw = r["speedup_work"] or 1.0
-            print(f"table1.{r['dataset']}.{r['method']},"
-                  f"{1e3*r['ms_per_turn']:.1f},"
-                  f"mrr={r['mrr@10']:.3f};ndcg10={r['ndcg@10']:.3f};"
-                  f"speedup_t={sp};speedup_w={spw}")
+    failed = []
+    for stem in selected:
+        if run_module(stem, args.smoke) != 0:
+            failed.append(stem)
+            print(f"### {stem} FAILED", file=sys.stderr, flush=True)
 
-    if args.only in ("all", "fig1"):
-        from benchmarks import fig1_ivf_sweep
-        for kind in ("cast19", "cast20"):
-            for r in fig1_ivf_sweep.sweep(kind, csv=False):
-                print(f"fig1.{kind}.{r['method']}.np{r['nprobe']},"
-                      f"{1e3*r['ms_per_turn']:.1f},"
-                      f"ndcg10={r['ndcg10']:.3f};work={r['work']:.0f}")
-
-    if args.only in ("all", "fig2"):
-        from benchmarks import fig2_hnsw_sweep
-        for kind in ("cast19", "cast20"):
-            for r in fig2_hnsw_sweep.sweep(kind, csv=False):
-                print(f"fig2.{kind}.{r['method']}.ef{r['ef']},"
-                      f"{1e3*r['ms_per_turn']:.1f},"
-                      f"ndcg10={r['ndcg10']:.3f};work={r['work']:.0f}")
-
-    print(f"# benchmarks completed in {time.time()-t0:.1f}s",
-          file=sys.stderr)
+    status = "ok" if not failed else f"FAILED: {', '.join(failed)}"
+    print(f"# {len(selected)} benchmark modules in {time.time()-t0:.1f}s "
+          f"({status})", file=sys.stderr)
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -32,15 +32,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.findings import Finding
+from repro.kernels import tiling as _tiling
 
 PASS_ID = "kernel-budget"
 
-VMEM_BUDGET_BYTES = 16 * 1024 * 1024      # per-core VMEM (TPU guide)
-LANE = 128
-
-
-def _sublane(itemsize: int) -> int:
-    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+# single source of truth shared with the ops-layer tile-split policy
+# (kernels/tiling.py): the checker asserts against the same constants
+# the wrappers split by, so the two can never disagree.
+VMEM_BUDGET_BYTES = _tiling.VMEM_BUDGET_BYTES
+LANE = _tiling.LANE
+_sublane = _tiling.sublane
 
 
 # ---------------------------------------------------------------------------
@@ -57,6 +58,12 @@ class PallasCallRecord:
     in_blocks: List[Tuple[Tuple[int, ...], Tuple[int, ...], Any]]
     out_blocks: List[Tuple[Tuple[int, ...], Tuple[int, ...], Any]]
     scratch: List[Tuple[Tuple[int, ...], Any]]
+    # operands pinned to the ANY memory space stay HBM-resident (the
+    # kernel DMAs slices into its *scratch* buffers itself, and those
+    # buffers are counted under ``scratch``) — they are recorded here
+    # for visibility but excluded from the VMEM footprint.
+    hbm_ops: List[Tuple[Tuple[int, ...], Any]] = dataclasses.field(
+        default_factory=list)
 
     def vmem_bytes(self) -> int:
         total = 0
@@ -71,7 +78,11 @@ def _block_bytes(shape: Sequence[int], dtype) -> int:
     n = 1
     for s in shape:
         n *= int(s)
-    return n * jnp.dtype(dtype).itemsize
+    try:
+        return n * jnp.dtype(dtype).itemsize
+    except TypeError:
+        # DMA/regular semaphores: 32-bit hardware registers, not VMEM
+        return 4 * n
 
 
 def _kernel_name(kernel) -> str:
@@ -83,6 +94,14 @@ def _kernel_name(kernel) -> str:
 
 def _spec_fields(spec) -> Tuple[Optional[Tuple[int, ...]], Any]:
     return getattr(spec, "block_shape", None), spec
+
+
+def _is_hbm_resident(spec) -> bool:
+    """True for operands pinned to the ANY memory space: Mosaic leaves
+    them in HBM and the kernel moves slices with explicit DMAs, so the
+    full array shape must not be charged to the VMEM budget."""
+    ms = getattr(spec, "memory_space", None)
+    return ms is not None and "ANY" in str(ms).upper()
 
 
 def _zeros_like_out(out_shape):
@@ -124,9 +143,14 @@ def record_pallas_calls(records: List[PallasCallRecord]):
             # scalar-prefetch operands live in SMEM: skip them
             arr_args = args[n_prefetch:]
             in_blocks = []
+            hbm_ops = []
             for spec, a in zip(in_specs, arr_args):
                 block, _ = _spec_fields(spec)
                 shape = tuple(getattr(a, "shape", ()))
+                if _is_hbm_resident(spec):
+                    hbm_ops.append((shape,
+                                    getattr(a, "dtype", jnp.float32)))
+                    continue
                 blk = tuple(shape[i] if (block is None
                                          or block[i] is None)
                             else int(block[i])
@@ -153,7 +177,7 @@ def record_pallas_calls(records: List[PallasCallRecord]):
             records.append(PallasCallRecord(
                 kernel_name=_kernel_name(kernel), grid=grid,
                 in_blocks=in_blocks, out_blocks=out_blocks,
-                scratch=scratch_info))
+                scratch=scratch_info, hbm_ops=hbm_ops))
             return _zeros_like_out(out_shape)
 
         return runner
@@ -222,6 +246,30 @@ def default_probes() -> List[Tuple[str, Callable[[], Any]]]:
                 t, ids, mode="interpret"),
             _f32(50000, 256), _i32(8, 16))
 
+    def fused(precision):
+        return lambda: jax.eval_shape(
+            lambda q, c, lv, li: ops.fused_turn(
+                q, c, lv, li, nprobe=8, k=32, precision=precision,
+                mode="interpret"),
+            _f32(8, 128), _f32(4096, 128), _f32(4096, 512, 128),
+            _i32(4096, 512))
+
+    def fused_pq():
+        return jax.eval_shape(
+            lambda q, c, t, cd, li, dv: ops.fused_turn_pq(
+                q, c, t, cd, li, dv, nprobe=8, k=32, rerank=64,
+                mode="interpret"),
+            _f32(8, 128), _f32(4096, 128), _f32(8, 16, 256),
+            jax.ShapeDtypeStruct((4096, 512, 16), jnp.uint8),
+            _i32(4096, 512), _f32(50000, 128))
+
+    def fused_scan():
+        return jax.eval_shape(
+            lambda q, lv, li, sel: ops.fused_scan(
+                q, lv, li, sel, 32, mode="interpret"),
+            _f32(8, 128), _f32(4096, 512, 128), _i32(4096, 512),
+            _i32(8, 8))
+
     return [
         ("ops.ivf_scan[d=128]", ivf(128)),
         ("ops.ivf_scan[d=1024]", ivf(1024)),
@@ -230,6 +278,10 @@ def default_probes() -> List[Tuple[str, Callable[[], Any]]]:
         ("ops.flash_attention", fa),
         ("ops.flash_decode", fd),
         ("ops.embedding_bag", eb),
+        ("ops.fused_turn[f32]", fused("f32")),
+        ("ops.fused_turn[int8]", fused("int8")),
+        ("ops.fused_turn_pq", fused_pq),
+        ("ops.fused_scan", fused_scan),
     ]
 
 

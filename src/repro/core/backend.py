@@ -362,6 +362,10 @@ class IVFBackend(RetrievalBackend):
     Eq. 1 refresh at ``|I0| < alpha·nprobe`` (TopLoc_IVF+).  ``scan``
     optionally replaces the posting-list scan (signature of
     ``ivf._scan_lists``; sharded: ``distributed.retrieval.ShardedIVFScan``).
+    ``fused`` (a ``toploc.FusedTurn``) routes the scan — and, on the
+    stateless plain path, the whole turn — through the single-dispatch
+    Pallas megakernel; ``scan`` wins if both are set (the sharded scan
+    carries its own fused plugin).
     """
 
     name: ClassVar[str] = "ivf"
@@ -371,9 +375,15 @@ class IVFBackend(RetrievalBackend):
     nprobe: int = 64
     alpha: float = -1.0
     scan: Any = None
+    fused: Any = None
 
     def _list_scan(self, index, q, sel, k):
-        v, i, real = (self.scan or _ivf._scan_lists)(index, q, sel, k)
+        if self.scan is not None:
+            v, i, real = self.scan(index, q, sel, k)
+        elif self.fused is not None:
+            v, i, real = self.fused.list_scan_ivf(index, q, sel, k)
+        else:
+            v, i, real = _ivf._scan_lists(index, q, sel, k)
         return v, i, real, jnp.zeros_like(real)
 
     def start(self, index, q0, *, k):
@@ -396,6 +406,21 @@ class IVFBackend(RetrievalBackend):
                                       list_scan=self._list_scan)
 
     def plain_batch(self, index, q, *, k):
+        if self.fused is not None and self.scan is None:
+            # whole turn in one kernel dispatch: centroid scoring, probe
+            # selection, list scan/merge (and re-rank) never leave VMEM
+            b = q.shape[0]
+            v, i, _sel, real = self.fused.turn_ivf(index, q,
+                                                   nprobe=self.nprobe, k=k)
+            stats = _tl.TurnStats(
+                centroid_dists=jnp.full((b,), index.p, jnp.int32),
+                list_dists=real,
+                graph_dists=jnp.zeros((b,), jnp.int32),
+                code_dists=jnp.zeros((b,), jnp.int32),
+                i0=jnp.full((b,), -1, jnp.int32),
+                refreshed=jnp.zeros((b,), bool),
+            )
+            return v, i, stats
         return _ivf_family_plain_batch(index, q, nprobe=self.nprobe, k=k,
                                        list_scan=self._list_scan)
 
@@ -433,9 +458,32 @@ class IVFPQBackend(IVFBackend):
     rerank: int = 64
 
     def _list_scan(self, index, q, sel, k):
-        v, i, code_d, rerank_d = (self.scan or _tl._scan_lists_pq)(
-            index, q, sel, k, self.rerank)
+        if self.scan is not None:
+            v, i, code_d, rerank_d = self.scan(index, q, sel, k, self.rerank)
+        elif self.fused is not None:
+            v, i, code_d, rerank_d = self.fused.list_scan_pq(
+                index, q, sel, k, self.rerank)
+        else:
+            v, i, code_d, rerank_d = _tl._scan_lists_pq(
+                index, q, sel, k, self.rerank)
         return v, i, rerank_d, code_d
+
+    def plain_batch(self, index, q, *, k):
+        if self.fused is not None and self.scan is None:
+            b = q.shape[0]
+            v, i, _sel, code_d, rerank_d = self.fused.turn_pq(
+                index, q, nprobe=self.nprobe, k=k, rerank=self.rerank)
+            stats = _tl.TurnStats(
+                centroid_dists=jnp.full((b,), index.p, jnp.int32),
+                list_dists=rerank_d,
+                graph_dists=jnp.zeros((b,), jnp.int32),
+                code_dists=code_d,
+                i0=jnp.full((b,), -1, jnp.int32),
+                refreshed=jnp.zeros((b,), bool),
+            )
+            return v, i, stats
+        return _ivf_family_plain_batch(index, q, nprobe=self.nprobe, k=k,
+                                       list_scan=self._list_scan)
 
     def corpus_vectors(self, index):
         return index.doc_vecs

@@ -147,6 +147,95 @@ def _scan_lists_pq(index: _pq.IVFPQIndex, q: jax.Array, sel: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# fused single-dispatch turn plugin (kernels.fused_turn)
+# ---------------------------------------------------------------------------
+
+
+import dataclasses as _dataclasses
+
+
+@_dataclasses.dataclass(frozen=True)
+class FusedTurn:
+    """Opt-in plugin routing IVF-family turns through the fused Pallas
+    megakernel (``kernels.fused_turn``): centroid scoring, probed-list
+    scan/merge and (for quantized precisions or PQ) the exact re-rank run
+    as ONE kernel dispatch instead of three.
+
+    Precision contract (see ``kernels.fused_turn`` module docstring):
+    ``precision="f32"`` is bit-identical to the 3-dispatch path — same
+    ids, same scores, same ``TurnStats`` counters; ``"bf16"``/``"int8"``
+    score stages 1–2 quantized but ALWAYS exact-re-rank the top
+    ``k·over`` candidates in float32 inside the kernel, so returned
+    scores are exact dots and recall@k is floored (fig8 pins ≥ 0.95×
+    the float path).
+
+    Frozen + hashable so it rides on the backend dataclass as a
+    jit-static field.  ``mode=None`` follows ``kernels.ops`` dispatch
+    (interpret on CPU, compiled on TPU); ``mode="ref"`` forces the pure
+    XLA oracle in ``kernels.ref``.
+    """
+
+    precision: str = "f32"
+    over: int = 2            # quantized candidate depth: r = k·over
+    mode: Optional[str] = None
+
+    # -- whole-turn entry points (stateless plain path) ---------------
+
+    def turn_ivf(self, index: _ivf.IVFIndex, q: jax.Array, *,
+                 nprobe: int, k: int):
+        """Full single-dispatch turn: returns (v, i, sel, list_dists)."""
+        v, i, sel = _kops.fused_turn(
+            q, index.centroids, index.list_vecs, index.list_ids,
+            nprobe=nprobe, k=k, over=self.over, precision=self.precision,
+            mode=self.mode)
+        real = jnp.sum(index.list_sizes[sel], axis=-1).astype(jnp.int32)
+        return v, i, sel, real
+
+    def turn_pq(self, index: _pq.IVFPQIndex, q: jax.Array, *,
+                nprobe: int, k: int, rerank: int):
+        """Full single-dispatch PQ turn: (v, i, sel, code_d, rerank_d)."""
+        tables = _adc_tables(index, q)
+        v, i, sel = _kops.fused_turn_pq(
+            q, index.centroids, tables, index.list_codes, index.list_ids,
+            index.doc_vecs, nprobe=nprobe, k=k, rerank=rerank,
+            precision=self.precision, mode=self.mode)
+        code_d = jnp.sum(index.list_sizes[sel], axis=-1).astype(jnp.int32)
+        # every valid ADC candidate outranks the -inf pads, so the
+        # re-ranked count is exactly min(r, candidates available)
+        r = max(k, min(rerank, nprobe * index.lmax))
+        rerank_d = jnp.minimum(r, code_d).astype(jnp.int32)
+        return v, i, sel, code_d, rerank_d
+
+    # -- list-scan entry points (cached/sessioned paths) --------------
+    #
+    # Stage 1 (centroid cache, Eq. 1 drift) stays in XLA on the
+    # sessioned paths — only the scan+merge(+re-rank) stages fuse.
+
+    def list_scan_ivf(self, index: _ivf.IVFIndex, q: jax.Array,
+                      sel: jax.Array, k: int):
+        """Drop-in for ``ivf._scan_lists``: (v, i, real_dists)."""
+        v, i, _pos = _kops.fused_scan(
+            q, index.list_vecs, index.list_ids, sel, k, over=self.over,
+            precision=self.precision, mode=self.mode)
+        real = jnp.sum(index.list_sizes[sel], axis=-1).astype(jnp.int32)
+        return v, i, real
+
+    def list_scan_pq(self, index: _pq.IVFPQIndex, q: jax.Array,
+                     sel: jax.Array, k: int, rerank: int):
+        """Drop-in for ``_scan_lists_pq``: (v, i, code_d, rerank_d)."""
+        tables = _adc_tables(index, q)
+        v, i, _pos = _kops.fused_scan_pq(
+            tables, q, index.list_codes, index.list_ids, sel,
+            index.doc_vecs, k, rerank=rerank, precision=self.precision,
+            fuse_rerank=True, mode=self.mode)
+        nprobe = sel.shape[1]
+        code_d = jnp.sum(index.list_sizes[sel], axis=-1).astype(jnp.int32)
+        r = max(k, min(rerank, nprobe * index.lmax))
+        rerank_d = jnp.minimum(r, code_d).astype(jnp.int32)
+        return v, i, code_d, rerank_d
+
+
+# ---------------------------------------------------------------------------
 # generic registry drivers — ONE jitted program per (backend, k) pair
 # ---------------------------------------------------------------------------
 

@@ -71,6 +71,7 @@ from repro.core import ivf as _ivf
 from repro.core import pq as _pq
 from repro.core.topk import distributed_topk_ordered
 from repro.distributed import sharding as SH
+from repro.kernels import ops as _kops
 
 
 # ---------------------------------------------------------------------------
@@ -233,14 +234,22 @@ class ShardedIVFScan:
     never merge), scans them with the exact single-device einsum shape,
     reduces to a local top-k, and the ordered k-wide merge produces the
     global top-k.  ``real`` work counters psum exactly (int32).
+
+    ``fused`` (a ``toploc.FusedTurn``) routes the local gather + scan +
+    top-k through the single-dispatch fused kernel; its flat scan
+    positions use the same selection-relative numbering as the dense
+    path, so the ordered merge — and with it f32 bit-identity to the
+    single-device scan — is preserved.
     """
     mesh: Mesh
     axis: str = "model"
+    fused: Optional[object] = None
 
     def __call__(self, index: _ivf.IVFIndex, queries: jax.Array,
                  sel: jax.Array, k: int
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         axis = self.axis
+        fused = self.fused
 
         def local(lv, li, ls, q, s):
             p_local = lv.shape[0]
@@ -248,14 +257,21 @@ class ShardedIVFScan:
             s_local = s - lo
             own = (s_local >= 0) & (s_local < p_local)       # (B, np)
             ss = jnp.clip(s_local, 0, p_local - 1)
-            lvs = lv[ss]                                      # (B,np,L,d)
-            lis = jnp.where(own[..., None], li[ss], -1)
-            scores = jnp.einsum("bd,bnld->bnl", q, lvs)
             b = q.shape[0]
-            flat_v = jnp.where(lis >= 0, scores, -jnp.inf).reshape(b, -1)
-            flat_i = lis.reshape(b, -1)
-            v, pos = jax.lax.top_k(flat_v, k)
-            ids = jnp.take_along_axis(flat_i, pos, axis=-1)
+            if fused is not None:
+                v, ids, pos = _kops.fused_scan(
+                    q, lv, li, ss, k, own=own.astype(jnp.int32),
+                    over=fused.over, precision=fused.precision,
+                    mode=fused.mode)
+            else:
+                lvs = lv[ss]                                  # (B,np,L,d)
+                lis = jnp.where(own[..., None], li[ss], -1)
+                scores = jnp.einsum("bd,bnld->bnl", q, lvs)
+                flat_v = jnp.where(lis >= 0, scores,
+                                   -jnp.inf).reshape(b, -1)
+                flat_i = lis.reshape(b, -1)
+                v, pos = jax.lax.top_k(flat_v, k)
+                ids = jnp.take_along_axis(flat_i, pos, axis=-1)
             top_v, top_i = distributed_topk_ordered(v, pos, ids, k, axis)
             real = jax.lax.psum(
                 jnp.sum(jnp.where(own, ls[ss], 0), axis=-1), axis)
@@ -280,15 +296,23 @@ class ShardedPQScan:
     identical to the single-device reference scan), local top-R merges
     ordered into the global ADC candidate list, and the exact re-rank is
     owner-computes + psum over the doc-row-sharded float corpus.
+
+    ``fused`` routes the local ADC scan + top-R through the fused kernel
+    (``fuse_rerank=False`` — the exact re-rank must stay in the
+    owner-computes psum, as candidate doc rows live on other shards);
+    flat positions share the dense path's numbering so the ordered
+    candidate merge is unchanged.
     """
     mesh: Mesh
     axis: str = "model"
+    fused: Optional[object] = None
 
     def __call__(self, index: _pq.IVFPQIndex, queries: jax.Array,
                  sel: jax.Array, k: int, rerank: int
                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
         from repro.core import toploc as _toploc
         axis = self.axis
+        fused = self.fused
         nprobe = sel.shape[1]
         r = max(k, min(rerank, nprobe * index.lmax))
         tables = _toploc._adc_tables(index, queries)          # replicated
@@ -300,14 +324,20 @@ class ShardedPQScan:
             s_local = s - lo
             own = (s_local >= 0) & (s_local < p_local)
             ss = jnp.clip(s_local, 0, p_local - 1)
-            codes = lc[ss].astype(jnp.int32)                  # (B,np,L,m)
-            ids = jnp.where(own[..., None], li[ss], -1)
             b = q.shape[0]
-            flat_c = codes.reshape(b, -1, codes.shape[-1])
-            flat_i = ids.reshape(b, -1)
-            scores = _pq.adc_scores_masked(tab, flat_c, flat_i)
-            cv, cpos = jax.lax.top_k(scores, r)
-            cids = jnp.take_along_axis(flat_i, cpos, axis=-1)
+            if fused is not None:
+                cv, cids, cpos = _kops.fused_scan_pq(
+                    tab, q, lc, li, ss, dv, k, rerank=rerank,
+                    own=own.astype(jnp.int32), precision=fused.precision,
+                    fuse_rerank=False, mode=fused.mode)
+            else:
+                codes = lc[ss].astype(jnp.int32)              # (B,np,L,m)
+                ids = jnp.where(own[..., None], li[ss], -1)
+                flat_c = codes.reshape(b, -1, codes.shape[-1])
+                flat_i = ids.reshape(b, -1)
+                scores = _pq.adc_scores_masked(tab, flat_c, flat_i)
+                cv, cpos = jax.lax.top_k(scores, r)
+                cids = jnp.take_along_axis(flat_i, cpos, axis=-1)
             cand_v, cand_ids = distributed_topk_ordered(cv, cpos, cids,
                                                         r, axis)
             # exact re-rank: owner computes the single-device multiply-
@@ -432,7 +462,12 @@ def shard_backend(mesh: Mesh, backend, index, *, axis: str = "model"):
     if entry is None:
         return backend, index
     shard_index, plugin_cls, field = entry
-    return (dataclasses.replace(backend, **{field: plugin_cls(mesh, axis)}),
+    plugin = plugin_cls(mesh, axis)
+    fused = getattr(backend, "fused", None)
+    if fused is not None and any(f.name == "fused"
+                                 for f in dataclasses.fields(plugin)):
+        plugin = dataclasses.replace(plugin, fused=fused)
+    return (dataclasses.replace(backend, **{field: plugin}),
             shard_index(mesh, index, axis=axis))
 
 

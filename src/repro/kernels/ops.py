@@ -23,42 +23,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels import tiling
 from repro.kernels import centroid_topk as _ck
 from repro.kernels import ivf_scan as _iv
 from repro.kernels import pq_adc as _pq
+from repro.kernels import fused_turn as _ft
 from repro.kernels import flash_attention as _fa
 from repro.kernels import embedding_bag as _eb
+
+# tile-split policy is shared with the kernel_budget analysis pass —
+# see kernels/tiling.py
+_next_pow2 = tiling.next_pow2
+_pad_axis = tiling.pad_axis
 
 
 def default_mode() -> str:
     plat = jax.default_backend()
     return "kernel" if plat == "tpu" else "ref"
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
-
-
-def _pow2_floor(n: int) -> int:
-    return max(_next_pow2(n + 1) // 2, 1)
-
-
-# per-stream VMEM slice for the dominant (blk_l, d) list tile: the
-# pipeline double-buffers it, and queries/ids/outputs/scratch share the
-# ~16 MiB core budget, so one buffer gets at most a quarter
-_VMEM_TILE_BYTES = 4 * 1024 * 1024
-
-
-def _pad_axis(x: jax.Array, axis: int, to: int, value) -> jax.Array:
-    n = x.shape[axis]
-    if n == to:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, to - n)
-    return jnp.pad(x, pads, constant_values=value)
 
 
 # ---------------------------------------------------------------------------
@@ -74,9 +55,7 @@ def centroid_topk(queries: jax.Array, centroids: jax.Array, k: int, *,
         return ref.centroid_topk(queries, centroids, k)
     p = centroids.shape[0]
     kp = _next_pow2(k)
-    blk = min(blk_p, _next_pow2(p))
-    blk = max(blk, kp)
-    p_pad = ((p + blk - 1) // blk) * blk
+    blk, p_pad = tiling.centroid_tile(p, kp, blk_p=blk_p)
     c = _pad_axis(centroids, 0, p_pad, 0.0)
     # guard: padded centroids must never win — push them to -inf via a
     # sentinel row of -inf scores (zero vectors tie at 0 for zero queries,
@@ -101,15 +80,7 @@ def ivf_scan(queries: jax.Array, list_vecs: jax.Array, list_ids: jax.Array,
         return ref.ivf_scan_batch(queries, list_vecs, list_ids, sel, k)
     p, lmax, d = list_vecs.shape
     kp = _next_pow2(k)
-    lpad = _next_pow2(lmax)
-    blk_l = min(lpad, max_tile)
-    # VMEM-aware cap: the (blk_l, d) f32 list tile is double-buffered
-    # by the pipeline, so a row cap of max_tile alone over-allocates at
-    # large d (d=1024 → 8 MiB tile → 16 MiB in flight).  Bound the tile
-    # by bytes, keeping it a power of two so it still divides lpad.
-    blk_l = min(blk_l, _pow2_floor(_VMEM_TILE_BYTES // (d * 4)))
-    blk_l = max(blk_l, kp)
-    lpad = ((lpad + blk_l - 1) // blk_l) * blk_l
+    blk_l, lpad = tiling.list_tile(lmax, d * 4, kp=kp, max_tile=max_tile)
     lv = _pad_axis(list_vecs, 1, lpad, 0.0)
     li = _pad_axis(list_ids, 1, lpad, -1)
     v, i = _iv.ivf_scan(queries, lv, li, sel, kp, blk_l=blk_l,
@@ -132,15 +103,191 @@ def pq_adc_scan(tables: jax.Array, list_codes: jax.Array,
         return ref.pq_adc_scan_batch(tables, list_codes, list_ids, sel, k)
     p, lmax, m = list_codes.shape
     kp = _next_pow2(k)
-    lpad = _next_pow2(lmax)
-    blk_l = min(lpad, max_tile)
-    blk_l = max(blk_l, kp)
-    lpad = ((lpad + blk_l - 1) // blk_l) * blk_l
+    # uint8 code rows: the byte cap never binds before the row cap, so
+    # this reduces to the historical max_tile policy (LUT sizing is the
+    # (1, m, codes) table block, resident per query row)
+    blk_l, lpad = tiling.list_tile(lmax, m, kp=kp, max_tile=max_tile)
     codes = _pad_axis(list_codes, 1, lpad, 0)
     li = _pad_axis(list_ids, 1, lpad, -1)
     v, i = _pq.pq_adc_scan(tables.astype(jnp.float32), codes, li, sel, kp,
                            blk_l=blk_l, interpret=(mode == "interpret"))
     return v[:, :k], i[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# fused_turn / fused_scan — single-dispatch TopLoc turn
+# ---------------------------------------------------------------------------
+
+
+def _fused_depth(k: int, cap: int, *, over: int = 0, rerank: int = 0) -> int:
+    """Exact candidate depth r: k·over (quantised IVF) or the PQ re-rank
+    depth, clamped to the scannable candidate count and floored at k —
+    the same clamp ``toploc._scan_lists_pq`` applies."""
+    want = k * over if over else rerank
+    return max(k, min(want, cap))
+
+
+def fused_turn(queries: jax.Array, centroids: jax.Array,
+               list_vecs: jax.Array, list_ids: jax.Array, *,
+               nprobe: int, k: int, over: int = 2,
+               precision: str = "f32", mode: Optional[str] = None,
+               blk_p: int = 512, max_tile: int = 2048
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole IVF turn in one dispatch: centroid top-nprobe + list scan
+    (+ float32 re-rank of the k·over survivors when quantised).
+
+    Returns (values (B, k), ids (B, k), sel (B, nprobe)).  The f32 path
+    is bit-identical to centroid_topk → ivf_scan; see the precision
+    contract in ``kernels/fused_turn.py``.
+    """
+    mode = mode or default_mode()
+    p, lmax, d = list_vecs.shape
+    r = k if precision == "f32" else _fused_depth(k, nprobe * lmax,
+                                                  over=over)
+    np_pad = _next_pow2(nprobe)
+    r_pad = _next_pow2(r)
+    blk, p_pad = tiling.centroid_tile(p, np_pad, blk_p=blk_p)
+    blk_l, lpad = tiling.list_tile(lmax, d * 4, kp=r_pad,
+                                   max_tile=max_tile)
+    c = _pad_axis(centroids, 0, p_pad, 0.0)
+    lv = _pad_axis(list_vecs, 1, lpad, 0.0)
+    li = _pad_axis(list_ids, 1, lpad, -1)
+    if mode == "ref":
+        return ref.fused_turn_ivf(queries, c, lv, li, p=p, lmax=lmax,
+                                  nprobe=nprobe, k=k, r=r,
+                                  precision=precision, blk_p=blk,
+                                  blk_l=blk_l)
+    v, i, s = _ft.fused_turn(queries, c, lv, li, nprobe=nprobe, k=k,
+                             r=r, precision=precision, blk_p=blk,
+                             blk_l=blk_l,
+                             interpret=(mode == "interpret"))
+    return v[:, :k], i[:, :k], s[:, :nprobe]
+
+
+def fused_turn_pq(queries: jax.Array, centroids: jax.Array,
+                  tables: jax.Array, list_codes: jax.Array,
+                  list_ids: jax.Array, corpus: jax.Array, *,
+                  nprobe: int, k: int, rerank: int,
+                  precision: str = "f32", mode: Optional[str] = None,
+                  blk_p: int = 512, max_tile: int = 4096
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole IVF-PQ turn in one dispatch: centroid top-nprobe + ADC scan
+    + float32 exact re-rank of the top ``rerank`` candidates in-kernel.
+    """
+    mode = mode or default_mode()
+    p, lmax, m = list_codes.shape
+    r = _fused_depth(k, nprobe * lmax, rerank=rerank)
+    np_pad = _next_pow2(nprobe)
+    r_pad = _next_pow2(r)
+    blk, p_pad = tiling.centroid_tile(p, np_pad, blk_p=blk_p)
+    blk_l, lpad = tiling.list_tile(lmax, m, kp=r_pad, max_tile=max_tile)
+    c = _pad_axis(centroids, 0, p_pad, 0.0)
+    codes = _pad_axis(list_codes, 1, lpad, 0)
+    li = _pad_axis(list_ids, 1, lpad, -1)
+    if mode == "ref":
+        return ref.fused_turn_pq(queries, c, tables, codes, li, corpus,
+                                 p=p, lmax=lmax, nprobe=nprobe, k=k,
+                                 r=r, precision=precision, blk_p=blk)
+    v, i, s = _ft.fused_turn_pq(queries, c, tables.astype(jnp.float32),
+                                codes, li, corpus, nprobe=nprobe, k=k,
+                                r=r, precision=precision, blk_p=blk,
+                                blk_l=blk_l,
+                                interpret=(mode == "interpret"))
+    return v[:, :k], i[:, :k], s[:, :nprobe]
+
+
+def _convert_pos(pp: jax.Array, lpad: int, lmax: int) -> jax.Array:
+    """Padded flat scan positions → reference (probe·lmax + off) numbering.
+
+    The map is monotone, so tie-break order is preserved; PAD_POS lanes
+    (value -inf) stay PAD_POS.
+    """
+    conv = (pp // lpad) * lmax + jax.lax.rem(pp, lpad)
+    return jnp.where(pp == _ft.PAD_POS, _ft.PAD_POS, conv)
+
+
+def fused_scan(queries: jax.Array, list_vecs: jax.Array,
+               list_ids: jax.Array, sel: jax.Array, k: int, *,
+               own: Optional[jax.Array] = None, over: int = 2,
+               precision: str = "f32", mode: Optional[str] = None,
+               max_tile: int = 2048
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused IVF list scan with a caller-supplied selection.
+
+    Returns (values (B, k), ids (B, k), pos (B, k)); pos is the flat
+    scan position (``distributed_topk_ordered`` tie-break key) for f32,
+    and the candidate rank after the quantised paths' in-kernel
+    re-rank (single-device use).  ``own`` masks lists this shard does
+    not own (sharded locals).
+    """
+    mode = mode or default_mode()
+    b = queries.shape[0]
+    p, lmax, d = list_vecs.shape
+    nprobe = sel.shape[1]
+    rerank = precision != "f32"
+    r = k if not rerank else _fused_depth(k, nprobe * lmax, over=over)
+    r_pad = _next_pow2(r)
+    blk_l, lpad = tiling.list_tile(lmax, d * 4, kp=r_pad,
+                                   max_tile=max_tile)
+    if own is None:
+        own = jnp.ones((b, nprobe), jnp.int32)
+    lv = _pad_axis(list_vecs, 1, lpad, 0.0)
+    li = _pad_axis(list_ids, 1, lpad, -1)
+    if mode == "ref":
+        return ref.fused_scan_ivf(queries, lv, li, sel, own, lmax=lmax,
+                                  k=k, r=r, precision=precision,
+                                  blk_l=blk_l, rerank=rerank)
+    v, i, pp = _ft.fused_scan(queries, lv, li, sel,
+                              own.astype(jnp.int32), k=k, r=r,
+                              precision=precision, blk_l=blk_l,
+                              rerank=rerank,
+                              interpret=(mode == "interpret"))
+    v, i, pp = v[:, :k], i[:, :k], pp[:, :k]
+    if not rerank:
+        pp = _convert_pos(pp, lpad, lmax)
+    return v, i, pp
+
+
+def fused_scan_pq(tables: jax.Array, queries: jax.Array,
+                  list_codes: jax.Array, list_ids: jax.Array,
+                  sel: jax.Array, corpus: jax.Array, k: int, *,
+                  rerank: int, own: Optional[jax.Array] = None,
+                  precision: str = "f32", fuse_rerank: bool = True,
+                  mode: Optional[str] = None, max_tile: int = 4096
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused PQ ADC scan with a caller-supplied selection.
+
+    With ``fuse_rerank`` (single-device turns) the ADC pass and the
+    float32 exact re-rank collapse into one dispatch → exact top-k.
+    Without (sharded owner-computes locals) returns the ADC top-r with
+    flat scan positions for the distributed merge.
+    """
+    mode = mode or default_mode()
+    b = tables.shape[0]
+    p, lmax, m = list_codes.shape
+    nprobe = sel.shape[1]
+    r = _fused_depth(k, nprobe * lmax, rerank=rerank)
+    r_pad = _next_pow2(r)
+    blk_l, lpad = tiling.list_tile(lmax, m, kp=r_pad, max_tile=max_tile)
+    if own is None:
+        own = jnp.ones((b, nprobe), jnp.int32)
+    codes = _pad_axis(list_codes, 1, lpad, 0)
+    li = _pad_axis(list_ids, 1, lpad, -1)
+    if mode == "ref":
+        return ref.fused_scan_pq(tables, queries, codes, li, sel, own,
+                                 corpus, lmax=lmax, k=k, r=r,
+                                 precision=precision,
+                                 rerank=fuse_rerank)
+    v, i, pp = _ft.fused_scan_pq(tables.astype(jnp.float32), queries,
+                                 codes, li, sel, own.astype(jnp.int32),
+                                 corpus, k=k, r=r, precision=precision,
+                                 blk_l=blk_l, rerank=fuse_rerank,
+                                 interpret=(mode == "interpret"))
+    w = k if fuse_rerank else r
+    v, i, pp = v[:, :w], i[:, :w], pp[:, :w]
+    if not fuse_rerank:
+        pp = _convert_pos(pp, lpad, lmax)
+    return v, i, pp
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_turn as _ft
+
 
 # ---------------------------------------------------------------------------
 # centroid_topk — fused (B,d)x(d,p) matmul + top-k   [TopLoc hot spot 1]
@@ -94,6 +96,217 @@ def pq_adc_scan_batch(tables: jax.Array, list_codes: jax.Array,
     sel (B, np)."""
     return jax.vmap(lambda t, s: pq_adc_scan(t, list_codes, list_ids, s, k)
                     )(tables, sel)
+
+
+# ---------------------------------------------------------------------------
+# fused_turn / fused_scan — single-dispatch TopLoc turn oracles
+# ---------------------------------------------------------------------------
+#
+# The f32 paths compose the exact 3-dispatch CPU formulations
+# (einsum → masked top_k → gather → multiply-reduce re-rank), so the
+# ops-wrapper "ref" mode is bit-identical to the unfused engines by
+# construction.  The bf16/int8 paths emulate the kernel's *per-tile*
+# quantisation by reshaping the padded operands into the same
+# (blk_p / blk_l) tiles and scoring them with the very helpers the
+# kernel runs (``fused_turn.score_tile`` / ``adc_score_tile``) —
+# integer dots are exact, so interpret-vs-ref stays deterministic for
+# int8 too.
+
+
+def _fused_stage1_scores(queries: jax.Array, cents_pad: jax.Array,
+                         p: int, precision: str, blk_p: int) -> jax.Array:
+    """Centroid scores (B, p) under the fused precision contract."""
+    if precision == "f32":
+        c = cents_pad[:p]
+        return jnp.einsum("bpd,bd->bp",
+                          jnp.broadcast_to(c, (queries.shape[0],) + c.shape),
+                          queries)
+    nc = cents_pad.shape[0] // blk_p
+    tiles = cents_pad.reshape(nc, blk_p, -1)
+    s = jnp.concatenate(
+        [_ft.score_tile(queries, tiles[t], precision) for t in range(nc)],
+        axis=1)
+    return s[:, :p]
+
+
+def _fused_stage2_scores(queries: jax.Array, lv_pad: jax.Array,
+                         sel: jax.Array, precision: str, blk_l: int,
+                         lmax: int) -> jax.Array:
+    """Probed-list scores (B, np, lmax) under the precision contract."""
+    if precision == "f32":
+        lv = lv_pad[:, :lmax][sel]
+        return jnp.einsum("bd,bnld->bnl", queries, lv)
+    b = queries.shape[0]
+    npb = sel.shape[1]
+    lpad, d = lv_pad.shape[1], lv_pad.shape[2]
+    nsub = lpad // blk_l
+    g = lv_pad[sel].reshape(b, npb * nsub, blk_l, d)
+
+    def one(qrow, tiles):
+        return jnp.concatenate(
+            [_ft.score_tile(qrow[None], tiles[t], precision)[0]
+             for t in range(npb * nsub)])
+
+    s = jax.vmap(one)(queries, g).reshape(b, npb, lpad)
+    return s[:, :, :lmax]
+
+
+def _fused_adc_candidates(tables: jax.Array, codes_pad: jax.Array,
+                          ids_pad: jax.Array, sel: jax.Array, r: int,
+                          precision: str, lmax: int
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """ADC top-r candidates under the precision contract (B, r)."""
+    if precision == "f32":
+        return pq_adc_scan_batch(tables, codes_pad[:, :lmax],
+                                 ids_pad[:, :lmax], sel, r)
+
+    def one(tbl, s):
+        codes = codes_pad[:, :lmax][s].astype(jnp.int32)  # (np, lmax, m)
+        ids = ids_pad[:, :lmax][s]
+        flat = codes.reshape(-1, codes.shape[-1])
+        if precision == "int8":
+            ti, st = _ft.quantize_sym(tbl, axes=(0, 1))
+            g = jnp.take_along_axis(ti.astype(jnp.int32), flat.T, axis=1)
+            sc = jnp.sum(g, axis=0).astype(jnp.float32) / st[0, 0]
+        else:
+            g = jnp.take_along_axis(tbl.astype(jnp.bfloat16), flat.T,
+                                    axis=1)
+            sc = jnp.sum(g.astype(jnp.float32), axis=0)
+        sc = jnp.where(ids.reshape(-1) >= 0, sc, -jnp.inf)
+        v, pos = jax.lax.top_k(sc, r)
+        return v, ids.reshape(-1)[pos].astype(jnp.int32)
+
+    return jax.vmap(one)(tables, sel)
+
+
+def fused_turn_ivf(queries: jax.Array, cents_pad: jax.Array,
+                   lv_pad: jax.Array, li_pad: jax.Array, *, p: int,
+                   lmax: int, nprobe: int, k: int, r: int,
+                   precision: str, blk_p: int, blk_l: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the single-dispatch IVF turn.
+
+    Operands are the kernel's padded tensors; returns unpadded
+    (values (B, k), ids (B, k), sel (B, nprobe)).
+    """
+    b = queries.shape[0]
+    cs = _fused_stage1_scores(queries, cents_pad, p, precision, blk_p)
+    _, sel = jax.lax.top_k(cs, nprobe)
+    sel = sel.astype(jnp.int32)
+    li = li_pad[:, :lmax][sel]
+    sc = _fused_stage2_scores(queries, lv_pad, sel, precision, blk_l, lmax)
+    flat_v = jnp.where(li >= 0, sc, -jnp.inf).reshape(b, -1)
+    flat_i = li.reshape(b, -1)
+    if precision == "f32":
+        v, pos = jax.lax.top_k(flat_v, k)
+        return v, jnp.take_along_axis(flat_i, pos, -1).astype(jnp.int32), sel
+    cv, pos = jax.lax.top_k(flat_v, r)
+    cid = jnp.take_along_axis(flat_i, pos, -1)
+    rows = lv_pad[:, :lmax][sel].reshape(b, -1, lv_pad.shape[-1])
+    rows = jnp.take_along_axis(rows, pos[..., None], axis=1)
+    exact = jnp.sum(rows.astype(jnp.float32) * queries[:, None, :], -1)
+    exact = jnp.where(cid >= 0, exact, -jnp.inf)
+    v, rpos = jax.lax.top_k(exact, k)
+    return v, jnp.take_along_axis(cid, rpos, -1).astype(jnp.int32), sel
+
+
+def fused_turn_pq(queries: jax.Array, cents_pad: jax.Array,
+                  tables: jax.Array, codes_pad: jax.Array,
+                  ids_pad: jax.Array, corpus: jax.Array, *, p: int,
+                  lmax: int, nprobe: int, k: int, r: int,
+                  precision: str, blk_p: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the single-dispatch IVF-PQ turn (ADC + exact re-rank)."""
+    cs = _fused_stage1_scores(queries, cents_pad, p, precision, blk_p)
+    _, sel = jax.lax.top_k(cs, nprobe)
+    sel = sel.astype(jnp.int32)
+    cand_v, cand_ids = _fused_adc_candidates(tables, codes_pad, ids_pad,
+                                             sel, r, precision, lmax)
+    safe = jnp.maximum(cand_ids, 0)
+    exact = jnp.sum(corpus[safe] * queries[:, None, :], axis=-1)
+    exact = jnp.where(cand_ids >= 0, exact, -jnp.inf)
+    top_v, pos = jax.lax.top_k(exact, k)
+    top_i = jnp.take_along_axis(cand_ids, pos, axis=-1)
+    return top_v, top_i.astype(jnp.int32), sel
+
+
+def fused_scan_ivf(queries: jax.Array, lv_pad: jax.Array,
+                   li_pad: jax.Array, sel: jax.Array, own: jax.Array, *,
+                   lmax: int, k: int, r: int, precision: str,
+                   blk_l: int, rerank: bool
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused IVF scan with prefetched selection.
+
+    Returns (values (B, k), ids (B, k), pos (B, k)) — pos is the
+    unpadded flat scan position for the no-re-rank path (tie-break key
+    for the distributed merge; undefined where values are -inf) and the
+    candidate rank after re-rank.
+    """
+    b = queries.shape[0]
+    li = li_pad[:, :lmax][sel]
+    li = jnp.where(own[..., None] > 0, li, -1)
+    sc = _fused_stage2_scores(queries, lv_pad, sel, precision, blk_l, lmax)
+    flat_v = jnp.where(li >= 0, sc, -jnp.inf).reshape(b, -1)
+    flat_i = li.reshape(b, -1)
+    if not rerank:
+        v, pos = jax.lax.top_k(flat_v, k)
+        return (v, jnp.take_along_axis(flat_i, pos, -1).astype(jnp.int32),
+                pos.astype(jnp.int32))
+    cv, pos = jax.lax.top_k(flat_v, r)
+    cid = jnp.take_along_axis(flat_i, pos, -1)
+    rows = lv_pad[:, :lmax][sel].reshape(b, -1, lv_pad.shape[-1])
+    rows = jnp.take_along_axis(rows, pos[..., None], axis=1)
+    exact = jnp.sum(rows.astype(jnp.float32) * queries[:, None, :], -1)
+    exact = jnp.where(cid >= 0, exact, -jnp.inf)
+    v, rpos = jax.lax.top_k(exact, k)
+    return (v, jnp.take_along_axis(cid, rpos, -1).astype(jnp.int32),
+            rpos.astype(jnp.int32))
+
+
+def fused_scan_pq(tables: jax.Array, queries: jax.Array,
+                  codes_pad: jax.Array, ids_pad: jax.Array,
+                  sel: jax.Array, own: jax.Array, corpus: jax.Array, *,
+                  lmax: int, k: int, r: int, precision: str,
+                  rerank: bool
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused PQ scan (+ optional exact re-rank).
+
+    Without re-rank returns the ADC top-r (values, ids, flat pos) for
+    the sharded owner-computes merge; with re-rank the exact top-k
+    (pos = candidate rank).
+    """
+    b = tables.shape[0]
+    li = ids_pad[:, :lmax][sel]
+    li = jnp.where(own[..., None] > 0, li, -1)
+    codes = codes_pad[:, :lmax][sel].astype(jnp.int32)
+    m = codes.shape[-1]
+
+    def one(tbl, c, ids):
+        flat = c.reshape(-1, m)
+        if precision == "int8":
+            ti, st = _ft.quantize_sym(tbl, axes=(0, 1))
+            g = jnp.take_along_axis(ti.astype(jnp.int32), flat.T, axis=1)
+            sc = jnp.sum(g, axis=0).astype(jnp.float32) / st[0, 0]
+        elif precision == "bf16":
+            g = jnp.take_along_axis(tbl.astype(jnp.bfloat16), flat.T,
+                                    axis=1)
+            sc = jnp.sum(g.astype(jnp.float32), axis=0)
+        else:
+            g = jnp.take_along_axis(tbl, flat.T, axis=1)
+            sc = jnp.sum(g, axis=0)
+        sc = jnp.where(ids.reshape(-1) >= 0, sc, -jnp.inf)
+        v, pos = jax.lax.top_k(sc, r)
+        return v, ids.reshape(-1)[pos].astype(jnp.int32), pos
+
+    cv, cid, cpos = jax.vmap(one)(tables, codes, li)
+    if not rerank:
+        return cv, cid, cpos.astype(jnp.int32)
+    safe = jnp.maximum(cid, 0)
+    exact = jnp.sum(corpus[safe] * queries[:, None, :], axis=-1)
+    exact = jnp.where(cid >= 0, exact, -jnp.inf)
+    v, rpos = jax.lax.top_k(exact, k)
+    return (v, jnp.take_along_axis(cid, rpos, -1).astype(jnp.int32),
+            rpos.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -74,6 +74,16 @@ class ServingConfig:
     h: int = 1024                 # cached centroids (TopLoc_IVF)
     alpha: float = 0.1            # refresh threshold (TopLoc_IVF+)
     rerank: int = 64              # exact re-rank depth (IVF-PQ)
+    # fused single-dispatch turn (core.toploc.FusedTurn over
+    # kernels.fused_turn): opt-in Pallas megakernel for the IVF family —
+    # centroid scoring, probe selection, list scan/merge and re-rank in
+    # ONE kernel dispatch.  ``precision`` picks the stage-1/2 scoring
+    # dtype: "f32" is bit-identical to the 3-dispatch path; "bf16"/
+    # "int8" score quantised but always exact-re-rank in float32
+    # in-kernel (recall@k floored, benchmarks/fig8_fused.py).  Ignored
+    # by backends that don't declare the knob (hnsw, exact).
+    fused: bool = False
+    precision: str = "f32"
     # HNSW
     ef_search: int = 64
     up: int = 2                   # first-turn ef upscaling
@@ -168,9 +178,12 @@ class _EngineBase(_EngineAccounting):
                ivf_pq_index, doc_vecs) -> None:
         self.cfg = config
         alpha = config.alpha if config.strategy == "toploc+" else -1.0
+        fused = (toploc.FusedTurn(precision=config.precision)
+                 if config.fused else None)
         self.backend = _backend.make(
             config.backend, h=config.h, nprobe=config.nprobe, alpha=alpha,
-            rerank=config.rerank, ef=config.ef_search, up=config.up)
+            rerank=config.rerank, ef=config.ef_search, up=config.up,
+            fused=fused)
         provided = {"ivf_index": ivf_index, "hnsw_index": hnsw_index,
                     "ivf_pq_index": ivf_pq_index, "doc_vecs": doc_vecs}
         self.index = provided.get(self.backend.index_kwarg)

@@ -18,6 +18,8 @@ Determinism scope: fixed seeds end-to-end (workload, k-means, PQ
 codebooks, HNSW build) on the CPU backend CI runs — the same platform
 the tier-1 suite targets.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 import jax
@@ -94,6 +96,20 @@ def test_golden_hnsw_counters(golden_setup):
     conv, _, _, hidx = golden_setup
     _, _, st = toploc.conversation(HNSW_BK, hidx, conv, k=K)
     _check(st, GOLD_HNSW)
+
+
+@pytest.mark.parametrize("name,bk,gold", [("ivf", IVF_BK, GOLD_IVF),
+                                          ("ivf_pq", PQ_BK, GOLD_IVF_PQ)])
+def test_golden_fused_counters_equal_classic(golden_setup, name, bk,
+                                             gold):
+    """The fused megakernel path reports the SAME pinned work counters
+    as the 3-dispatch turn it replaces — fusion changes dispatch
+    structure, never the cost accounting the paper's claims rest on."""
+    conv, fidx, pqi, _ = golden_setup
+    index = fidx if name == "ivf" else pqi
+    fbk = dataclasses.replace(bk, fused=toploc.FusedTurn())
+    _, _, st = toploc.conversation(fbk, index, conv, k=K)
+    _check(st, gold)
 
 
 def test_golden_pq_cost_identity(golden_setup):

@@ -197,3 +197,96 @@ def test_softmax_attention_rowstochastic(frac, seed):
     vmin, vmax = np.asarray(v).min(axis=2), np.asarray(v).max(axis=2)
     assert np.all(o <= vmax[:, :, None] + 1e-5)
     assert np.all(o >= vmin[:, :, None] - 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 9), st.integers(1, 12), st.integers(1, 4),
+       st.integers(1, 6), st.integers(1, 24),
+       st.integers(0, 2 ** 31 - 1))
+def test_fused_turn_matches_three_dispatch(p, lmax, b, nprobe, k, seed):
+    """The fused single-dispatch turn (ref oracle) is bit-identical —
+    values AND ids — to the classic 3-dispatch composition: centroid
+    top-nprobe, gather-scan, flat top-k.  Small integer-valued vectors
+    force abundant exact score ties, so id equality pins the tie-break
+    to the flat candidate order the staged path uses; ragged lists
+    (including empty ones) exercise the padding masks."""
+    nprobe = min(nprobe, p)
+    k = min(k, nprobe * lmax)
+    d = 8
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-2, 3, size=(b, d)).astype(np.float32))
+    cents = jnp.asarray(rng.integers(-2, 3, size=(p, d))
+                        .astype(np.float32))
+    lv = rng.integers(-2, 3, size=(p, lmax, d)).astype(np.float32)
+    li = np.full((p, lmax), -1, np.int32)
+    sizes = rng.integers(0, lmax + 1, size=p)
+    nid = 0
+    for pi in range(p):
+        for l in range(sizes[pi]):
+            li[pi, l] = nid
+            nid += 1
+        lv[pi, sizes[pi]:] = 0
+    lv, li = jnp.asarray(lv), jnp.asarray(li)
+
+    fv, fi, fsel = ops.fused_turn(q, cents, lv, li, nprobe=nprobe, k=k,
+                                  mode="ref")
+
+    # classic 3-dispatch: the exact production formulation
+    cs = toploc._bcast_centroid_scores(cents, q)
+    _, sel = jax.lax.top_k(cs, nprobe)
+    scores = jnp.einsum("bd,bnld->bnl", q, lv[sel])
+    scores = jnp.where(li[sel] >= 0, scores, -jnp.inf)
+    v3, pos = jax.lax.top_k(scores.reshape(b, -1), k)
+    i3 = jnp.take_along_axis(li[sel].reshape(b, -1), pos, axis=-1)
+    i3 = jnp.where(jnp.isfinite(v3), i3, -1)
+
+    np.testing.assert_array_equal(np.asarray(fsel), np.asarray(sel))
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(v3))
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(i3))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 10), st.integers(1, 3),
+       st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_fused_scan_pos_is_distributed_tiebreak(p, lmax, b, nprobe,
+                                                seed):
+    """``fused_scan``'s returned positions are the flat candidate
+    indices ``distributed_topk_ordered`` sorts by — so a lexicographic
+    (score desc, pos asc) merge of its candidates reproduces the dense
+    flat top-k exactly, even under duplicate scores.  This is the
+    invariant that makes the sharded fused path bit-identical to the
+    single-device turn."""
+    nprobe = min(nprobe, p)
+    k = min(4, nprobe * lmax)
+    d = 8
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-2, 3, size=(b, d)).astype(np.float32))
+    lv = rng.integers(-2, 3, size=(p, lmax, d)).astype(np.float32)
+    li = np.full((p, lmax), -1, np.int32)
+    sizes = rng.integers(0, lmax + 1, size=p)
+    nid = 0
+    for pi in range(p):
+        for l in range(sizes[pi]):
+            li[pi, l] = nid
+            nid += 1
+        lv[pi, sizes[pi]:] = 0
+    lv, li = jnp.asarray(lv), jnp.asarray(li)
+    sel = jnp.asarray(np.stack([rng.permutation(p)[:nprobe]
+                                for _ in range(b)]).astype(np.int32))
+
+    cv, ci, cpos = ops.fused_scan(q, lv, li, sel, k, mode="ref")
+
+    # dense oracle over the same probe set
+    scores = jnp.einsum("bd,bnld->bnl", q, lv[sel])
+    scores = jnp.where(li[sel] >= 0, scores, -jnp.inf)
+    dv, dpos = jax.lax.top_k(scores.reshape(b, -1), k)
+    di = jnp.take_along_axis(li[sel].reshape(b, -1), dpos, axis=-1)
+
+    # (score desc, pos asc) merge — distributed_topk_ordered's sort key
+    _, _, mi, mv = jax.lax.sort((-cv, cpos, ci, cv), dimension=-1,
+                                num_keys=2)
+    mv, mi = mv[:, :k], mi[:, :k]
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(dv))
+    fin = np.isfinite(np.asarray(dv))
+    np.testing.assert_array_equal(np.asarray(mi)[fin],
+                                  np.asarray(di)[fin])
